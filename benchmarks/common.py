@@ -1,0 +1,77 @@
+"""Shared benchmark setup: knowledge base, workloads, sim harness."""
+from __future__ import annotations
+
+import copy
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.apps.suite import SUITE, T_IN, T_OUT, build_knowledge_base
+from repro.apps.workload import make_workload
+from repro.core.pdgraph import PDGraph
+from repro.serving.simulator import ClusterSim, SimConfig
+
+_KB = None
+
+
+def kb(n_trials: int = 200):
+    global _KB
+    if _KB is None:
+        _KB = build_knowledge_base(n_trials=n_trials, seed=3)
+    return _KB
+
+
+def run_policy(instances, policy: str, *, prewarm="lru", seed=5,
+               slots=8, refine=True, K=0.5, use_gittins=True,
+               kv_capacity=16, lora_capacity=10, knowledge=None,
+               n_buckets=10, dnn_capacity=2):
+    cfg = SimConfig(policy=policy, seed=seed, prewarm_mode=prewarm,
+                    n_llm_slots=slots, refine=refine, K=K,
+                    kv_capacity=kv_capacity, lora_capacity=lora_capacity,
+                    dnn_capacity=dnn_capacity,
+                    mc_walkers=128, n_buckets=n_buckets)
+    return ClusterSim(knowledge or kb(), cfg).run(list(instances))
+
+
+def workload(n: int, window: float, seed=7, deadlines=False, apps=None):
+    return make_workload(n, window, seed=seed, with_deadlines=deadlines,
+                         t_in=T_IN, t_out=T_OUT, apps=apps)
+
+
+def clone_kb_with_loras(base: Dict[str, PDGraph], n_variants: int,
+                        app_names: Optional[List[str]] = None
+                        ) -> Dict[str, PDGraph]:
+    """Per-variant LoRA ids on every LLM unit (the Fig. 13b 200-adapter
+    setup, scaled): app 'X' -> 'X#k' using 'lora_k'."""
+    out: Dict[str, PDGraph] = {}
+    for name, g in base.items():
+        if app_names and name not in app_names:
+            out[name] = g
+            continue
+        for k in range(n_variants):
+            g2 = PDGraph.from_json(g.to_json())
+            g2.app_name = f"{name}#{k}"
+            for u in g2.units.values():
+                if u.backend.kind == "llm":
+                    u.backend = copy.replace(u.backend, lora=f"lora_{name}_{k}") \
+                        if hasattr(copy, "replace") else \
+                        type(u.backend)(u.backend.kind, u.backend.model,
+                                        f"lora_{name}_{k}", u.backend.prefix)
+            out[f"{name}#{k}"] = g2
+    return out
+
+
+class Csv:
+    """Collects `name,us_per_call,derived` rows for benchmarks.run."""
+
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append(f"{name},{us_per_call:.2f},{derived}")
+
+    def dump(self):
+        print("name,us_per_call,derived")
+        for r in self.rows:
+            print(r)

@@ -1,0 +1,22 @@
+"""Fig. 12: demand-dynamicity ablation — Hermes, -refine, -refine-Gittins,
+and Hermes-Oracle (true demands), normalized to Hermes."""
+from __future__ import annotations
+
+from benchmarks.common import Csv, run_policy, workload
+
+
+def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
+    n, win = (300, 600.0) if paper_scale else (200, 600.0)
+    insts = workload(n, win, seed=seed)
+    res = {
+        "hermes": run_policy(insts, "gittins", refine=True, prewarm="hermes"),
+        "-refine": run_policy(insts, "gittins", refine=False, prewarm="hermes"),
+        "-refine-gittins": run_policy(insts, "srpt_mean", refine=False,
+                                      prewarm="hermes"),
+        "oracle": run_policy(insts, "oracle", prewarm="hermes"),
+    }
+    base = res["hermes"].mean_act()
+    for name, r in res.items():
+        csv.add(f"fig12/act/{name}", 0.0,
+                f"mean={r.mean_act():.1f}s norm={r.mean_act()/base:.3f}")
+    return res

@@ -1,0 +1,70 @@
+"""Fig. 13: warm-content hit ratio under LRU / EPWQ / Hermes prewarming —
+(a) KV prefix caches across cache sizes, (b) LoRA adapters with a variant
+pool (the paper's 200-adapter setup, scaled)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv, clone_kb_with_loras, kb, run_policy, workload
+from repro.apps.suite import SUITE, T_IN, T_OUT
+from repro.apps.workload import make_workload
+
+
+def _kv_hit(res):
+    c = res.cache_stats["kv"]
+    return c["hits"] / max(c["hits"] + c["misses"], 1)
+
+
+def _lora_hit(res):
+    c = res.cache_stats["lora"]
+    return c["hits"] / max(c["hits"] + c["misses"], 1)
+
+
+def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
+    # ---- (a) KV prefix cache across capacities (paper: 8/16/32 GB) -------
+    n, win = (500, 900.0) if paper_scale else (200, 400.0)
+    insts = workload(n, win, seed=seed)
+    for cap, label in ((6, "8GB"), (12, "16GB"), (24, "32GB")):
+        accs = {}
+        for mode in ("lru", "epwq", "hermes"):
+            res = run_policy(insts, "gittins", prewarm=mode, kv_capacity=cap)
+            accs[mode] = res
+            csv.add(f"fig13a/kv_hit/{label}/{mode}", 0.0,
+                    f"hit={_kv_hit(res):.3f} mean_act={res.mean_act():.1f}s")
+        up_lru = _kv_hit(accs["hermes"]) / max(_kv_hit(accs["lru"]), 1e-9) - 1
+        up_ep = _kv_hit(accs["hermes"]) / max(_kv_hit(accs["epwq"]), 1e-9) - 1
+        csv.add(f"fig13a/kv_improvement/{label}", 0.0,
+                f"vs_lru=+{100*up_lru:.0f}% vs_epwq=+{100*up_ep:.0f}%")
+
+    # ---- (b) LoRA pool: per-variant adapters, capacity-limited pool ------
+    # churn regime (paper: 200 adapters vs max-cpu-loras 20): adapters get
+    # evicted between an app's units; Hermes re-warms them ahead of the next
+    # unit, LRU/EPWQ pay the reload at slot assignment
+    n_var = 8 if paper_scale else 5
+    lkb = clone_kb_with_loras(kb(), n_var,
+                              app_names=["KBQAV", "FEV", "CG", "CC", "EV"])
+    from repro.apps.spec import AppSpec
+    variant_apps = {}
+    for name in list(lkb):
+        base = name.split("#")[0]
+        if "#" in name and base in SUITE:
+            variant_apps[name] = SUITE[base]
+    # build a workload over the variants with uniform sampling
+    rng = np.random.default_rng(seed)
+    from repro.apps.spec import sample_trajectory
+    from repro.apps.workload import AppInstance, bursty_arrivals
+    names = sorted(variant_apps)
+    n2 = 400 if paper_scale else 160
+    times = bursty_arrivals(n2, win, rng)
+    insts2 = []
+    for i, t in enumerate(times):
+        nm = names[int(rng.integers(len(names)))]
+        insts2.append(AppInstance(app_id=f"lapp{i:05d}", app_name=nm,
+                                  tenant=f"tenant{i % 8}", arrival=float(t),
+                                  trajectory=sample_trajectory(variant_apps[nm],
+                                                               rng)))
+    for mode in ("lru", "epwq", "hermes"):
+        res = run_policy(insts2, "gittins", prewarm=mode, lora_capacity=10,
+                         knowledge=lkb)
+        csv.add(f"fig13b/lora_hit/{mode}", 0.0,
+                f"hit={_lora_hit(res):.3f} mean_act={res.mean_act():.1f}s")

@@ -1,0 +1,39 @@
+"""Fig. 14: prewarming aggressiveness knob K — per-app latency reduction vs
+resource wastage, CG (docker backend) and PE (DNN backends)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv, kb, run_policy
+from repro.apps.spec import sample_trajectory
+from repro.apps.suite import SUITE
+from repro.apps.workload import AppInstance, bursty_arrivals
+
+
+def _single_app_workload(app_name: str, n: int, win: float, seed: int):
+    rng = np.random.default_rng(seed)
+    times = bursty_arrivals(n, win, rng)
+    return [AppInstance(app_id=f"{app_name}{i:04d}", app_name=app_name,
+                        tenant="t0", arrival=float(t),
+                        trajectory=sample_trajectory(SUITE[app_name], rng))
+            for i, t in enumerate(times)]
+
+
+def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
+    n, win = (60, 600.0) if paper_scale else (40, 400.0)
+    for app in ("CG", "PE"):
+        # PE's tool models contend for one accelerator slot (the paper's
+        # HuggingGPT setup where tools swap in/out of GPU memory)
+        caps = dict(kv_capacity=4, lora_capacity=2)
+        if app == "PE":
+            caps["dnn_capacity"] = 1
+        insts = _single_app_workload(app, n, win, seed)
+        base = run_policy(insts, "gittins", prewarm="lru", **caps)
+        for K in (0.9, 0.7, 0.5, 0.3, 0.1):
+            res = run_policy(insts, "gittins", prewarm="hermes", K=K, **caps)
+            waste = sum(c["wasted_warm_s"] for c in res.cache_stats.values())
+            red = 100 * (1 - res.mean_act() / base.mean_act())
+            csv.add(f"fig14/{app}/K={K}", 0.0,
+                    f"latency_reduction={red:.1f}% wasted_warm_s={waste:.0f}")
+        csv.add(f"fig14/{app}/baseline_lru", 0.0,
+                f"mean_act={base.mean_act():.1f}s")

@@ -1,0 +1,54 @@
+"""Fig. 15: scheduling-policy runtime — (a) Gittins cost vs queue size
+(arrival rate), (b) vs bucket count; plus the end-to-end priorities() path."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Csv, kb, run_policy, workload
+from repro.core.gittins import gittins_rank_hist, to_histogram
+
+
+def _time_gittins(n_jobs: int, n_buckets: int, iters: int = 50) -> float:
+    rng = np.random.default_rng(0)
+    probs, edges, att = [], [], []
+    for j in range(n_jobs):
+        s = rng.lognormal(2.0, 0.8, 200)
+        p, e = to_histogram(s, n_buckets)
+        probs.append(p)
+        edges.append(e)
+        att.append(rng.uniform(0, 5))
+    import jax.numpy as jnp
+    P = jnp.asarray(np.asarray(probs), jnp.float32)
+    E = jnp.asarray(np.asarray(edges), jnp.float32)
+    A = jnp.asarray(np.asarray(att), jnp.float32)
+    gittins_rank_hist(P, E, A).block_until_ready()   # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        gittins_rank_hist(P, E, A).block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
+    # (a) queue-size sweep (stands in for arrival rate)
+    for n_jobs in (16, 64, 256, 1024):
+        dt = _time_gittins(n_jobs, 10)
+        csv.add(f"fig15a/gittins_runtime/jobs={n_jobs}", 1e6 * dt,
+                f"{1e3*dt:.3f} ms/refresh")
+    # (b) bucket-count sweep at a fixed queue
+    for nb in (5, 10, 20, 40, 80):
+        dt = _time_gittins(256, nb)
+        csv.add(f"fig15b/gittins_runtime/buckets={nb}", 1e6 * dt,
+                f"{1e3*dt:.3f} ms/refresh")
+    # (b') does more buckets help ACT? (paper: no)
+    insts = workload(120, 300.0, seed=seed)
+    for nb in (5, 10, 40):
+        res = run_policy(insts, "gittins", n_buckets=nb)
+        csv.add(f"fig15b/act_vs_buckets/nb={nb}", 0.0,
+                f"mean_act={res.mean_act():.1f}s")
+    # end-to-end scheduler priorities() cost inside a real run
+    res = run_policy(insts, "gittins")
+    per_call = res.policy_time_s / max(res.policy_calls, 1)
+    csv.add("fig15/priorities_end_to_end", 1e6 * per_call,
+            f"{1e3*per_call:.2f} ms/call over {res.policy_calls} calls")

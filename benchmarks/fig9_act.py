@@ -1,0 +1,47 @@
+"""Fig. 9/10: average + P95 ACT across arrival intensities, four schedulers.
+
+Paper setup: 300 apps over 30/15/10-minute windows (1x/2x/3x) on one engine.
+Default here is a 0.5-scaled run for wall-time; --paper restores full size.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Csv, kb, run_policy, workload
+
+POLICIES = {"vllm(fcfs_req)": "fcfs_req", "parrot(fcfs_app)": "fcfs_app",
+            "vtc": "vtc", "hermes(gittins)": "gittins"}
+
+
+def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
+    n = 300
+    windows = {"1x": 1800.0, "2x": 900.0, "3x": 600.0}
+    out = {}
+    for label, win in windows.items():
+        insts = workload(n, win, seed=seed)
+        for pname, pol in POLICIES.items():
+            t0 = time.perf_counter()
+            prewarm = "hermes" if pol == "gittins" else "lru"
+            res = run_policy(insts, pol, prewarm=prewarm)
+            wall = time.perf_counter() - t0
+            out[(label, pname)] = res
+            csv.add(f"fig9/act/{label}/{pname}", 1e6 * wall / max(len(res.acts), 1),
+                    f"mean_act={res.mean_act():.1f}s p95={res.p95_act():.1f}s")
+    # headline reductions at every intensity
+    for label in windows:
+        h = out[(label, "hermes(gittins)")]
+        for base in ("vllm(fcfs_req)", "parrot(fcfs_app)", "vtc"):
+            b = out[(label, base)]
+            red = 100 * (1 - h.mean_act() / b.mean_act())
+            red95 = 100 * (1 - h.p95_act() / b.p95_act())
+            csv.add(f"fig9/reduction/{label}/vs_{base}", 0.0,
+                    f"mean_-{red:.1f}% p95_-{red95:.1f}%")
+    # CDF checkpoints (Fig. 9b)
+    h = out[("2x", "hermes(gittins)")].act_values()
+    v = out[("2x", "vllm(fcfs_req)")].act_values()
+    for q in (50, 80, 95, 99):
+        csv.add(f"fig9/cdf_p{q}", 0.0,
+                f"hermes={np.percentile(h, q):.1f}s vllm={np.percentile(v, q):.1f}s")
+    return out

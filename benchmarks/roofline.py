@@ -1,0 +1,105 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/<mesh>/<arch>__<shape>[__overrides].json and emits the
+per-cell three-term roofline with the dominant bottleneck, the
+MODEL_FLOPS/HLO_FLOPS useful-compute ratio, and per-device memory footprint.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.config import SHAPES, applicable_shapes, get_config
+
+RESULTS = Path("results/dryrun")
+
+
+def load_cells(mesh: str = "single", overrides_tag: str = ""):
+    out = {}
+    d = RESULTS / mesh
+    if not d.exists():
+        return out
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        parts = p.stem.split("__")
+        tag = "__".join(parts[2:])
+        if tag != overrides_tag:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    if not r.get("ok"):
+        return (f"| {r['arch']} | {r['shape']} | FAILED | | | | | | |")
+    rl = r["roofline"]
+    dom = rl["dominant"]
+    frac = rl["roofline_fraction"]
+    mem = r.get("memory_analysis", {})
+    resident = (mem.get("argument_size_in_bytes", 0)) / 1e9
+    return (f"| {r['arch']} | {r['shape']} | {rl['compute_s']*1e3:.1f} | "
+            f"{rl['memory_s']*1e3:.1f} | {rl['collective_s']*1e3:.1f} | "
+            f"**{dom}** | {frac:.3f} | "
+            f"{r.get('useful_flops_ratio') or 0:.2f} | {resident:.2f} |")
+
+
+def table(mesh: str = "single", overrides_tag: str = "") -> str:
+    cells = load_cells(mesh, overrides_tag)
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | roofline frac | useful FLOP ratio | args GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    from repro.config import list_configs
+    for arch in list_configs():
+        cfg = get_config(arch)
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            if (arch, shape) in cells:
+                lines.append(fmt_row(cells[(arch, shape)]))
+            elif shape not in applicable_shapes(cfg):
+                lines.append(f"| {arch} | {shape} | — | — | — | "
+                             f"skip ({'quadratic attention' if shape == 'long_500k' else 'n/a'}) | | | |")
+    return "\n".join(lines)
+
+
+def summary(mesh: str = "single") -> Dict[str, float]:
+    cells = load_cells(mesh)
+    ok = [c for c in cells.values() if c.get("ok")]
+    doms: Dict[str, int] = {}
+    fracs = []
+    for c in ok:
+        doms[c["roofline"]["dominant"]] = doms.get(c["roofline"]["dominant"], 0) + 1
+        if c["roofline"]["roofline_fraction"]:
+            fracs.append(c["roofline"]["roofline_fraction"])
+    import numpy as np
+    return {"cells": len(ok), "dominant_counts": doms,
+            "mean_fraction": float(np.mean(fracs)) if fracs else 0.0,
+            "median_fraction": float(np.median(fracs)) if fracs else 0.0}
+
+
+def run(csv, paper_scale: bool = False, seed: int = 0):
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        n_ok = sum(1 for c in cells.values() if c.get("ok"))
+        csv.add(f"roofline/{mesh}/cells_ok", 0.0, f"{n_ok}/{len(cells)}")
+        if mesh == "single" and cells:
+            s = summary(mesh)
+            csv.add("roofline/summary", 0.0,
+                    f"mean_frac={s['mean_fraction']:.3f} "
+                    f"median_frac={s['median_fraction']:.3f} "
+                    f"dominant={s['dominant_counts']}")
+        for (arch, shape), c in sorted(cells.items()):
+            if not c.get("ok"):
+                csv.add(f"roofline/{mesh}/{arch}/{shape}", 0.0, "FAILED")
+                continue
+            rl = c["roofline"]
+            csv.add(f"roofline/{mesh}/{arch}/{shape}", 0.0,
+                    f"dom={rl['dominant']} frac={rl['roofline_fraction']:.3f} "
+                    f"lb={rl['step_s_lower_bound']*1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    print(table("single"))
+    print()
+    print(summary("single"))

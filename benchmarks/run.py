@@ -1,0 +1,46 @@
+"""Benchmark driver — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--paper] [--only fig9,fig13]
+
+Prints ``name,us_per_call,derived`` CSV.  Default scale finishes on a laptop
+CPU in minutes; ``--paper`` restores the paper's workload sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import Csv  # noqa: E402
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="paper-scale workloads (slower)")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig9,fig11,fig12,fig13,fig14,fig15,roofline")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    csv = Csv()
+    sections = []
+    from benchmarks import (fig9_act, fig11_ddl, fig12_ablation, fig13_cache,
+                            fig14_prewarm, fig15_overhead, roofline)
+    table = {"fig9": fig9_act, "fig11": fig11_ddl, "fig12": fig12_ablation,
+             "fig13": fig13_cache, "fig14": fig14_prewarm,
+             "fig15": fig15_overhead, "roofline": roofline}
+    for name, mod in table.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        mod.run(csv, paper_scale=args.paper, seed=args.seed)
+        csv.add(f"{name}/bench_wall", 1e6 * (time.perf_counter() - t0), "")
+    csv.dump()
+
+
+if __name__ == "__main__":
+    main()

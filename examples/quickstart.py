@@ -1,0 +1,59 @@
+"""Quickstart: the whole Hermes pipeline in one file.
+
+1. profile the application suite offline -> PDGraph knowledge base
+2. estimate a demand distribution with the Monte-Carlo walker
+3. rank applications with the Gittins policy
+4. plan a prewarm trigger for a cold backend
+5. run a small workload through the cluster simulator: Hermes vs vLLM-FCFS
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.apps.suite import SUITE, T_IN, T_OUT, build_knowledge_base
+from repro.apps.workload import make_workload
+from repro.core.gittins import gittins_rank_samples
+from repro.core.prewarm import prewarm_trigger_time
+from repro.serving.simulator import ClusterSim, SimConfig
+
+print("== 1. offline profiling (the paper does 1000 runs; 200 here) ==")
+kb = build_knowledge_base(n_trials=200, seed=3)
+g = kb["KBQAV"]
+print(f"KBQAV units: {sorted(g.units)}")
+print(f"'queries' out-length samples (first 8): "
+      f"{[int(x) for x in g.units['queries'].output_len[:8]]}")
+
+print("\n== 2. Monte-Carlo total-demand estimation ==")
+samples = g.mc_service_samples(jax.random.PRNGKey(0), T_IN, T_OUT,
+                               n_walkers=512)
+print(f"KBQAV total demand: mean={samples.mean():.1f}s "
+      f"p50={np.percentile(samples, 50):.1f}s p95={np.percentile(samples, 95):.1f}s")
+
+print("\n== 3. Gittins ranks (lower runs first) ==")
+for name in ("KBQAV", "CG", "DM"):
+    s = kb[name].mc_service_samples(jax.random.PRNGKey(1), T_IN, T_OUT)
+    print(f"  {name:6s} rank={gittins_rank_samples(s, 0.0):8.1f}s "
+          f"(mean demand {s.mean():7.1f}s)")
+
+print("\n== 4. prewarming the docker backend of CG's exec unit ==")
+dur = kb["CG"].units["generate"].service_samples(T_IN, T_OUT)
+t = prewarm_trigger_time(dur, unit_start=0.0, now=0.0, p_s=1.0,
+                         t_p=30.0, K=0.5)
+print(f"  generate-unit duration p50={np.percentile(dur, 50):.1f}s; "
+      f"docker warmup 30s; fire prewarm at t={t:.1f}s")
+
+print("\n== 5. simulate: Hermes vs vLLM-style FCFS ==")
+insts = make_workload(80, 240.0, seed=11, t_in=T_IN, t_out=T_OUT)
+for policy, prewarm in (("fcfs_req", "lru"), ("gittins", "hermes")):
+    cfg = SimConfig(policy=policy, prewarm_mode=prewarm, seed=5,
+                    n_llm_slots=8, mc_walkers=128)
+    res = ClusterSim(kb, cfg).run(list(insts))
+    label = "Hermes " if policy == "gittins" else "vLLM-FCFS"
+    print(f"  {label}: mean ACT {res.mean_act():7.1f}s   "
+          f"P95 {res.p95_act():7.1f}s")
+print("\ndone.")

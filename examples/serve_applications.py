@@ -1,0 +1,76 @@
+"""End-to-end driver: serve LLM applications on the REAL JAX engine.
+
+Small llama-family model, batched requests with prefix-KV reuse and LoRA
+adapters, Hermes scheduling + prewarming vs cold FCFS serving.
+
+  PYTHONPATH=src python examples/serve_applications.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import numpy as np
+
+from repro.apps.suite import SUITE, build_knowledge_base
+from repro.models.model import build_model
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.lora import make_random_adapter
+from repro.testing import tiny_config
+
+cfg = tiny_config("llama3-8b")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+
+# one shared system prompt (KV prefix) per application unit, as in the suite
+prefixes = {}
+for app in SUITE.values():
+    for unit in app.units.values():
+        if unit.backend.prefix:
+            prefixes[unit.backend.prefix] = rng.integers(
+                1, cfg.vocab_size, size=32).tolist()
+
+
+def make_requests(n=24):
+    reqs = []
+    keys = sorted(prefixes)
+    for i in range(n):
+        pid = keys[int(rng.integers(len(keys)))]
+        reqs.append(Request(
+            req_id=f"r{i}", prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+            max_new_tokens=8, prefix_id=pid,
+            lora_id="coder" if i % 4 == 0 else ""))
+    return reqs
+
+
+def serve(prewarm: bool):
+    eng = InferenceEngine(model, params, max_slots=4, max_seq=160,
+                          prefix_prompts=prefixes, kv_blocks=2048)
+    eng.lora.register(make_random_adapter("coder", params))
+    if prewarm:  # Hermes-style: warm what the PDGraph says is coming
+        for pid in sorted(prefixes)[:12]:
+            eng.prewarm_prefix(pid)
+        eng.prewarm_lora("coder")
+    t0 = time.monotonic()
+    for r in make_requests():
+        eng.submit(r)
+    done = eng.run()
+    wall = time.monotonic() - t0
+    hits = sum(1 for r in done if r.prefix_hit)
+    ttft = 1000 * np.mean([r.ttft for r in done])
+    return wall, hits, len(done), ttft
+
+
+print("cold serving (LRU, no prewarm):")
+wall, hits, n, ttft = serve(prewarm=False)
+print(f"  {n} requests in {wall:.2f}s, prefix hits {hits}/{n}, "
+      f"mean TTFT {ttft:.0f} ms")
+
+print("Hermes prewarmed serving:")
+wall2, hits2, n2, ttft2 = serve(prewarm=True)
+print(f"  {n2} requests in {wall2:.2f}s, prefix hits {hits2}/{n2}, "
+      f"mean TTFT {ttft2:.0f} ms")
+print(f"\nTTFT reduction from prewarming: {100*(1 - ttft2/ttft):.0f}%")

@@ -1,0 +1,40 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, collections
+import jax
+from repro.config import SHAPES, get_config
+from repro.distributed.sharding import ShardCtx, use_shard_ctx
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import cell_functions
+from repro.launch.dryrun import accounting_cfg, _DTYPE_BYTES, _SHAPE_RE
+from repro.models.model import build_model
+
+cfg = accounting_cfg(get_config("llama3-8b"), 1)
+mesh = make_production_mesh()
+ctx = ShardCtx(mesh, param_sharding=cfg.param_sharding)
+model = build_model(cfg)
+with use_shard_ctx(ctx), mesh:
+    fn, args, in_sh, out_sh = cell_functions(model, SHAPES["decode_32k"], ctx)
+    txt = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args).compile().as_text()
+
+def shape_bytes(tok):
+    m = _SHAPE_RE.findall(tok)
+    tot = 0
+    for d, s in m:
+        n = 1
+        for x in s.split(","):
+            if x: n *= int(x)
+        tot += n * _DTYPE_BYTES.get(d, 4)
+    return tot
+
+per_op = collections.Counter()
+for line in txt.splitlines():
+    s = line.strip()
+    m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*([a-z0-9\[\],{}]+)\s+([a-z0-9\-]+)\(", s)
+    if not m: continue
+    out_tok, op = m.groups()
+    b = shape_bytes(out_tok) + shape_bytes(s[s.index("("):])
+    per_op[op] += b
+for op, b in per_op.most_common(14):
+    print(f"{op:28s} {b/1e9:8.2f} GB")
+print("TOTAL", sum(per_op.values())/1e9)

@@ -1,0 +1,52 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, collections
+import jax
+from repro.config import SHAPES, get_config
+from repro.distributed.sharding import ShardCtx, use_shard_ctx
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import cell_functions
+from repro.launch.dryrun import accounting_cfg, _DTYPE_BYTES, _SHAPE_RE
+from repro.models.model import build_model
+
+def profile(k):
+    cfg = accounting_cfg(get_config("llama3-8b"), k)
+    mesh = make_production_mesh()
+    ctx = ShardCtx(mesh, param_sharding=cfg.param_sharding)
+    model = build_model(cfg)
+    with use_shard_ctx(ctx), mesh:
+        fn, args, in_sh, out_sh = cell_functions(model, SHAPES["decode_32k"], ctx)
+        c = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args).compile()
+        txt = c.as_text()
+        ca = c.cost_analysis()
+    per_op = collections.Counter()
+    biggest = []
+    for line in txt.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*([a-z0-9\[\],{}]+)\s+([a-z0-9\-]+)\(", s)
+        if not m: continue
+        out_tok, op = m.groups()
+        def sb(tok):
+            tot = 0
+            for d, sh in _SHAPE_RE.findall(tok):
+                n = 1
+                for x in sh.split(","):
+                    if x: n *= int(x)
+                tot += n * _DTYPE_BYTES.get(d, 4)
+            return tot
+        b = sb(out_tok) + sb(s[s.index("("):])
+        per_op[op] += b
+        biggest.append((b, op, s[:110]))
+    return per_op, float(ca.get("bytes accessed", 0)), biggest
+
+p1, b1, _ = profile(1)
+p2, b2, big2 = profile(2)
+print(f"cost_analysis bytes: 1p={b1/1e9:.2f}GB 2p={b2/1e9:.2f}GB delta/layer={(b2-b1)/1e9:.2f}GB")
+print("per-op parsed delta (GB):")
+for op in sorted(set(p1) | set(p2), key=lambda o: -(p2[o]-p1[o])):
+    d = (p2[op] - p1[op]) / 1e9
+    if abs(d) > 0.005:
+        print(f"  {op:26s} {d:8.3f}")
+print("biggest single ops in 2p:")
+for b, op, s in sorted(big2, reverse=True)[:8]:
+    print(f"  {b/1e9:6.2f}GB {op:20s} {s[:95]}")

@@ -1,0 +1,23 @@
+"""EP MoE correctness vs dense oracle on a multi-device host mesh."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.testing import tiny_config
+from repro.models import moe as X
+from repro.distributed.sharding import ShardCtx, use_shard_ctx
+
+cfg = tiny_config("qwen2-moe-a2.7b", capacity_factor=8.0)  # E=4 -> padded 16
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+params = X.moe_params(jax.random.PRNGKey(0), cfg, n=1, dtype=jnp.float32)
+p = jax.tree_util.tree_map(lambda a: a[0], params)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
+
+y_dense = X.moe_apply_dense(p, x, cfg)
+with use_shard_ctx(ShardCtx(mesh)), mesh:
+    y_ep = jax.jit(lambda p_, x_: X.moe_apply(p_, x_, cfg.replace(moe_impl="ep")))(p, x)
+err = float(jnp.max(jnp.abs(y_ep - y_dense)))
+print("EP vs dense max err:", err)
+assert err < 2e-4, err
+print("OK")

@@ -1,0 +1,27 @@
+"""Dev smoke: build KB, run a small workload under several policies."""
+import time
+
+import numpy as np
+
+from repro.apps.suite import SUITE, T_IN, T_OUT, build_knowledge_base
+from repro.apps.workload import make_workload
+from repro.serving.simulator import ClusterSim, SimConfig
+
+t0 = time.time()
+kb = build_knowledge_base(n_trials=200, seed=3)
+print(f"KB built in {time.time()-t0:.1f}s")
+
+insts = make_workload(60, 300.0, seed=11, t_in=T_IN, t_out=T_OUT)
+sizes = {}
+for i in insts:
+    sizes[i.app_name] = sizes.get(i.app_name, 0) + 1
+print("mix:", sizes)
+
+for policy in ("fcfs_req", "fcfs_app", "vtc", "srpt_mean", "gittins", "oracle"):
+    t0 = time.time()
+    cfg = SimConfig(policy=policy, seed=5,
+                    prewarm_mode="hermes" if policy == "gittins" else "lru")
+    res = ClusterSim(kb, cfg).run(list(insts))
+    print(f"{policy:10s} mean_act={res.mean_act():8.1f} p95={res.p95_act():8.1f} "
+          f"policy_ms/call={1000*res.policy_time_s/max(res.policy_calls,1):.2f} "
+          f"wall={time.time()-t0:.1f}s n={len(res.acts)}")

@@ -1,0 +1,2 @@
+from repro.apps.spec import AppSpec, UnitSpec, sample_trajectory  # noqa: F401
+from repro.apps.suite import SUITE, build_knowledge_base  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointing import (CheckpointManager, restore_checkpoint,  # noqa: F401
+                                            save_checkpoint)

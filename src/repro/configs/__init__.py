@@ -1,0 +1,41 @@
+"""Assigned architecture configs (one module per arch, per the brief)."""
+from repro.configs import (  # noqa: F401
+    qwen2_moe_a2_7b,
+    phi3_5_moe_42b_a6_6b,
+    jamba_1_5_large_398b,
+    internvl2_26b,
+    qwen2_7b,
+    qwen3_4b,
+    llama3_8b,
+    yi_9b,
+    whisper_large_v3,
+    mamba2_1_3b,
+)
+
+# Beyond-paper performance presets discovered in the EXPERIMENTS.md §Perf
+# hillclimb.  Defaults stay paper-faithful-baseline; apply these via
+#   get_config(arch, **PERF_PRESETS[arch])   or  dryrun --set k=v.
+PERF_PRESETS = {
+    "qwen2-moe-a2.7b": dict(moe_impl="ep", microbatch=16, remat=False),
+    "phi3.5-moe-42b-a6.6b": dict(moe_impl="ep", microbatch=16),
+    "jamba-1.5-large-398b": dict(moe_impl="ep", microbatch=16),
+    # dense family: micro-batching brings train peak memory under the 16 GB
+    # HBM budget at unchanged roofline terms (no-remat refuted on memory)
+    "llama3-8b": dict(microbatch=8),
+    "yi-9b": dict(microbatch=8),
+    "qwen2-7b": dict(microbatch=8),
+    "qwen3-4b": dict(microbatch=8),
+}
+
+ALL_ARCHS = (
+    "qwen2-moe-a2.7b",
+    "phi3.5-moe-42b-a6.6b",
+    "jamba-1.5-large-398b",
+    "internvl2-26b",
+    "qwen2-7b",
+    "qwen3-4b",
+    "llama3-8b",
+    "yi-9b",
+    "whisper-large-v3",
+    "mamba2-1.3b",
+)

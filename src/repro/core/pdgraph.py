@@ -1,0 +1,263 @@
+"""Probabilistic Demand Graph (PDGraph) — the paper's demand model (§3.2).
+
+Each *functional unit* records:
+  backend-spec        which backend the unit runs on (LLM model [+LoRA,
+                      +prefix-cache id], docker image, or DNN tool)
+  backend-consumption empirical sample lists — input/output token lengths and
+                      request parallelism for LLM units, wall duration for
+                      non-LLM units.  Raw values are kept (the paper found raw
+                      lists beat fitted skew-normal coefficients), FIFO-capped
+                      at 1000 entries.
+  next-unit           branch-taking probabilities from historical frequencies.
+
+Per-trial records are kept (not just per-unit marginals) so that online
+refinement can *join* upstream and downstream observations of the same trial
+and filter on the observed buckets (§3.2 "online estimation refinement").
+
+Total-demand estimation is a vectorized Monte-Carlo random walk over the
+graph, jit-compiled (`mc_service_samples`) — this is the scheduler hot path
+whose runtime the paper reports in Fig. 15.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+MAX_SAMPLES = 1000  # FIFO cap per the paper
+N_BUCKETS = 10
+
+
+@dataclass(frozen=True)
+class BackendSpec:
+    kind: str                 # "llm" | "docker" | "dnn"
+    model: str = ""           # LLM name / docker image / DNN tool name
+    lora: str = ""            # optional LoRA adapter id
+    prefix: str = ""          # shared-system-prompt id (KV prefix cache key)
+
+    def resource_keys(self) -> Tuple[str, ...]:
+        """Identities of the warmable backend contents this unit needs."""
+        if self.kind == "llm":
+            keys = []
+            if self.lora:
+                keys.append(f"lora:{self.lora}")
+            if self.prefix:
+                keys.append(f"kv:{self.prefix}")
+            return tuple(keys)
+        return (f"{self.kind}:{self.model}",)
+
+    def resource_key(self) -> str:
+        keys = self.resource_keys()
+        return keys[0] if keys else f"llm:{self.model}"
+
+
+@dataclass
+class UnitNode:
+    name: str
+    backend: BackendSpec
+    input_len: List[float] = field(default_factory=list)
+    output_len: List[float] = field(default_factory=list)
+    parallelism: List[float] = field(default_factory=list)
+    duration: List[float] = field(default_factory=list)   # non-LLM wall time
+    next_counts: Dict[str, int] = field(default_factory=dict)  # incl. "$end"
+    corr_mask: Dict[str, bool] = field(default_factory=dict)
+
+    def next_probs(self) -> Dict[str, float]:
+        tot = sum(self.next_counts.values())
+        if not tot:
+            return {"$end": 1.0}
+        return {k: v / tot for k, v in self.next_counts.items()}
+
+    def service_samples(self, t_in: float, t_out: float) -> np.ndarray:
+        """Per-trial unit service demand in seconds (LLM: parallelism *
+        (in*t_in + out*t_out); non-LLM: recorded duration)."""
+        if self.backend.kind == "llm":
+            i = np.asarray(self.input_len, np.float64)
+            o = np.asarray(self.output_len, np.float64)
+            p = np.asarray(self.parallelism, np.float64)
+            n = min(len(i), len(o), len(p))
+            if n == 0:
+                return np.asarray([1.0])
+            return p[:n] * (i[:n] * t_in + o[:n] * t_out)
+        d = np.asarray(self.duration, np.float64)
+        return d if len(d) else np.asarray([1.0])
+
+
+def _fifo(lst: List, x) -> None:
+    lst.append(float(x))
+    if len(lst) > MAX_SAMPLES:
+        del lst[0]
+
+
+class PDGraph:
+    """Knowledge-base entry for one application."""
+
+    def __init__(self, app_name: str, entry: str,
+                 units: Optional[Dict[str, UnitNode]] = None):
+        self.app_name = app_name
+        self.entry = entry
+        self.units: Dict[str, UnitNode] = units or {}
+        # per-trial joined records for correlation / conditional refinement:
+        # trials[i][unit_name] = {"in":..,"out":..,"par":..,"dur":..}
+        self.trials: List[Dict[str, Dict[str, float]]] = []
+        self._compiled = None
+
+    # ------------------------------------------------------------ recording
+    def record_trial(self, trace: Sequence[Tuple[str, Dict[str, float]]]) -> None:
+        """trace: ordered [(unit_name, {"in","out","par","dur"}), ...]."""
+        rec: Dict[str, Dict[str, float]] = {}
+        prev: Optional[str] = None
+        for name, obs in trace:
+            u = self.units[name]
+            if u.backend.kind == "llm":
+                _fifo(u.input_len, obs.get("in", 0))
+                _fifo(u.output_len, obs.get("out", 0))
+                _fifo(u.parallelism, obs.get("par", 1))
+            else:
+                _fifo(u.duration, obs.get("dur", 0))
+            if prev is not None:
+                self.units[prev].next_counts[name] = \
+                    self.units[prev].next_counts.get(name, 0) + 1
+            rec[name] = dict(obs)
+            prev = name
+        if prev is not None:
+            self.units[prev].next_counts["$end"] = \
+                self.units[prev].next_counts.get("$end", 0) + 1
+        self.trials.append(rec)
+        if len(self.trials) > MAX_SAMPLES:
+            del self.trials[0]
+        self._compiled = None
+
+    # ----------------------------------------------------------- compilation
+    def compile_arrays(self, t_in: float, t_out: float):
+        """Pack the graph into dense arrays for the jitted MC walker."""
+        if self._compiled is not None and self._compiled[0] == (t_in, t_out):
+            return self._compiled[1]
+        names = sorted(self.units)
+        idx = {n: i for i, n in enumerate(names)}
+        U = len(names)
+        S = max(max((len(self.units[n].service_samples(t_in, t_out))
+                     for n in names), default=1), 1)
+        samples = np.zeros((U, S), np.float32)
+        counts = np.zeros((U,), np.int32)
+        cum_trans = np.zeros((U, U + 1), np.float32)
+        for n in names:
+            u = self.units[n]
+            sv = u.service_samples(t_in, t_out)
+            counts[idx[n]] = len(sv)
+            samples[idx[n], :len(sv)] = sv
+            probs = np.zeros(U + 1, np.float32)
+            for tgt, pr in u.next_probs().items():
+                probs[U if tgt == "$end" else idx[tgt]] = pr
+            cum_trans[idx[n]] = np.cumsum(probs)
+        packed = {
+            "names": names, "index": idx,
+            "samples": jnp.asarray(samples), "counts": jnp.asarray(counts),
+            "cum_trans": jnp.asarray(cum_trans), "entry": idx[self.entry],
+        }
+        self._compiled = ((t_in, t_out), packed)
+        return packed
+
+    # ------------------------------------------------------------- sampling
+    def mc_service_samples(self, key, t_in: float, t_out: float,
+                           start_unit: Optional[str] = None,
+                           executed_in_unit: float = 0.0,
+                           unit_sample_override: Optional[Dict[str, np.ndarray]] = None,
+                           n_walkers: int = 512,
+                           max_steps: int = 64) -> np.ndarray:
+        """Remaining-service-time samples from `start_unit` (default: entry).
+
+        `unit_sample_override` replaces a unit's demand samples (the online
+        conditional refinement hook).  `executed_in_unit` subtracts attained
+        service inside the current unit (floored at 0 per walker).
+        """
+        packed = self.compile_arrays(t_in, t_out)
+        samples, counts = packed["samples"], packed["counts"]
+        if unit_sample_override:
+            samples = np.array(samples)
+            counts = np.array(counts)
+            for name, arr in unit_sample_override.items():
+                i = packed["index"][name]
+                arr = np.asarray(arr, np.float32)[:samples.shape[1]]
+                if len(arr) == 0:
+                    continue
+                samples[i, :len(arr)] = arr
+                counts[i] = len(arr)
+            samples, counts = jnp.asarray(samples), jnp.asarray(counts)
+        start = packed["index"][start_unit] if start_unit else packed["entry"]
+        out = _mc_walk(samples, counts, packed["cum_trans"],
+                       jnp.asarray(start, jnp.int32),
+                       jnp.asarray(executed_in_unit, jnp.float32),
+                       key, n_walkers, max_steps)
+        return np.asarray(out)
+
+    # --------------------------------------------------------------- (de)ser
+    def to_json(self) -> str:
+        d = {
+            "app_name": self.app_name, "entry": self.entry,
+            "units": {n: {
+                "backend": dataclasses.asdict(u.backend),
+                "input_len": u.input_len, "output_len": u.output_len,
+                "parallelism": u.parallelism, "duration": u.duration,
+                "next_counts": u.next_counts, "corr_mask": u.corr_mask,
+            } for n, u in self.units.items()},
+            "trials": self.trials,
+        }
+        return json.dumps(d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PDGraph":
+        d = json.loads(s)
+        units = {}
+        for n, ud in d["units"].items():
+            units[n] = UnitNode(
+                name=n, backend=BackendSpec(**ud["backend"]),
+                input_len=ud["input_len"], output_len=ud["output_len"],
+                parallelism=ud["parallelism"], duration=ud["duration"],
+                next_counts={k: int(v) for k, v in ud["next_counts"].items()},
+                corr_mask=ud.get("corr_mask", {}))
+        g = cls(d["app_name"], d["entry"], units)
+        g.trials = d.get("trials", [])
+        return g
+
+
+@partial(jax.jit, static_argnames=("n_walkers", "max_steps"))
+def _mc_walk(samples: jnp.ndarray, counts: jnp.ndarray, cum_trans: jnp.ndarray,
+             start: jnp.ndarray, executed: jnp.ndarray, key,
+             n_walkers: int, max_steps: int) -> jnp.ndarray:
+    """Vectorized random walk: (U,S) demand samples, (U,U+1) cumulative
+    transition probs, absorbing state U.  Returns (n_walkers,) remaining
+    service times."""
+    U = cum_trans.shape[0]
+
+    def step(carry, ks):
+        cur, total, done, first = carry
+        k1, k2 = ks
+        # sample unit demand
+        r = jax.random.uniform(k1, (n_walkers,))
+        sidx = jnp.floor(r * counts[cur]).astype(jnp.int32)
+        svc = samples[cur, sidx]
+        svc = jnp.where(first, jnp.maximum(svc - executed, 0.0), svc)
+        total = total + jnp.where(done, 0.0, svc)
+        # sample transition
+        r2 = jax.random.uniform(k2, (n_walkers, 1))
+        nxt = jnp.sum(r2 > cum_trans[cur], axis=-1).astype(jnp.int32)
+        nxt = jnp.minimum(nxt, U)
+        new_done = done | (nxt >= U)
+        cur = jnp.where(new_done, cur, nxt)
+        return (cur, total, new_done, jnp.zeros_like(first)), None
+
+    keys = jax.random.split(key, max_steps * 2).reshape(max_steps, 2, -1)
+    init = (jnp.full((n_walkers,), start, jnp.int32),
+            jnp.zeros((n_walkers,), jnp.float32),
+            jnp.zeros((n_walkers,), bool),
+            jnp.ones((n_walkers,), bool))
+    (cur, total, done, _), _ = jax.lax.scan(step, init, keys)
+    return total

@@ -1,0 +1,88 @@
+"""PDGraph-based backend prewarming (§3.4).
+
+For a running unit with completion-time distribution T_c, a cold downstream
+backend with branch probability p_s and warm-up duration t_p, and the
+*expected prewarming effectiveness* knob K:
+
+    p_e = p_s * P(t_c > t_s + t_p)
+
+* if p_s < K          -> never prewarm (can't reach effectiveness K)
+* else fire at the latest t_s with p_e = K, i.e.
+      t_s = start + Quantile_{T_unit}(1 - K/p_s) - t_p
+  (clipped at `now`; a smaller K = more aggressive = earlier trigger and more
+  potential waste — the Fig. 14 trade-off.)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.pdgraph import PDGraph
+
+
+def quantile(samples: Sequence[float], q: float) -> float:
+    s = np.asarray(samples, np.float64)
+    if len(s) == 0:
+        return 0.0
+    return float(np.quantile(s, np.clip(q, 0.0, 1.0)))
+
+
+def prewarm_trigger_time(unit_duration_samples: Sequence[float],
+                         unit_start: float, now: float,
+                         p_s: float, t_p: float, K: float) -> Optional[float]:
+    """Absolute time to fire the prewarm signal, or None (don't prewarm).
+
+    The duration distribution is conditioned on t_c > now (the unit is still
+    running), mirroring the Gittins-style posterior update.
+    """
+    if p_s < K or t_p <= 0:
+        return None if p_s < K else now
+    s = np.asarray(unit_duration_samples, np.float64)
+    if len(s) == 0:
+        return now
+    elapsed = max(now - unit_start, 0.0)
+    tail = s[s > elapsed]
+    if len(tail) == 0:
+        return now  # unit outlived history; warm immediately
+    # want P(t_c > t_s + t_p) = K/p_s  ->  remaining quantile at 1 - K/p_s
+    q = 1.0 - K / p_s
+    rem = np.quantile(tail - elapsed, np.clip(q, 0.0, 1.0))
+    return max(now, now + float(rem) - t_p)
+
+
+@dataclass
+class PrewarmSignal:
+    fire_at: float
+    resource_key: str        # BackendSpec.resource_key() of the cold backend
+    backend_kind: str        # llm | docker | dnn
+    app_id: str
+    unit: str                # downstream unit the warm-up is for
+    p_s: float
+
+
+def plan_prewarms(graph: PDGraph, app_id: str, current_unit: str,
+                  unit_start: float, now: float, K: float,
+                  warmup_time_of, is_warm, t_in: float, t_out: float
+                  ) -> List[PrewarmSignal]:
+    """Prewarm signals for the cold backends of `current_unit`'s downstream
+    units.  `warmup_time_of(resource_key) -> seconds`; `is_warm(key) -> bool`.
+    """
+    cur = graph.units[current_unit]
+    dur = cur.service_samples(t_in, t_out)
+    out: List[PrewarmSignal] = []
+    for nxt, p_s in cur.next_probs().items():
+        if nxt == "$end":
+            continue
+        unit = graph.units[nxt]
+        for key in unit.backend.resource_keys():
+            if is_warm(key):
+                continue
+            t_p = warmup_time_of(key)
+            fire = prewarm_trigger_time(dur, unit_start, now, p_s, t_p, K)
+            if fire is not None:
+                out.append(PrewarmSignal(fire_at=fire, resource_key=key,
+                                         backend_kind=unit.backend.kind,
+                                         app_id=app_id, unit=nxt, p_s=p_s))
+    return out

@@ -1,0 +1,179 @@
+"""HermesScheduler: the global queue manager (Fig. 4).
+
+Holds the PDGraph knowledge base, tracks per-application runtime state,
+refreshes scheduling priorities at bucket-period granularity, performs online
+demand refinement on unit completion, and emits prewarm signals.
+
+The scheduler is host-agnostic: both the discrete-event cluster simulator
+(paper-scale experiments) and the real JAX serving engine drive it through the
+same ``on_*`` callbacks; in a production deployment these arrive over RPC
+(the paper uses ZeroMQ — see DESIGN.md §3 for the transport swap).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core import correlation as C
+from repro.core.pdgraph import PDGraph
+from repro.core.policies import AppView, Policy, VTCPolicy, make_policy
+from repro.core.prewarm import PrewarmSignal, plan_prewarms
+
+
+@dataclass
+class AppRuntime:
+    app_id: str
+    app_name: str
+    tenant: str
+    arrival: float
+    deadline: Optional[float] = None
+    current_unit: Optional[str] = None
+    unit_start: float = 0.0
+    attained: float = 0.0                 # total service received (sec)
+    attained_in_unit: float = 0.0
+    done: bool = False
+    overrides: Dict[str, np.ndarray] = field(default_factory=dict)
+    view: Optional[AppView] = None
+    oracle_remaining: Optional[float] = None
+
+
+class HermesScheduler:
+    def __init__(self, knowledge_base: Dict[str, PDGraph],
+                 policy: str = "gittins", *,
+                 t_in: float = 1e-4, t_out: float = 2e-3,
+                 K: float = 0.5, n_buckets: int = 10,
+                 refine: bool = True, prewarm: bool = True,
+                 mc_walkers: int = 512, seed: int = 0):
+        self.kb = knowledge_base
+        self.policy: Policy = make_policy(policy) if policy != "gittins" \
+            else make_policy(policy, n_buckets=n_buckets)
+        self.t_in, self.t_out = t_in, t_out
+        self.K = K
+        self.n_buckets = n_buckets
+        self.refine = refine
+        self.prewarm_enabled = prewarm
+        self.mc_walkers = mc_walkers
+        self.apps: Dict[str, AppRuntime] = {}
+        self._key = jax.random.PRNGKey(seed)
+        for g in self.kb.values():
+            C.apply_masks(g)
+
+    # ------------------------------------------------------------ internals
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _total_samples(self, app: AppRuntime) -> np.ndarray:
+        """TOTAL demand distribution = attained + MC(remaining)."""
+        g = self.kb[app.app_name]
+        rem = g.mc_service_samples(
+            self._next_key(), self.t_in, self.t_out,
+            start_unit=app.current_unit,
+            executed_in_unit=app.attained_in_unit,
+            unit_sample_override=app.overrides or None,
+            n_walkers=self.mc_walkers)
+        return app.attained + np.maximum(rem, 0.0)
+
+    def _refresh_view(self, app: AppRuntime) -> None:
+        samples = self._total_samples(app)
+        app.view = AppView(app_id=app.app_id, tenant=app.tenant,
+                           arrival=app.arrival, attained=app.attained,
+                           total_samples=samples, deadline=app.deadline,
+                           oracle_remaining=app.oracle_remaining)
+
+    # -------------------------------------------------------------- events
+    def on_arrival(self, app_id: str, app_name: str, now: float, *,
+                   tenant: str = "default",
+                   deadline: Optional[float] = None) -> None:
+        g = self.kb[app_name]
+        app = AppRuntime(app_id=app_id, app_name=app_name, tenant=tenant,
+                         arrival=now, deadline=deadline,
+                         current_unit=g.entry, unit_start=now)
+        self.apps[app_id] = app
+        self._refresh_view(app)
+
+    def on_unit_start(self, app_id: str, unit: str, now: float) -> None:
+        app = self.apps[app_id]
+        app.current_unit = unit
+        app.unit_start = now
+        app.attained_in_unit = 0.0
+
+    def on_progress(self, app_id: str, service_delta: float) -> None:
+        app = self.apps[app_id]
+        app.attained += service_delta
+        app.attained_in_unit += service_delta
+        if app.view is not None:
+            app.view.attained = app.attained
+        if isinstance(self.policy, VTCPolicy):
+            self.policy.account(app.tenant, service_delta)
+
+    def on_unit_finish(self, app_id: str, unit: str,
+                       observed: Dict[str, float], now: float,
+                       next_unit: Optional[str]) -> None:
+        """Online refinement: condition every downstream unit's demand on the
+        just-observed execution (bucket-join + filter, §3.2)."""
+        app = self.apps[app_id]
+        g = self.kb[app.app_name]
+        if self.refine:
+            # refine every unit whose demand is correlation-masked on the
+            # just-finished one (direct successors and 2-hop pairs alike)
+            prefix = unit + "|"
+            for name, node in g.units.items():
+                if name == unit:
+                    continue
+                if not any(k.startswith(prefix) and v
+                           for k, v in node.corr_mask.items()):
+                    continue
+                cond = C.conditional_samples(g, unit, name, observed,
+                                             self.t_in, self.t_out)
+                if cond is not None:
+                    app.overrides[name] = cond
+        if next_unit is None:
+            app.done = True
+            app.current_unit = None
+        else:
+            app.current_unit = next_unit
+            app.unit_start = now
+            app.attained_in_unit = 0.0
+        if not app.done:
+            self._refresh_view(app)
+
+    def on_app_complete(self, app_id: str) -> None:
+        self.apps[app_id].done = True
+
+    def set_oracle(self, app_id: str, remaining: float) -> None:
+        app = self.apps[app_id]
+        app.oracle_remaining = remaining
+        if app.view is not None:
+            app.view.oracle_remaining = remaining
+
+    # ------------------------------------------------------------ decisions
+    def priorities(self, now: float) -> Dict[str, float]:
+        """Rank every live application (lower = run first).  Called once per
+        bucket period — the Fig. 15 hot path."""
+        live = [a for a in self.apps.values() if not a.done]
+        for a in live:
+            if a.view is None:
+                self._refresh_view(a)
+        views = [a.view for a in live]
+        if not views:
+            return {}
+        ranks = self.policy.ranks(views, now)
+        return {a.app_id: float(r) for a, r in zip(live, ranks)}
+
+    def prewarm_signals(self, app_id: str, now: float,
+                        warmup_time_of, is_warm) -> List[PrewarmSignal]:
+        if not self.prewarm_enabled:
+            return []
+        app = self.apps[app_id]
+        if app.done or app.current_unit is None:
+            return []
+        g = self.kb[app.app_name]
+        return plan_prewarms(g, app_id, app.current_unit, app.unit_start,
+                             now, self.K, warmup_time_of, is_warm,
+                             self.t_in, self.t_out)

@@ -1,0 +1,209 @@
+"""Logical-axis sharding: name-based rules mapping param/activation dims to
+mesh axes, plus a guarded ``shard()`` constraint helper that no-ops when no
+shard context is active (so tiny CPU tests never see mesh axis errors).
+
+Mesh axes:
+  single pod : ("data", "model")
+  multi pod  : ("pod", "data", "model")
+
+Logical axes used by the model code:
+  "batch"  -> ("pod", "data")        data parallel (pods are extra DP)
+  "fsdp"   -> ("pod", "data") or None  parameter sharding for fsdp mode
+  "model"  -> "model"                 tensor/expert parallel
+  "seq"    -> "model"                 KV-cache sequence sharding (decode)
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+
+class ShardCtx:
+    """Resolved mesh context: which physical axes implement each logical axis."""
+
+    def __init__(self, mesh: Mesh, param_sharding: str = "fsdp"):
+        self.mesh = mesh
+        names = tuple(mesh.axis_names)
+        self.batch_axes: Tuple[str, ...] = tuple(a for a in ("pod", "data") if a in names)
+        self.model_axis: Optional[str] = "model" if "model" in names else None
+        self.param_sharding = param_sharding
+
+    def logical(self, name: Optional[str]):
+        if name is None:
+            return None
+        if name == "batch":
+            return self.batch_axes if self.batch_axes else None
+        if name == "fsdp":
+            # fsdp shards params over the data axes; dp/zero1 replicate params
+            if self.param_sharding == "fsdp" and self.batch_axes:
+                return self.batch_axes
+            return None
+        if name in ("model", "seq", "expert", "heads", "vocab", "mlp"):
+            return self.model_axis
+        raise KeyError(f"unknown logical axis {name!r}")
+
+    def pspec(self, *logical_names) -> P:
+        return P(*[self.logical(n) for n in logical_names])
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    return getattr(_CTX, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_shard_ctx(ctx: Optional[ShardCtx]):
+    prev = getattr(_CTX, "ctx", None)
+    _CTX.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _CTX.ctx = prev
+
+
+def _axis_size(ctx: ShardCtx, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        n = 1
+        for a in phys:
+            n *= ctx.mesh.shape[a]
+        return n
+    return ctx.mesh.shape[phys]
+
+
+def shard(x: jnp.ndarray, *logical_names) -> jnp.ndarray:
+    """with_sharding_constraint keyed by logical axis names; no-op w/o context.
+
+    Shape-aware: any dim not divisible by its mesh-axis size falls back to
+    replicated (e.g. qwen2-7b's 28 heads on a 16-way model axis).
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    entries = []
+    for dim, name in enumerate(logical_names):
+        phys = ctx.logical(name)
+        if phys is not None and x.shape[dim] % _axis_size(ctx, phys) != 0:
+            phys = None
+        entries.append(phys)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*entries)))
+
+
+# ---------------------------------------------------------------------------
+# Name-based parameter sharding rules.
+#
+# Rules are (regex over '/'.joined param path) -> tuple of logical axis names
+# (one per trailing dim; leading unmatched dims — e.g. the stacked-layer dim —
+# are None).  First match wins.
+PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"embed/table$",            ("vocab", "fsdp")),
+    (r"pos_emb$",                (None, "fsdp")),
+    (r"lm_head/kernel$",         ("fsdp", "vocab")),
+    (r"projector/kernel$",       ("fsdp", "model")),
+    # attention
+    (r"attn.*/w(q|k|v)$",        ("fsdp", "model")),
+    (r"attn.*/wo$",              ("model", "fsdp")),
+    (r"attn.*/b(q|k|v)$",        ("model",)),
+    (r"attn.*/(q|k)_norm$",      (None,)),
+    # dense mlp
+    (r"mlp/w(i|g)$",             ("fsdp", "model")),
+    (r"mlp/wo$",                 ("model", "fsdp")),
+    # moe: experts on the model axis (EP); router replicated over model
+    (r"moe/router$",             ("fsdp", None)),
+    (r"moe/w(i|g)$",             ("expert", "fsdp", None)),
+    (r"moe/wo$",                 ("expert", None, "fsdp")),
+    (r"moe/shared_w(i|g)$",      ("fsdp", "model")),
+    (r"moe/shared_wo$",          ("model", "fsdp")),
+    (r"moe/shared_gate$",        ("fsdp",)),
+    # mamba2
+    (r"mamba/in_proj_(z|x)$",    ("fsdp", "model")),
+    (r"mamba/in_proj_(b|c)$",    ("fsdp", None)),
+    (r"mamba/in_proj_dt$",       ("fsdp", "model")),
+    (r"mamba/(dt_bias|a_log|d)$", ("model",)),
+    (r"mamba/conv_.*$",          (None, "model")),
+    (r"mamba/norm_scale$",       ("model",)),
+    (r"mamba/out_proj$",         ("model", "fsdp")),
+    # norms / everything small: replicated
+    (r".*(norm|scale|bias).*$",  None),
+)
+
+
+def spec_for_path(path: str, ndim: int) -> P:
+    for pat, axes in PARAM_RULES:
+        if re.search(pat, path):
+            if axes is None:
+                return P()
+            pad = (None,) * (ndim - len(axes))
+            return P(*(pad + tuple(axes)))
+    return P()  # default: replicate
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_pspecs(params: Any) -> Any:
+    """PartitionSpec pytree for a param pytree, by name rules."""
+    def leaf_spec(path, leaf):
+        return spec_for_path(_path_str(path), getattr(leaf, "ndim", 0))
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def resolve_pspec(ctx: ShardCtx, spec: P) -> P:
+    """Map logical names inside a PartitionSpec to physical mesh axes."""
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, (tuple, list)):
+            resolved: list = []
+            for e in entry:
+                r = ctx.logical(e)
+                if r is None:
+                    continue
+                resolved.extend(r if isinstance(r, tuple) else (r,))
+            out.append(tuple(resolved) if resolved else None)
+        else:
+            r = ctx.logical(entry)
+            if r is None:
+                out.append(None)
+            elif isinstance(r, tuple):
+                out.append(r if len(r) > 1 else r[0])
+            else:
+                out.append(r)
+    return P(*out)
+
+
+def named_shardings(ctx: ShardCtx, params: Any) -> Any:
+    """NamedSharding tree for a param (or ShapeDtypeStruct) tree.
+
+    Shape-aware: dims not divisible by their mesh-axis size are replicated.
+    """
+    def one(path, leaf):
+        spec = spec_for_path(_path_str(path), leaf.ndim)
+        resolved = resolve_pspec(ctx, spec)
+        entries = list(resolved) + [None] * (leaf.ndim - len(resolved))
+        fixed = []
+        for dim, phys in enumerate(entries):
+            if phys is not None and leaf.shape[dim] % _axis_size(ctx, phys) != 0:
+                phys = None
+            fixed.append(phys)
+        return NamedSharding(ctx.mesh, P(*fixed))
+    return jax.tree_util.tree_map_with_path(one, params)

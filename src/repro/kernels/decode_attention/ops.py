@@ -1,0 +1,30 @@
+"""Public wrapper for decode attention (model layout -> kernel layout)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray, *,
+                     block_s: int = 512,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """q: (B, 1, H, hd); caches: (B, Smax, K, hd); pos: scalar current length.
+    Returns (B, 1, H, hd)."""
+    B, _, H, hd = q.shape
+    _, Smax, K, _ = k_cache.shape
+    G = H // K
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qf = q.reshape(B, K, G, hd).reshape(B * K, G, hd)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * K, Smax, hd)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * K, Smax, hd)
+    lengths = jnp.full((B * K,), pos + 1, jnp.int32)
+    of = decode_attention_kernel(qf, kf, vf, lengths, block_s=block_s,
+                                 interpret=interpret)
+    return of.reshape(B, K, G, hd).reshape(B, 1, H, hd)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         lengths: jnp.ndarray) -> jnp.ndarray:
+    """q: (BK, G, hd); k/v: (BK, Smax, hd); lengths: (BK,)."""
+    BK, G, hd = q.shape
+    Smax = k.shape[1]
+    s = jnp.einsum("bgh,bsh->bgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = jnp.arange(Smax)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgs,bsh->bgh", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,39 @@
+"""Public wrapper: layout handling + jit + auto-interpret off TPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_kv: int = 512,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Model-layout entry point.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, K, hd) with H = K*G.
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    if interpret is None:
+        interpret = not _on_tpu()
+    # (B, S, K, G, hd) -> (B*K*G, S, hd); KV -> (B*K, S, hd)
+    qf = (q.reshape(B, Sq, K, G, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(B * K * G, Sq, hd))
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, Skv, hd)
+    of = flash_attention_kernel(qf, kf, vf, causal=causal, block_q=block_q,
+                                block_kv=block_kv, interpret=interpret)
+    return (of.reshape(B, K, G, Sq, hd).transpose(0, 3, 1, 2, 4)
+            .reshape(B, Sq, H, hd))

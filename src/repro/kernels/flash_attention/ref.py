@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True) -> jnp.ndarray:
+    """q: (BKG, Sq, hd) rows ordered (batch, kv_head, group); k/v: (BK, Skv, hd)."""
+    BKG, Sq, hd = q.shape
+    BK, Skv, _ = k.shape
+    G = BKG // BK
+    kk = jnp.repeat(k, G, axis=0)
+    vv = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,19 @@
+"""Public wrapper for the grouped expert matmul."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gmm.kernel import moe_gmm_kernel
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_n", "block_d", "interpret"))
+def moe_gmm(x: jnp.ndarray, w: jnp.ndarray, *, block_c: int = 128,
+            block_n: int = 512, block_d: int = 512,
+            interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return moe_gmm_kernel(x, w, block_c=block_c, block_n=block_n,
+                          block_d=block_d, interpret=interpret)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the grouped expert matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def moe_gmm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (E, C, D); w: (E, D, N) -> (E, C, N) with f32 accumulation."""
+    return jnp.einsum("ecd,edn->ecn", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)

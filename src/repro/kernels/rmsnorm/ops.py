@@ -1,0 +1,29 @@
+"""Public wrapper for the fused RMSNorm kernel (any leading dims)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_kernel
+
+
+@partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-5,
+            interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = x.shape
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    xf = x.reshape(rows, shape[-1])
+    block = rows
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if rows % cand == 0:
+            block = cand
+            break
+    out = rmsnorm_kernel(xf, scale, eps=eps, block_rows=block,
+                         interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: direct sequential SSM recurrence (no chunking)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                 Bm: jnp.ndarray, Cm: jnp.ndarray) -> jnp.ndarray:
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;  y_t = C_t h_t.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N) -> y (B,S,H,P)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp          # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt.astype(jnp.float32) * A[None, :])   # (B,H)
+        upd = jnp.einsum("bn,bhp->bhnp", bt.astype(jnp.float32),
+                         xt.astype(jnp.float32) * dtt[..., None])
+        h = h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+                          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

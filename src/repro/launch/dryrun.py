@@ -1,0 +1,306 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+placeholder devices and extract the roofline terms from the compiled artifact.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+
+Results are written incrementally to results/dryrun/<mesh>/<arch>__<shape>.json
+(existing cells are skipped unless --force), so the full 2x40-cell sweep is
+restartable — the fault-tolerance story applies to the tooling too.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (SHAPES, TPU_V5E, ModelConfig, applicable_shapes,
+                          get_config, list_configs)
+from repro.distributed.sharding import ShardCtx, use_shard_ctx
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import cell_functions
+from repro.models.model import build_model
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device wire bytes by collective type, parsed from partitioned HLO.
+
+    all-reduce counts 2x operand (ring reduce+broadcast); all-gather counts its
+    (post-gather) output; reduce-scatter / all-to-all / permute count operands.
+    """
+    per_op = {k: 0 for k in _COLLECTIVES}
+    wire = 0
+    count = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", rhs):
+                op = c
+                break
+        if op is None:
+            continue
+        if re.search(rf"\b{op}-done\(", rhs):
+            continue  # counted at -start
+        shapes = _SHAPE_RE.findall(rhs)
+        if not shapes:
+            continue
+        paren = rhs.index("(")
+        out_shapes = _SHAPE_RE.findall(rhs[:paren])
+        in_shapes = _SHAPE_RE.findall(rhs[paren:])
+        out_b = sum(_shape_bytes(d, s) for d, s in out_shapes)
+        in_b = sum(_shape_bytes(d, s) for d, s in in_shapes) or out_b
+        count += 1
+        if op == "all-reduce":
+            b = 2 * in_b
+        elif op == "all-gather":
+            b = out_b or in_b
+        else:
+            b = in_b
+        per_op[op] += b
+        wire += b
+    per_op["total_wire_bytes"] = wire
+    per_op["num_collectives"] = count
+    return per_op
+
+
+def tree_device_bytes(shardings, abstract) -> int:
+    """Per-device resident bytes for a sharded abstract tree."""
+    total = 0
+    for sh, ab in zip(jax.tree_util.tree_leaves(shardings),
+                      jax.tree_util.tree_leaves(abstract)):
+        n = ab.dtype.itemsize
+        for d in ab.shape:
+            n *= d
+        # shard count from the spec
+        spec = getattr(sh, "spec", None)
+        mesh = getattr(sh, "mesh", None)
+        k = 1
+        if spec is not None and mesh is not None:
+            for entry in spec:
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                for a in axes:
+                    k *= dict(mesh.shape)[a]
+        total += n // k
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape, n_devices: int) -> float:
+    """6*N_active*tokens (train) / 2*N_active*tokens (fwd), per device."""
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        f = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        f = 2.0 * n_active * tokens
+    else:
+        f = 2.0 * n_active * shape.global_batch
+    return f / n_devices
+
+
+def _compile_cell(cfg: ModelConfig, shape, ctx, want_mem: bool):
+    """Lower+compile one variant; return metrics from the compiled artifact."""
+    model = build_model(cfg)
+    t0 = time.time()
+    with use_shard_ctx(ctx), ctx.mesh:
+        fn, args, in_sh, out_sh = cell_functions(model, shape, ctx)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        out = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": collective_bytes(compiled.as_text()),
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+        }
+        if want_mem:
+            try:
+                mem = compiled.memory_analysis()
+                out["memory_analysis"] = {
+                    k: int(getattr(mem, k)) for k in
+                    ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes")
+                    if hasattr(mem, k)}
+            except Exception:
+                out["memory_analysis"] = {}
+            out["params_bytes_per_dev"] = tree_device_bytes(in_sh[0], args[0])
+    return out
+
+
+def accounting_cfg(cfg: ModelConfig, k: int) -> ModelConfig:
+    """Unrolled k-period variant with inner scans disabled, so cost_analysis
+    and the HLO text count every op exactly once per layer."""
+    from repro.models.transformer import layer_plan
+    period = 1 if cfg.family == "encdec" else len(layer_plan(cfg))
+    # microbatch=0: the accumulation scan is a while loop (counted once by
+    # cost analysis); one full-batch step has the same per-step totals.
+    over = dict(scan_layers=False, num_layers=k * period,
+                attn_block_q=1 << 30, loss_chunk=1 << 30, microbatch=0)
+    if cfg.family == "encdec":
+        over["enc_layers"] = k
+    return cfg.replace(**over)
+
+
+def extrapolate(m1: dict, m2: dict, n: int) -> dict:
+    """X_total = X(1 period) + (n-1) * (X(2 periods) - X(1 period))."""
+    def ex(a, b):
+        return max(0.0, a + (n - 1) * (b - a))
+    coll = {k: ex(m1["coll"][k], m2["coll"][k]) for k in m1["coll"]}
+    return {"flops": ex(m1["flops"], m2["flops"]),
+            "bytes": ex(m1["bytes"], m2["bytes"]),
+            "coll": coll}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             force: bool = False, overrides=None) -> dict:
+    tag = "__".join(f"{k}-{v}" for k, v in sorted((overrides or {}).items()))
+    fname = f"{arch}__{shape_name}" + (f"__{tag}" if tag else "") + ".json"
+    out_path = out_dir / mesh_kind / fname
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+
+    cfg = get_config(arch, **(overrides or {}))
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "overrides": overrides or {},
+           "time": time.strftime("%Y-%m-%d %H:%M:%S")}
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        n_dev = mesh.devices.size
+        ctx = ShardCtx(mesh, param_sharding=cfg.param_sharding)
+
+        # 1) the real (scan-over-layers) program: proof of compile + memory
+        main = _compile_cell(cfg, shape, ctx, want_mem=True)
+
+        # 2) accounting variants: exact per-period costs, extrapolated
+        from repro.models.transformer import n_periods as _np
+        n = cfg.num_layers if cfg.family == "encdec" else _np(cfg)
+        m1 = _compile_cell(accounting_cfg(cfg, 1), shape, ctx, want_mem=False)
+        m2 = _compile_cell(accounting_cfg(cfg, 2), shape, ctx, want_mem=False)
+        tot = extrapolate(m1, m2, n)
+
+        hw = TPU_V5E
+        mf = model_flops(cfg, shape, n_dev)
+        compute_s = tot["flops"] / hw.peak_flops
+        memory_s = tot["bytes"] / hw.hbm_bw
+        coll_s = tot["coll"]["total_wire_bytes"] / hw.ici_bw
+        dominant = max((("compute", compute_s), ("memory", memory_s),
+                        ("collective", coll_s)), key=lambda kv: kv[1])[0]
+        rec.update({
+            "ok": True,
+            "n_devices": int(n_dev),
+            "lower_s": main["lower_s"], "compile_s": main["compile_s"],
+            "hlo_flops_per_dev": tot["flops"],
+            "hlo_bytes_per_dev": tot["bytes"],
+            "collectives": tot["coll"],
+            "scanned_program": {k: main[k] for k in ("flops", "bytes", "coll")},
+            "memory_analysis": main.get("memory_analysis", {}),
+            "params_bytes_per_dev": int(main.get("params_bytes_per_dev", 0)),
+            "model_flops_per_dev": mf,
+            "useful_flops_ratio": (mf / tot["flops"]) if tot["flops"] else None,
+            "roofline": {
+                "compute_s": compute_s, "memory_s": memory_s,
+                "collective_s": coll_s, "dominant": dominant,
+                "step_s_lower_bound": max(compute_s, memory_s, coll_s),
+                "roofline_fraction": (compute_s / max(compute_s, memory_s, coll_s)
+                                      if max(compute_s, memory_s, coll_s) else None),
+            },
+        })
+    except Exception as e:  # record the failure; the sweep continues
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    out_path.write_text(json.dumps(rec, indent=2))
+    status = "ok" if rec.get("ok") else "FAIL"
+    dom = rec.get("roofline", {}).get("dominant", "-")
+    print(f"[{status}] {mesh_kind:6s} {arch:24s} {shape_name:12s} "
+          f"compile={rec.get('compile_s', 0):.0f}s dominant={dom}", flush=True)
+    return rec
+
+
+def cells_for(archs, shapes_filter=None, mesh_kinds=("single", "multi")):
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in applicable_shapes(cfg):
+            if shapes_filter and shape_name not in shapes_filter:
+                continue
+            for mk in mesh_kinds:
+                yield arch, shape_name, mk
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override k=v (e.g. moe_impl=ep)")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except Exception:
+            pass
+        overrides[k] = v
+
+    archs = [args.arch] if args.arch else list(list_configs())
+    shapes = [args.shape] if args.shape else None
+    meshes = (args.mesh,) if args.mesh else ("single", "multi")
+    out_dir = Path(args.out)
+
+    n_fail = 0
+    for arch, shape_name, mk in cells_for(archs, shapes, meshes):
+        rec = run_cell(arch, shape_name, mk, out_dir, force=args.force,
+                       overrides=overrides)
+        n_fail += 0 if rec.get("ok") else 1
+    print(f"done; failures={n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

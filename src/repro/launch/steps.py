@@ -1,0 +1,170 @@
+"""Step-function factories shared by dryrun / train / serve drivers, plus the
+sharding trees for their inputs and outputs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import (ShardCtx, named_shardings, shard,
+                                        use_shard_ctx, _axis_size)
+from repro.models.model import Model
+from repro.training.optimizer import AdamState, adamw_update, init_opt_state
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    cfg = model.cfg
+    n_mb = max(tcfg.microbatch or cfg.microbatch, 1)
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(lambda p: model.train_loss(p, batch))(params)
+
+    def train_step(params, opt_state: AdamState, batch):
+        if n_mb > 1:
+            # gradient accumulation: scan over microbatches, f32 accumulators
+            def split(leaf):
+                b = leaf.shape[0]
+                return leaf.reshape(n_mb, b // n_mb, *leaf.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, mb):
+                acc_loss, acc_g = carry
+                loss, g = grad_fn(params, mb)
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), acc_g, g)
+                return (acc_loss + loss, acc_g), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss / n_mb
+            grads = jax.tree_util.tree_map(lambda g: g / n_mb, grads)
+        else:
+            loss, grads = grad_fn(params, batch)
+        if tcfg.grad_compression == "int8":
+            from repro.training.compression import compress_decompress
+            grads = compress_decompress(grads)
+        new_params, new_state, metrics = adamw_update(grads, opt_state, params, tcfg)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """One decode step: greedy next-token + updated caches."""
+    def serve_step(params, caches, token, pos):
+        caches, logits = model.decode(params, caches, token, pos)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return caches, next_token
+    return serve_step
+
+
+# ----------------------------------------------------------------- shardings
+def batch_shardings(ctx: ShardCtx, batch_spec: Dict[str, Any]):
+    """Batch dim -> (pod,data); everything else replicated."""
+    b = ctx.logical("batch")
+
+    def one(path, leaf):
+        spec = [b] + [None] * (leaf.ndim - 1)
+        if leaf.shape[0] % _axis_size(ctx, b) != 0:
+            spec[0] = None
+        return NamedSharding(ctx.mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, batch_spec)
+
+
+def cache_shardings(ctx: ShardCtx, cache_spec: Any, seq_axes=None):
+    """Decode caches: batch->(pod,data); attn KV seq dim -> model (+pod when
+    batch can't use it, e.g. long_500k B=1); mamba heads/channels -> model."""
+    b = ctx.logical("batch")
+    m = ctx.logical("model")
+    seq = seq_axes if seq_axes is not None else m
+
+    def path_str(path):
+        return "/".join(str(getattr(p, "key", p)) for p in path)
+
+    def one(path, leaf):
+        name = path_str(path).rsplit("/", 1)[-1]
+        nd = leaf.ndim
+        if name in ("k", "v"):          # (n?, B, S, K, hd)
+            spec = [None] * (nd - 4) + [b, seq, None, None]
+        elif name in ("xk", "xv"):      # (n?, B, F, K, hd) — cross KV, small
+            spec = [None] * (nd - 4) + [b, None, None, None]
+        elif name == "ssm":             # (n?, B, H, N, P)
+            spec = [None] * (nd - 4) + [b, m, None, None]
+        elif name.startswith("conv"):   # (n?, B, k-1, C)
+            spec = [None] * (nd - 3) + [b, None, m]
+        else:
+            spec = [None] * nd
+        # divisibility fallback
+        fixed = []
+        for dim, phys in enumerate(spec):
+            if phys is not None and leaf.shape[dim] % _axis_size(ctx, phys) != 0:
+                phys = None
+            fixed.append(phys)
+        return NamedSharding(ctx.mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(one, cache_spec)
+
+
+def opt_state_shardings(ctx: ShardCtx, params_spec) -> Any:
+    ps = named_shardings(ctx, params_spec)
+    return AdamState(step=NamedSharding(ctx.mesh, P()), m=ps, v=ps)
+
+
+def abstract_opt_state(params_spec, state_dtype: str) -> AdamState:
+    dt = jnp.dtype(state_dtype)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return AdamState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                     m=jax.tree_util.tree_map(z, params_spec),
+                     v=jax.tree_util.tree_map(z, params_spec))
+
+
+def cell_functions(model: Model, shape: ShapeConfig, ctx: ShardCtx,
+                   tcfg: Optional[TrainConfig] = None):
+    """(jit-able fn, abstract args, in_shardings, out_shardings) for one cell."""
+    cfg = model.cfg
+    params_abs = model.init_abstract(max_seq=shape.seq_len + 8 if cfg.rope_theta <= 0 else 0)
+    params_sh = named_shardings(ctx, params_abs)
+    specs = model.input_specs(shape)
+
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig()
+        fn = make_train_step(model, tcfg)
+        opt_abs = abstract_opt_state(params_abs, cfg.opt_state_dtype)
+        opt_sh = opt_state_shardings(ctx, params_abs)
+        b_sh = batch_shardings(ctx, specs["batch"])
+        args = (params_abs, opt_abs, specs["batch"])
+        in_sh = (params_sh, opt_sh, b_sh)
+        out_sh = (params_sh, opt_sh, None)
+        return fn, args, in_sh, out_sh
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model)
+        b_sh = batch_shardings(ctx, specs["batch"])
+        args = (params_abs, specs["batch"])
+        return fn, args, (params_sh, b_sh), None
+
+    # decode
+    fn = make_serve_step(model)
+    seq_axes = None
+    if shape.global_batch == 1 and "pod" in ctx.mesh.axis_names:
+        seq_axes = tuple(a for a in ("pod", "model") if a in ctx.mesh.axis_names)
+    c_sh = cache_shardings(ctx, specs["caches"], seq_axes=seq_axes)
+    t_sh = batch_shardings(ctx, {"t": specs["token"]})["t"]
+    p_sh = NamedSharding(ctx.mesh, P())
+    args = (params_abs, specs["caches"], specs["token"], specs["pos"])
+    in_sh = (params_sh, c_sh, t_sh, p_sh)
+    out_sh = (c_sh, t_sh)
+    return fn, args, in_sh, out_sh

@@ -1,0 +1,65 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --tiny \
+      --steps 100 --ckpt /tmp/ckpt [--fail-at-step 40]
+
+``--tiny`` swaps the full config for the reduced same-family config (CPU
+runnable); the full configs are exercised via the dry-run.  ``--fail-at-step``
+injects a failure to exercise the checkpoint/restart path end to end.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.config import TrainConfig, get_config
+from repro.data.pipeline import DataConfig
+from repro.models.layers import padded_vocab
+from repro.runtime.fault_tolerance import FailureInjector
+from repro.testing import tiny_config
+from repro.training.train_loop import run_training_with_restarts
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--full", dest="tiny", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--fail-at-step", type=int, default=None)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8"])
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override width (e.g. ~100M model: 512 x 8L)")
+    ap.add_argument("--layers", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = tiny_config(args.arch) if args.tiny else get_config(args.arch)
+    over = {}
+    if args.d_model:
+        over.update(d_model=args.d_model, d_ff=4 * args.d_model)
+    if args.layers:
+        over.update(num_layers=args.layers)
+    if over:
+        cfg = cfg.replace(**over)
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=10,
+                       checkpoint_every=args.ckpt_every,
+                       grad_compression=args.grad_compression)
+    dcfg = DataConfig(vocab_size=min(cfg.vocab_size, 256),
+                      seq_len=args.seq, global_batch=args.batch)
+    injector = FailureInjector(args.fail_at_step)
+    report = run_training_with_restarts(
+        cfg, tcfg, dcfg, total_steps=args.steps,
+        ckpt_dir=args.ckpt or "/tmp/repro_ckpt", injector=injector)
+    print(f"[train] done: {report.steps_run} steps, restarts={report.restarts}, "
+          f"first loss {report.losses[0]:.3f} -> last {report.losses[-1]:.3f}, "
+          f"{report.wall_s:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,147 @@
+"""Encoder-decoder backbone (whisper-large-v3).
+
+The conv/mel frontend is a STUB per the brief: the model consumes precomputed
+frame embeddings (B, enc_frames, d_model).  Encoder = non-causal self-attn +
+GELU MLP; decoder = causal self-attn + cross-attn + GELU MLP; LayerNorm with
+bias, learned absolute positions on the decoder.
+
+Decode caches: per-layer self-attn KV (growing) + cross-attn KV (static,
+computed once at prefill from the encoder output).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def encdec_stack_params(key, cfg: ModelConfig, dtype) -> Params:
+    ke, kd1, kd2, kd3, km = jax.random.split(key, 5)
+    enc = {
+        "attn": L.attn_params(ke, cfg, cfg.enc_layers, dtype),
+        "attn_norm": L.norm_params(cfg, cfg.enc_layers, cfg.d_model, True),
+        "mlp": L.mlp_params(km, cfg, cfg.enc_layers, cfg.d_ff, dtype),
+        "mlp_norm": L.norm_params(cfg, cfg.enc_layers, cfg.d_model, True),
+    }
+    n = cfg.num_layers
+    dec = {
+        "self_attn": L.attn_params(kd1, cfg, n, dtype),
+        "self_norm": L.norm_params(cfg, n, cfg.d_model, True),
+        "cross_attn": L.attn_params(kd2, cfg, n, dtype),
+        "cross_norm": L.norm_params(cfg, n, cfg.d_model, True),
+        "mlp": L.mlp_params(kd3, cfg, n, cfg.d_ff, dtype),
+        "mlp_norm": L.norm_params(cfg, n, cfg.d_model, True),
+    }
+    return {"enc": enc, "dec": dec,
+            "enc_final_norm": L.norm_params(cfg, None, cfg.d_model, True)}
+
+
+def run_encoder(p: Params, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: (B, S_enc, D) stub embeddings -> encoder output (B, S_enc, D)."""
+    S = frames.shape[1]
+    positions = jnp.arange(S)
+    x = shard(frames, "batch", None, None)
+
+    def body(h, lp):
+        a_in = L.apply_norm(h, lp["attn_norm"], cfg)
+        q, k, v = L.qkv_project(lp["attn"], a_in, cfg, positions)
+        a = L.flash_attention_xla(q, k, v, causal=False, block_q=cfg.attn_block_q)
+        h = h + L.attn_out(lp["attn"], a)
+        m_in = L.apply_norm(h, lp["mlp_norm"], cfg)
+        h = h + L.mlp_apply(lp["mlp"], m_in, cfg)
+        return h, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, p["enc"])
+    else:
+        for li in range(cfg.enc_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[li], p["enc"])
+            x, _ = body(x, lp)
+    return L.apply_norm(x, p["enc_final_norm"], cfg)
+
+
+def _cross_kv(lp: Params, enc_out: jnp.ndarray, cfg: ModelConfig):
+    B, S, _ = enc_out.shape
+    hd = cfg.resolved_head_dim()
+    K = cfg.num_kv_heads
+    k = (enc_out @ lp["wk"]).reshape(B, S, K, hd)
+    v = (enc_out @ lp["wv"]).reshape(B, S, K, hd)
+    if cfg.qkv_bias:
+        k = k + lp["bk"].reshape(K, hd)
+        v = v + lp["bv"].reshape(K, hd)
+    return k, v
+
+
+def _cross_q(lp: Params, x: jnp.ndarray, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    H = cfg.num_heads
+    q = (x @ lp["wq"]).reshape(B, S, H, hd)
+    return q
+
+
+def run_decoder(p: Params, x: jnp.ndarray, enc_out: Optional[jnp.ndarray],
+                cfg: ModelConfig, mode: str, positions: jnp.ndarray,
+                caches: Optional[Any] = None, pos=None
+                ) -> Tuple[jnp.ndarray, Optional[Any]]:
+    """x: (B, S_dec, D) embedded tokens (+positions added by caller)."""
+    want_cache = mode in ("prefill", "decode")
+
+    def body(h, xs):
+        lp, lc = xs
+        s_in = L.apply_norm(h, lp["self_norm"], cfg)
+        q, k, v = L.qkv_project(lp["self_attn"], s_in, cfg, positions)
+        new_cache = None
+        if mode == "decode":
+            kc = jax.lax.dynamic_update_slice(lc["k"], k, (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(lc["v"], v, (0, pos, 0, 0))
+            kc = shard(kc, "batch", "seq", None, None)
+            vc = shard(vc, "batch", "seq", None, None)
+            a = L.decode_attention_xla(q, kc, vc, pos)
+            xk, xv = lc["xk"], lc["xv"]
+            new_cache = {"k": kc, "v": vc, "xk": xk, "xv": xv}
+        else:
+            a = L.flash_attention_xla(q, k, v, causal=True, block_q=cfg.attn_block_q)
+            if mode == "prefill":
+                xk, xv = _cross_kv(lp["cross_attn"], enc_out, cfg)
+                new_cache = {"k": shard(k, "batch", "seq", None, None),
+                             "v": shard(v, "batch", "seq", None, None),
+                             "xk": xk, "xv": xv}
+            else:
+                xk, xv = _cross_kv(lp["cross_attn"], enc_out, cfg)
+        h = h + L.attn_out(lp["self_attn"], a)
+
+        c_in = L.apply_norm(h, lp["cross_norm"], cfg)
+        cq = _cross_q(lp["cross_attn"], c_in, cfg)
+        ca = L.flash_attention_xla(cq, xk, xv, causal=False, block_q=cfg.attn_block_q)
+        h = h + L.attn_out(lp["cross_attn"], ca)
+
+        m_in = L.apply_norm(h, lp["mlp_norm"], cfg)
+        h = h + L.mlp_apply(lp["mlp"], m_in, cfg)
+        return h, (new_cache if want_cache else None)
+
+    if cfg.remat and mode == "train":
+        from repro.models.transformer import _remat_policy
+        body = jax.checkpoint(body, prevent_cse=False,
+                              policy=_remat_policy(cfg))
+    if cfg.scan_layers:
+        x, out_caches = jax.lax.scan(body, x, (p["dec"], caches))
+    else:
+        collected = []
+        for li in range(cfg.num_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[li], p["dec"])
+            lc = None if caches is None else jax.tree_util.tree_map(
+                lambda a: a[li], caches)
+            x, oc = body(x, (lp, lc))
+            collected.append(oc)
+        out_caches = (jax.tree_util.tree_map(lambda *a: jnp.stack(a), *collected)
+                      if want_cache else None)
+    return x, out_caches

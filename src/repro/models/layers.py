@@ -1,0 +1,246 @@
+"""Core layers: norms, RoPE, attention (flash-chunked XLA path + decode),
+MLPs and initializers.  Pure functions over param dicts; dtype policy is
+bf16 storage/compute with f32 softmax/norm accumulations.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import shard
+
+Params = Dict[str, jnp.ndarray]
+
+
+def padded_vocab(v: int, multiple: int = 128) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def padded_experts(e: int, multiple: int = 16) -> int:
+    return ((e + multiple - 1) // multiple) * multiple
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def stacked(key, n: int, shape, dtype, scale: float) -> jnp.ndarray:
+    return (jax.random.normal(key, (n, *shape), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, p: Params, cfg: ModelConfig) -> jnp.ndarray:
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_params(cfg: ModelConfig, n: Optional[int], dim: int, with_bias: bool = False) -> Params:
+    shape = (dim,) if n is None else (n, dim)
+    p = {"scale": jnp.ones(shape, jnp.float32)}
+    if with_bias:
+        p["bias"] = jnp.zeros(shape, jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (hd/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def attn_params(key, cfg: ModelConfig, n: int, dtype) -> Params:
+    D, hd = cfg.d_model, cfg.resolved_head_dim()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    p: Params = {
+        "wq": stacked(ks[0], n, (D, H * hd), dtype, s),
+        "wk": stacked(ks[1], n, (D, K * hd), dtype, s),
+        "wv": stacked(ks[2], n, (D, K * hd), dtype, s),
+        "wo": stacked(ks[3], n, (H * hd, D), dtype, 1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n, H * hd), dtype)
+        p["bk"] = jnp.zeros((n, K * hd), dtype)
+        p["bv"] = jnp.zeros((n, K * hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((n, hd), jnp.float32)
+        p["k_norm"] = jnp.ones((n, hd), jnp.float32)
+    return p
+
+
+def qkv_project(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,K,hd); RoPE + qk_norm applied."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, None, None)
+    v = shard(v, "batch", None, None, None)
+    return q, k, v
+
+
+def _chunk_attend(qc: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  mask: Optional[jnp.ndarray], scale: float) -> jnp.ndarray:
+    """qc: (B, bq, K, G, hd); k/v: (B, Skv, K, hd); mask: (bq, Skv) additive or None.
+
+    Full-KV softmax per query chunk: never materializes Sq x Skv, only bq x Skv.
+    """
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qc, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        scores = scores + mask  # (B,K,G,bq,Skv) + (bq,Skv)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out
+
+
+def flash_attention_xla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool, q_offset: int = 0,
+                        block_q: int = 256) -> jnp.ndarray:
+    """Chunked-query attention (XLA path of the Pallas flash kernel).
+
+    q: (B, Sq, H, hd), k/v: (B, Skv, K, hd) with H = G*K.  Scans over query
+    blocks so peak memory is O(bq * Skv) not O(Sq * Skv).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, K, G, hd)
+
+    if Sq <= block_q:
+        mask = None
+        if causal:
+            qpos = jnp.arange(Sq) + q_offset
+            mask = jnp.where(qpos[:, None] >= jnp.arange(Skv)[None, :], 0.0, -1e30)
+        out = _chunk_attend(qg, k, v, mask, scale)
+        return out.reshape(B, Sq, H, hd)
+
+    if Sq % block_q:  # pad queries to a block multiple; slice the result off
+        pad = block_q - Sq % block_q
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = flash_attention_xla(qp, k, v, causal, q_offset, block_q)
+        return out[:, :Sq]
+    nq = Sq // block_q
+    qs = qg.reshape(B, nq, block_q, K, G, hd)
+
+    def body(carry, xs):
+        qc, start = xs
+        mask = None
+        if causal:
+            qpos = start + jnp.arange(block_q) + q_offset
+            mask = jnp.where(qpos[:, None] >= jnp.arange(Skv)[None, :], 0.0, -1e30)
+        return carry, _chunk_attend(qc, k, v, mask, scale)
+
+    starts = jnp.arange(nq) * block_q
+    _, outs = jax.lax.scan(body, None, (jnp.moveaxis(qs, 1, 0), starts))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, K, G, hd)
+    return out.reshape(B, Sq, H, hd)
+
+
+def decode_attention_xla(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                         pos: jnp.ndarray, f32_scores: bool = True) -> jnp.ndarray:
+    """Single-token decode attention against a (possibly seq-sharded) cache.
+
+    q: (B, 1, H, hd); caches: (B, Smax, K, hd); pos: scalar current length.
+    Softmax over the cache sequence dim — under GSPMD with the cache sharded on
+    `seq`->model, the max/sum reductions lower to small all-reduces
+    (flash-decoding at the collective level).
+    """
+    B, _, H, hd = q.shape
+    _, Smax, K, _ = k_cache.shape
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, K, G, hd)
+    acc = jnp.float32 if f32_scores else k_cache.dtype
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                        preferred_element_type=acc).astype(jnp.float32) * scale
+    valid = (jnp.arange(Smax) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def attn_out(p: Params, attn: jnp.ndarray) -> jnp.ndarray:
+    B, S, H, hd = attn.shape
+    out = attn.reshape(B, S, H * hd) @ p["wo"]
+    return shard(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_params(key, cfg: ModelConfig, n: int, d_ff: int, dtype) -> Params:
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(D), 1.0 / math.sqrt(d_ff)
+    p: Params = {
+        "wi": stacked(ks[0], n, (D, d_ff), dtype, s_in),
+        "wo": stacked(ks[1], n, (d_ff, D), dtype, s_out),
+    }
+    if cfg.act == "silu":
+        p["wg"] = stacked(ks[2], n, (D, d_ff), dtype, s_in)
+    return p
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    h = x @ p["wi"]
+    if cfg.act == "silu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "batch", None, "mlp")
+    out = h @ p["wo"]
+    return shard(out, "batch", None, None)

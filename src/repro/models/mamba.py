@@ -1,0 +1,210 @@
+"""Mamba2 block (State Space Duality, arXiv:2405.21060), TPU-adapted.
+
+The SSD algorithm is re-phrased for the MXU: sequences are tiled into chunks
+of ``cfg.ssm_chunk`` tokens; the intra-chunk term is a masked matmul
+(attention-like, chunk x chunk — MXU-friendly) and the inter-chunk term is a
+(B,H,N,P) state recurrence carried by ``lax.scan``.  Peak memory is
+O(L_chunk^2) per chunk, never O(S^2): the 500k-token cell is linear.
+
+Decode is a single-token state update: O(1) in context length, which is why
+the ssm/hybrid archs own the ``long_500k`` cell.
+
+Param layout (per layer, stacked on the leading scan dim):
+  in_proj_{z,x}: (D, d_inner)       gate / value streams
+  in_proj_{b,c}: (D, N)             input/output SSM projections (G=1 group)
+  in_proj_dt:    (D, H)             per-head timestep
+  conv_{x,b,c}:  (k, dim)           depthwise causal conv weights
+  dt_bias, a_log, d: (H,)           timestep bias, decay, skip
+  norm_scale:    (d_inner,)         gated RMSNorm
+  out_proj:      (d_inner, D)
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import rms_norm, stacked
+
+Params = Dict[str, jnp.ndarray]
+
+
+def mamba_params(key, cfg: ModelConfig, n: int, dtype) -> Params:
+    D, din, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(D)
+    dt = jnp.exp(jax.random.uniform(ks[6], (n, H), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    return {
+        "in_proj_z": stacked(ks[0], n, (D, din), dtype, s),
+        "in_proj_x": stacked(ks[1], n, (D, din), dtype, s),
+        "in_proj_b": stacked(ks[2], n, (D, N), dtype, s),
+        "in_proj_c": stacked(ks[3], n, (D, N), dtype, s),
+        "in_proj_dt": stacked(ks[4], n, (D, H), dtype, s),
+        "conv_x": stacked(ks[5], n, (k, din), dtype, 1.0 / math.sqrt(k)),
+        "conv_b": stacked(ks[5], n, (k, N), dtype, 1.0 / math.sqrt(k)),
+        "conv_c": stacked(ks[5], n, (k, N), dtype, 1.0 / math.sqrt(k)),
+        "dt_bias": jnp.log(jnp.expm1(dt)),                     # softplus^-1
+        "a_log": jnp.log(jnp.ones((n, H), jnp.float32) * 1.0),
+        "d": jnp.ones((n, H), jnp.float32),
+        "norm_scale": jnp.ones((n, din), jnp.float32),
+        "out_proj": stacked(ks[7], n, (din, D), dtype, 1.0 / math.sqrt(din)),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via k shifted adds.  x: (B,S,C), w: (k,C)."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        out = out + shifted * w[k - 1 - i]
+    return out
+
+
+def _conv_step(state: jnp.ndarray, xt: jnp.ndarray, w: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step.  state: (B, k-1, C) past inputs; xt: (B, C)."""
+    window = jnp.concatenate([state, xt[:, None, :]], axis=1)  # (B,k,C)
+    out = jnp.einsum("bkc,kc->bc", window, w)
+    return window[:, 1:, :], out
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                init_state: jnp.ndarray = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan (pure-XLA path; the Pallas kernel mirrors this).
+
+    x: (B,S,H,P) values; dt: (B,S,H) >0; A: (H,) <0; Bm/Cm: (B,S,N).
+    Returns (y: (B,S,H,P), final_state: (B,H,N,P)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if S % chunk:  # zero-pad the tail: dt=0 => no contribution, state frozen
+        pad = chunk - S % chunk
+        pad2 = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (t.ndim - 2))
+        y, final = ssd_chunked(pad2(x), pad2(dt), A, pad2(Bm), pad2(Cm),
+                               chunk, init_state)
+        return y[:, :S], final
+    nc = S // chunk
+    L = chunk
+
+    dA = dt * A[None, None, :]                       # (B,S,H) negative
+    xw = x * dt[..., None]                           # dt-weighted input
+    r = lambda t: t.reshape(Bsz, nc, L, *t.shape[2:])
+    dA_c, xw_c, B_c, C_c = r(dA), r(xw), r(Bm), r(Cm)
+
+    cum = jnp.cumsum(dA_c, axis=2)                   # (B,nc,L,H)
+    seg_sum = cum[:, :, -1:, :]                      # total decay per chunk
+
+    # ---- intra-chunk (quadratic in L only) --------------------------------
+    # decay(l,s) = exp(cum[l] - cum[s]) for s <= l
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,L,L,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bcln,bcsn->bcls", C_c.astype(jnp.float32),
+                    B_c.astype(jnp.float32))                  # (B,nc,L,L)
+    M = cb[..., None] * decay                                 # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", M, xw_c.astype(jnp.float32))
+
+    # ---- chunk states ------------------------------------------------------
+    decay_to_end = jnp.exp(seg_sum - cum)                     # (B,nc,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchnp",
+                        B_c.astype(jnp.float32), decay_to_end,
+                        xw_c.astype(jnp.float32))             # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def step(carry, xs):
+        st, seg = xs                                           # (B,H,N,P), (B,1,H)
+        prev = carry
+        new = prev * jnp.exp(seg)[:, 0, :, None, None] + st
+        return new, prev
+
+    final, prevs = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(seg_sum, 1, 0)))
+    prev_states = jnp.moveaxis(prevs, 0, 1)                   # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcln,bclh,bchnp->bclhp",
+                         C_c.astype(jnp.float32), jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state: jnp.ndarray, xt: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             Bt: jnp.ndarray, Ct: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode token.  state: (B,H,N,P); xt: (B,H,P); dt: (B,H); Bt/Ct: (B,N)."""
+    dA = jnp.exp(dt * A[None, :])                              # (B,H)
+    upd = jnp.einsum("bn,bhp->bhnp", Bt.astype(jnp.float32),
+                     (xt * dt[..., None]).astype(jnp.float32))
+    new = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Ct.astype(jnp.float32), new)
+    return new, y.astype(xt.dtype)
+
+
+def _project(p: Params, u: jnp.ndarray, cfg: ModelConfig):
+    z = u @ p["in_proj_z"]
+    x = u @ p["in_proj_x"]
+    b = u @ p["in_proj_b"]
+    c = u @ p["in_proj_c"]
+    dt = (u @ p["in_proj_dt"]).astype(jnp.float32)
+    return z, x, b, c, dt
+
+
+def mamba_apply(p: Params, u: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence (train/prefill).  u: (B,S,D) -> (B,S,D), carry states."""
+    Bsz, S, D = u.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, x, b, c, dt = _project(p, u, cfg)
+    x = _causal_conv(jax.nn.silu(x), p["conv_x"])
+    b = _causal_conv(jax.nn.silu(b), p["conv_b"])
+    c = _causal_conv(jax.nn.silu(c), p["conv_c"])
+    x = shard(x.reshape(Bsz, S, H, P), "batch", None, "heads", None)
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["a_log"])
+    y, final = ssd_chunked(x, dt, A, b, c, cfg.ssm_chunk)
+    y = y + x * p["d"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    # decode cache: conv windows (last k-1 activated pre-conv inputs) + state
+    k = cfg.ssm_conv
+    zx = jax.nn.silu(u @ p["in_proj_x"])[:, -(k - 1):, :]
+    zb = jax.nn.silu(u @ p["in_proj_b"])[:, -(k - 1):, :]
+    zc = jax.nn.silu(u @ p["in_proj_c"])[:, -(k - 1):, :]
+    cache = {"ssm": final, "conv_x": zx, "conv_b": zb, "conv_c": zc}
+    return shard(out, "batch", None, None), cache
+
+
+def mamba_decode(p: Params, cache: Dict, u: jnp.ndarray, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """Single token.  u: (B,1,D)."""
+    Bsz = u.shape[0]
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    ut = u[:, 0, :]
+    z = ut @ p["in_proj_z"]
+    x = jax.nn.silu(ut @ p["in_proj_x"])
+    b = jax.nn.silu(ut @ p["in_proj_b"])
+    c = jax.nn.silu(ut @ p["in_proj_c"])
+    dt = (ut @ p["in_proj_dt"]).astype(jnp.float32)
+    cx, x = _conv_step(cache["conv_x"], x, p["conv_x"])
+    cb, b = _conv_step(cache["conv_b"], b, p["conv_b"])
+    cc, c = _conv_step(cache["conv_c"], c, p["conv_c"])
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, :])
+    A = -jnp.exp(p["a_log"])
+    xh = x.reshape(Bsz, H, P)
+    new_state, y = ssd_step(cache["ssm"], xh, dt, A, b, c)
+    y = y + xh * p["d"][None, :, None].astype(xh.dtype)
+    y = y.reshape(Bsz, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"ssm": new_state, "conv_x": cx, "conv_b": cb, "conv_c": cc}

@@ -1,0 +1,183 @@
+"""Public model API: build_model(cfg) -> Model with init / train_loss /
+prefill / decode, plus abstract input specs for the multi-pod dry-run.
+
+Batch layouts
+  train (LM):      {tokens (B,S), labels (B,S), loss_mask (B,S)}
+  train (vlm):     {tokens (B,S_text), patch_embeds (B,P,D), labels, loss_mask}
+  train (encdec):  {frames (B,F,D), tokens (B,S), labels, loss_mask}
+  prefill:         same inputs minus labels -> (caches, last_logits)
+  decode:          (params, caches, token (B,1), pos ()) -> (caches, logits)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.distributed.sharding import shard
+from repro.models import encdec as E
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    # ------------------------------------------------------------- params
+    def init(self, rng, max_seq: int = 0) -> Params:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        p = T.embed_params(k1, cfg, self.dtype, max_seq=max_seq)
+        if cfg.family == "encdec":
+            p["layers"] = E.encdec_stack_params(k2, cfg, self.dtype)
+        else:
+            p["layers"] = T.stack_params(k2, cfg, self.dtype)
+        return p
+
+    def init_abstract(self, max_seq: int = 0) -> Params:
+        return jax.eval_shape(
+            lambda k: self.init(k, max_seq=max_seq), jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------ forward
+    def _embed_lm_inputs(self, p: Params, batch: Dict[str, jnp.ndarray]
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (x, positions) for decoder-only families (incl. vlm)."""
+        cfg = self.cfg
+        x = T.embed_tokens(p, batch["tokens"], cfg)
+        if cfg.family == "vlm":
+            pe = batch["patch_embeds"].astype(x.dtype) @ p["projector"]["kernel"]
+            pe = shard(pe, "batch", None, None)
+            x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        x = T.add_positions(p, x, 0)
+        return x, positions
+
+    def train_loss(self, p: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = E.run_encoder(p["layers"], batch["frames"].astype(self.dtype), cfg)
+            x = T.embed_tokens(p, batch["tokens"], cfg)
+            x = T.add_positions(p, x, 0)
+            positions = jnp.arange(x.shape[1])
+            x, _ = E.run_decoder(p["layers"], x, enc_out, cfg, "train", positions)
+            return T.lm_loss(p, x, batch["labels"], batch["loss_mask"], cfg)
+        x, positions = self._embed_lm_inputs(p, batch)
+        x, _ = T.run_stack(p["layers"], x, cfg, "train", positions)
+        if cfg.family == "vlm":  # loss only on the text suffix
+            n_patch = batch["patch_embeds"].shape[1]
+            x = x[:, n_patch:, :]
+        return T.lm_loss(p, x, batch["labels"], batch["loss_mask"], cfg)
+
+    def prefill(self, p: Params, batch: Dict[str, jnp.ndarray]
+                ) -> Tuple[Any, jnp.ndarray]:
+        """Builds caches; returns (caches, last-position logits)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = E.run_encoder(p["layers"], batch["frames"].astype(self.dtype), cfg)
+            x = T.embed_tokens(p, batch["tokens"], cfg)
+            x = T.add_positions(p, x, 0)
+            positions = jnp.arange(x.shape[1])
+            x, caches = E.run_decoder(p["layers"], x, enc_out, cfg, "prefill", positions)
+        else:
+            x, positions = self._embed_lm_inputs(p, batch)
+            x, caches = T.run_stack(p["layers"], x, cfg, "prefill", positions)
+        logits = T.unembed(p, x[:, -1:, :], cfg)
+        return caches, logits
+
+    def decode(self, p: Params, caches: Any, token: jnp.ndarray, pos: jnp.ndarray
+               ) -> Tuple[Any, jnp.ndarray]:
+        """token: (B,1) int32; pos: scalar int32 (current length)."""
+        cfg = self.cfg
+        x = T.embed_tokens(p, token, cfg)
+        x = T.add_positions(p, x, pos)
+        positions = pos[None] if pos.ndim == 0 else pos
+        if cfg.family == "encdec":
+            x, caches = E.run_decoder(p["layers"], x, None, cfg, "decode",
+                                      positions, caches, pos)
+        else:
+            x, caches = T.run_stack(p["layers"], x, cfg, "decode",
+                                    positions, caches, pos)
+        logits = T.unembed(p, x, cfg)
+        return caches, logits
+
+    # ------------------------------------------------- abstract cache spec
+    def cache_spec(self, batch_size: int, max_seq: int) -> Any:
+        """ShapeDtypeStruct pytree of decode caches (dry-run inputs)."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim()
+        K = cfg.num_kv_heads
+        dt = self.dtype
+        f32 = jnp.float32
+
+        def attn_cache():
+            return {"k": jax.ShapeDtypeStruct((batch_size, max_seq, K, hd), dt),
+                    "v": jax.ShapeDtypeStruct((batch_size, max_seq, K, hd), dt)}
+
+        def mamba_cache():
+            return {
+                "ssm": jax.ShapeDtypeStruct(
+                    (batch_size, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), f32),
+                "conv_x": jax.ShapeDtypeStruct((batch_size, cfg.ssm_conv - 1, cfg.d_inner), dt),
+                "conv_b": jax.ShapeDtypeStruct((batch_size, cfg.ssm_conv - 1, cfg.ssm_state), dt),
+                "conv_c": jax.ShapeDtypeStruct((batch_size, cfg.ssm_conv - 1, cfg.ssm_state), dt),
+            }
+
+        def stackdim(tree, n):
+            return jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), tree)
+
+        if cfg.family == "encdec":
+            c = attn_cache()
+            c["xk"] = jax.ShapeDtypeStruct((batch_size, cfg.enc_frames, K, hd), dt)
+            c["xv"] = jax.ShapeDtypeStruct((batch_size, cfg.enc_frames, K, hd), dt)
+            return stackdim(c, cfg.num_layers)
+
+        plan = T.layer_plan(cfg)
+        n = T.n_periods(cfg)
+        out = {}
+        for i, (mixer, _ffn) in enumerate(plan):
+            c = attn_cache() if mixer == "attn" else mamba_cache()
+            out[f"sub{i}"] = stackdim(c, n)
+        return out
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """Abstract (ShapeDtypeStruct) inputs for one dry-run cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, i32)
+        f = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.bfloat16)
+
+        if shape.kind == "decode":
+            return {"caches": self.cache_spec(B, S),
+                    "token": tok(B, 1),
+                    "pos": jax.ShapeDtypeStruct((), i32)}
+
+        if cfg.family == "encdec":
+            batch = {"frames": f(B, cfg.enc_frames, cfg.d_model), "tokens": tok(B, S)}
+        elif cfg.family == "vlm":
+            s_text = S - cfg.vision_patches
+            batch = {"tokens": tok(B, s_text),
+                     "patch_embeds": f(B, cfg.vision_patches, cfg.d_model)}
+        else:
+            batch = {"tokens": tok(B, S)}
+        if shape.kind == "train":
+            n_lab = batch["tokens"].shape[1]
+            batch["labels"] = tok(B, n_lab)
+            batch["loss_mask"] = jax.ShapeDtypeStruct((B, n_lab), jnp.float32)
+        return {"batch": batch}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts layer.
+
+Three implementations behind one interface (``cfg.moe_impl``):
+
+* ``sort``  — sort/capacity dispatch expressed in plain XLA ops; GSPMD
+              partitions the expert dim over the `model` axis.  This is the
+              production *baseline* measured in EXPERIMENTS §Roofline.
+* ``ep``    — explicit expert parallelism with ``shard_map`` + ``all_to_all``
+              (the hillclimbed version; see distributed/ep_moe.py).
+* ``dense`` — GShard-style one-hot dispatch einsums.  O(T*E*C) FLOPs — only
+              for tiny configs; serves as the correctness oracle in tests.
+
+Routing is top-k softmax gating (probs renormalized over the chosen k,
+matching Qwen-MoE / Mixtral).  Experts are padded to a multiple of 16 so the
+expert dim shards evenly; padded experts get -inf router logits.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init, padded_experts, stacked
+
+Params = Dict[str, jnp.ndarray]
+
+
+def moe_params(key, cfg: ModelConfig, n: int, dtype) -> Params:
+    D = cfg.d_model
+    Fe = cfg.d_ff_expert or cfg.d_ff
+    E = padded_experts(cfg.num_experts)
+    ks = jax.random.split(key, 7)
+    s_in, s_out = 1.0 / math.sqrt(D), 1.0 / math.sqrt(Fe)
+    p: Params = {
+        "router": stacked(ks[0], n, (D, cfg.num_experts), jnp.float32, s_in),
+        "wi": stacked(ks[1], n, (E, D, Fe), dtype, s_in),
+        "wg": stacked(ks[2], n, (E, D, Fe), dtype, s_in),
+        "wo": stacked(ks[3], n, (E, Fe, D), dtype, s_out),
+    }
+    if cfg.num_shared_experts:
+        Fs = cfg.num_shared_experts * Fe
+        p["shared_wi"] = stacked(ks[4], n, (D, Fs), dtype, s_in)
+        p["shared_wg"] = stacked(ks[5], n, (D, Fs), dtype, s_in)
+        p["shared_wo"] = stacked(ks[6], n, (Fs, D), dtype, s_out)
+        p["shared_gate"] = stacked(ks[4], n, (D,), jnp.float32, s_in)
+    return p
+
+
+def _route(p: Params, xf: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """xf: (T, D) -> (weights (T,k), expert ids (T,k)). Renormalized top-k."""
+    logits = (xf.astype(jnp.float32) @ p["router"])  # (T, E_real)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    return top_p, top_i
+
+
+def _shared_expert(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["shared_wg"]) * (x @ p["shared_wi"])
+    h = shard(h, "batch", None, "mlp")
+    out = h @ p["shared_wo"]
+    gate = jax.nn.sigmoid((x.astype(jnp.float32) @ p["shared_gate"]))[..., None]
+    return (out.astype(jnp.float32) * gate).astype(x.dtype)
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    E = padded_experts(cfg.num_experts)
+    c = int(math.ceil(tokens * cfg.top_k * cfg.capacity_factor / E))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_apply_sort(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Sort/capacity dispatch (GSPMD baseline). x: (B, S, D)."""
+    B, S, D = x.shape
+    T = B * S
+    E = padded_experts(cfg.num_experts)
+    C = capacity(cfg, T)
+    xf = x.reshape(T, D)
+
+    w, idx = _route(p, xf, cfg)                     # (T,k)
+    k = cfg.top_k
+    flat_e = idx.reshape(-1)                        # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)           # (T*k,)
+    flat_w = w.reshape(-1)
+
+    order = jnp.argsort(flat_e)                     # stable
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    w_sorted = flat_w[order]
+
+    counts = jnp.bincount(flat_e, length=E)         # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[e_sorted]      # slot within expert
+    keep = pos < C
+    pos = jnp.where(keep, pos, 0)
+
+    # dispatch: (E, C, D) buffers, expert dim sharded over `model`
+    buf = jnp.zeros((E, C, D), x.dtype)
+    src = jnp.where(keep[:, None], xf[t_sorted], 0)
+    buf = buf.at[e_sorted, pos].add(src, mode="drop")
+    buf = shard(buf, "expert", None, None)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    h = jax.nn.silu(g) * h
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    out_e = shard(out_e, "expert", None, None)
+
+    # combine
+    gathered = out_e[e_sorted, pos]                 # (T*k, D)
+    contrib = gathered * (w_sorted * keep)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[t_sorted].add(contrib)
+    y = shard(y.reshape(B, S, D), "batch", None, None)
+
+    if cfg.num_shared_experts:
+        y = y + _shared_expert(p, x, cfg)
+    return y
+
+
+def moe_apply_dense(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """GShard one-hot dispatch — tiny configs / correctness oracle only."""
+    B, S, D = x.shape
+    T = B * S
+    E = padded_experts(cfg.num_experts)
+    xf = x.reshape(T, D)
+    w, idx = _route(p, xf, cfg)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)       # (T,k,E)
+    comb = jnp.einsum("tk,tke->te", w, onehot)               # (T,E)
+    h = jnp.einsum("td,edf->tef", xf, p["wi"])
+    g = jnp.einsum("td,edf->tef", xf, p["wg"])
+    out_e = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * h, p["wo"])
+    y = jnp.einsum("ted,te->td", out_e.astype(jnp.float32), comb).astype(x.dtype)
+    y = y.reshape(B, S, D)
+    if cfg.num_shared_experts:
+        y = y + _shared_expert(p, x, cfg)
+    return y
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.moe_impl == "dense":
+        return moe_apply_dense(p, x, cfg)
+    if cfg.moe_impl == "ep":
+        from repro.distributed.ep_moe import moe_apply_ep
+        return moe_apply_ep(p, x, cfg)
+    return moe_apply_sort(p, x, cfg)

@@ -1,0 +1,95 @@
+"""Fault tolerance + straggler mitigation for the training/serving runtime.
+
+* ``StragglerWatchdog`` — per-step latency tracker; flags steps beyond
+  `factor` x a rolling p90 (on real pods: triggers hot-spare swap / restart of
+  the slow host; here: recorded + surfaced to the driver, unit-tested).
+* ``FailureInjector`` — deterministic fault injection for tests/drivers
+  (``train.py --fail-at-step N`` exercises the restart path end to end).
+* ``HeartbeatRegistry`` — serving-side liveness: engines heartbeat; requests
+  owned by a dead engine are re-queued (at-least-once, idempotent by id).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Set
+
+
+class StragglerWatchdog:
+    def __init__(self, window: int = 50, factor: float = 2.0,
+                 min_samples: int = 10):
+        self.window = window
+        self.factor = factor
+        self.min_samples = min_samples
+        self.times: Deque[float] = deque(maxlen=window)
+        self.flagged: List[int] = []
+        self.step = 0
+
+    def record(self, step_time: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.step += 1
+        is_straggler = False
+        if len(self.times) >= self.min_samples:
+            ts = sorted(self.times)
+            p90 = ts[int(0.9 * (len(ts) - 1))]
+            if step_time > self.factor * p90:
+                self.flagged.append(self.step)
+                is_straggler = True
+        self.times.append(step_time)
+        return is_straggler
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class FailureInjector:
+    def __init__(self, fail_at_step: Optional[int] = None,
+                 fail_once: bool = True):
+        self.fail_at_step = fail_at_step
+        self.fail_once = fail_once
+        self.fired = False
+
+    def maybe_fail(self, step: int) -> None:
+        if (self.fail_at_step is not None and step == self.fail_at_step
+                and not (self.fail_once and self.fired)):
+            self.fired = True
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class EngineInfo:
+    engine_id: str
+    last_beat: float
+    inflight: Set[str] = field(default_factory=set)
+
+
+class HeartbeatRegistry:
+    def __init__(self, timeout_s: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self.engines: Dict[str, EngineInfo] = {}
+
+    def beat(self, engine_id: str) -> None:
+        e = self.engines.setdefault(engine_id,
+                                    EngineInfo(engine_id, self.clock()))
+        e.last_beat = self.clock()
+
+    def assign(self, engine_id: str, req_id: str) -> None:
+        self.engines[engine_id].inflight.add(req_id)
+
+    def complete(self, engine_id: str, req_id: str) -> None:
+        self.engines[engine_id].inflight.discard(req_id)
+
+    def reap_dead(self) -> List[str]:
+        """Returns request ids orphaned by dead engines (to re-queue)."""
+        now = self.clock()
+        orphans: List[str] = []
+        for eid in list(self.engines):
+            e = self.engines[eid]
+            if now - e.last_beat > self.timeout_s:
+                orphans.extend(sorted(e.inflight))
+                del self.engines[eid]
+        return orphans

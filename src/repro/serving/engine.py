@@ -1,0 +1,186 @@
+"""Continuous-batching JAX inference engine (real execution, small models).
+
+Slot-based: up to `max_slots` concurrent requests; each step admits the
+highest-priority waiting request (priority = HermesScheduler rank when
+attached, else FCFS) and decodes every active slot by one token.  Warmable
+contents are real: prefix KV caches (computed prefills, stored in the
+PrefixCache arena) and LoRA adapters (merged-weight pool).  A cold prefix
+costs the full prefix prefill on the critical path; a warm one costs a cache
+copy — exactly the Fig. 2 trade the paper's prewarming removes.
+
+This engine is the small-scale twin of the simulator: same scheduler, same
+HermesLet decisions, real tensors.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.serving.kvcache import PagedAllocator, PrefixCache
+from repro.serving.lora import LoraPool
+
+
+@dataclass
+class Request:
+    req_id: str
+    prompt: List[int]
+    max_new_tokens: int = 16
+    app_id: str = ""
+    lora_id: str = ""
+    prefix_id: str = ""
+    eos_id: int = -1
+    submitted: float = 0.0
+    # results
+    output: List[int] = field(default_factory=list)
+    ttft: Optional[float] = None
+    finished: Optional[float] = None
+    prefix_hit: Optional[bool] = None
+
+
+@dataclass
+class _Slot:
+    req: Request
+    caches: Any
+    pos: int
+    next_token: jnp.ndarray
+
+
+class InferenceEngine:
+    def __init__(self, model: Model, params: Any, *, max_slots: int = 4,
+                 max_seq: int = 256, kv_blocks: int = 512,
+                 block_size: int = 16, lora_capacity: int = 4,
+                 prefix_prompts: Optional[Dict[str, List[int]]] = None):
+        self.model = model
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.lora = LoraPool(params, capacity=lora_capacity)
+        self.alloc = PagedAllocator(kv_blocks, block_size)
+        self.prefix_prompts = prefix_prompts or {}
+        self.prefix = PrefixCache(self.alloc, self._compute_prefix)
+        self.queue: List[Request] = []
+        self.slots: List[Optional[_Slot]] = [None] * max_slots
+        self.done: List[Request] = []
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode)
+        self.steps = 0
+
+    # ------------------------------------------------------------- helpers
+    def _compute_prefix(self, prefix_id: str) -> Tuple[Any, int]:
+        toks = self.prefix_prompts[prefix_id]
+        caches, _ = self._prefill(self.lora.base,
+                                  {"tokens": jnp.asarray([toks], jnp.int32)})
+        return jax.block_until_ready(self._pad_caches(caches, len(toks))), len(toks)
+
+    def _pad_caches(self, caches: Any, cur_len: int) -> Any:
+        pad = self.max_seq - cur_len
+
+        def one(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            if name in ("k", "v") and pad > 0:   # (n, B, S, K, hd)
+                cfgd = [(0, 0)] * leaf.ndim
+                cfgd[2] = (0, pad)
+                return jnp.pad(leaf, cfgd)
+            return leaf
+        return jax.tree_util.tree_map_with_path(one, caches)
+
+    # ----------------------------------------------------------- interface
+    def prewarm_prefix(self, prefix_id: str) -> None:
+        self.prefix.load(prefix_id, speculative=True)
+
+    def prewarm_lora(self, lora_id: str) -> None:
+        self.lora.load(lora_id, speculative=True)
+
+    def submit(self, req: Request) -> None:
+        req.submitted = req.submitted or time.monotonic()
+        self.queue.append(req)
+
+    def _admit(self, req: Request, now: float) -> bool:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return False
+        params = self.lora.get(req.lora_id)
+        prefix_len = 0
+        caches = None
+        if req.prefix_id:
+            entry = self.prefix.lookup(req.prefix_id)
+            req.prefix_hit = entry is not None
+            if entry is None:  # cold: compute the prefix on the critical path
+                self.prefix.load(req.prefix_id)
+                entry = self.prefix.lookup(req.prefix_id)
+            prefix_len = entry.length
+            caches = jax.tree_util.tree_map(jnp.copy, entry.caches)
+        total = prefix_len + len(req.prompt) + req.max_new_tokens
+        if total > self.max_seq or not self.alloc.can_allocate(total):
+            return False
+        self.alloc.allocate(f"req:{req.req_id}", total)
+
+        if caches is None:
+            c, logits = self._prefill(
+                params, {"tokens": jnp.asarray([req.prompt], jnp.int32)})
+            caches = self._pad_caches(c, len(req.prompt))
+            pos = len(req.prompt)
+            nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        else:
+            # continue from the warm prefix: feed prompt tokens via decode
+            pos = prefix_len
+            nxt = None
+            for t in req.prompt:
+                caches, logits = self._decode(
+                    params, caches, jnp.asarray([[t]], jnp.int32),
+                    jnp.asarray(pos, jnp.int32))
+                pos += 1
+            nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        req.ttft = time.monotonic() - req.submitted
+        self.slots[free[0]] = _Slot(req, caches, pos, nxt)
+        return True
+
+    def _finish(self, i: int, now: float) -> None:
+        slot = self.slots[i]
+        slot.req.finished = now
+        self.alloc.release(f"req:{slot.req.req_id}")
+        self.done.append(slot.req)
+        self.slots[i] = None
+
+    def step(self, rank_fn: Optional[Callable[[Request], float]] = None) -> bool:
+        """One engine iteration; returns False when fully idle."""
+        now = time.monotonic()
+        self.steps += 1
+        # admission (highest priority first)
+        if self.queue:
+            self.queue.sort(key=(lambda r: (rank_fn(r), r.submitted)) if rank_fn
+                            else (lambda r: r.submitted))
+            while self.queue and any(s is None for s in self.slots):
+                if not self._admit(self.queue[0], now):
+                    break
+                self.queue.pop(0)
+        # decode every active slot one token
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            req = slot.req
+            tok = int(slot.next_token)
+            req.output.append(tok)
+            if (len(req.output) >= req.max_new_tokens or tok == req.eos_id
+                    or slot.pos + 1 >= self.max_seq):
+                self._finish(i, time.monotonic())
+                continue
+            params = self.lora.get(req.lora_id)
+            slot.caches, logits = self._decode(
+                params, slot.caches, jnp.asarray([[tok]], jnp.int32),
+                jnp.asarray(slot.pos, jnp.int32))
+            slot.pos += 1
+            slot.next_token = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        return bool(self.queue or any(s is not None for s in self.slots))
+
+    def run(self, rank_fn=None, max_steps: int = 100_000) -> List[Request]:
+        for _ in range(max_steps):
+            if not self.step(rank_fn):
+                break
+        return self.done

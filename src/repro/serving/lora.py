@@ -1,0 +1,106 @@
+"""LoRA adapter pool for the serving engine.
+
+Adapters are low-rank (A, B) deltas on the attention q/v projections.  The
+engine serves with *merged* weights (W + scale·A·B), so "loading" an adapter
+is a real, measurable merge cost — that is the warm-up the paper's Fig. 13(b)
+prewarming experiment hides or exposes.  The pool holds at most `capacity`
+merged parameter sets (cf. vLLM's max-loras), LRU-evicted.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class LoraAdapter:
+    lora_id: str
+    rank: int
+    deltas: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]]  # path -> (A, B)
+    scale: float = 1.0
+
+
+def make_random_adapter(lora_id: str, params: Any, rank: int = 8,
+                        seed: int = 0, scale: float = 0.5) -> LoraAdapter:
+    """Random adapter touching every attention wq/wv (stacked layers kept)."""
+    rng = jax.random.PRNGKey(hash((lora_id, seed)) & 0x7FFFFFFF)
+    deltas = {}
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if name.endswith(("attn/wq", "attn/wv", "self_attn/wq", "self_attn/wv")):
+            rng, k1, k2 = jax.random.split(rng, 3)
+            *lead, din, dout = leaf.shape
+            a = jax.random.normal(k1, (*lead, din, rank), jnp.float32) * 0.02
+            b = jax.random.normal(k2, (*lead, rank, dout), jnp.float32) * 0.02
+            deltas[name] = (a, b)
+    return LoraAdapter(lora_id, rank, deltas, scale)
+
+
+def merge_adapter(params: Any, adapter: LoraAdapter) -> Any:
+    """W' = W + scale * A @ B  (returns a new param tree)."""
+    def one(path, leaf):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if name in adapter.deltas:
+            a, b = adapter.deltas[name]
+            delta = jnp.einsum("...ir,...ro->...io", a, b) * adapter.scale
+            return (leaf.astype(jnp.float32) + delta).astype(leaf.dtype)
+        return leaf
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+@dataclass
+class _PoolEntry:
+    params: Any
+    last_used: float
+    speculative: bool = False
+    used: bool = False
+
+
+class LoraPool:
+    def __init__(self, base_params: Any, capacity: int = 4):
+        self.base = base_params
+        self.capacity = capacity
+        self.adapters: Dict[str, LoraAdapter] = {}
+        self.merged: Dict[str, _PoolEntry] = {}
+        self.hits = 0
+        self.misses = 0
+        self.merges = 0
+
+    def register(self, adapter: LoraAdapter) -> None:
+        self.adapters[adapter.lora_id] = adapter
+
+    def is_warm(self, lora_id: str) -> bool:
+        return lora_id in self.merged
+
+    def load(self, lora_id: str, speculative: bool = False) -> None:
+        """Merge (prewarm) an adapter into the pool."""
+        if lora_id in self.merged:
+            return
+        while len(self.merged) >= self.capacity:
+            victim = min(self.merged, key=lambda k: self.merged[k].last_used)
+            del self.merged[victim]
+        merged = merge_adapter(self.base, self.adapters[lora_id])
+        merged = jax.block_until_ready(merged)
+        self.merges += 1
+        self.merged[lora_id] = _PoolEntry(merged, time.monotonic(),
+                                          speculative=speculative)
+
+    def get(self, lora_id: Optional[str]) -> Any:
+        """Params for a request (base when no adapter). Cold -> merge inline."""
+        if not lora_id:
+            return self.base
+        e = self.merged.get(lora_id)
+        if e is None:
+            self.misses += 1
+            self.load(lora_id)
+            e = self.merged[lora_id]
+        else:
+            self.hits += 1
+        e.last_used = time.monotonic()
+        e.used = True
+        return e.params

@@ -1,0 +1,350 @@
+"""Discrete-event cluster simulator for paper-scale scheduling experiments.
+
+Models: slot-based LLM engines (continuous batching abstracted as N
+concurrent request slots), docker and DNN tool pools, warmable contents
+(KV prefixes / LoRA / images / tool models) via HermesLet, bucket-period
+priority refresh with preemption at bucket boundaries, and PDGraph-driven
+prewarming.  The scheduler under test is the real ``HermesScheduler`` — the
+simulator only supplies ground truth (pre-sampled trajectories) and time.
+
+This is the harness behind Figs. 9-15.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time as _time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.apps.spec import trajectory_service
+from repro.apps.suite import T_IN, T_OUT
+from repro.apps.workload import AppInstance
+from repro.core.hermeslet import HermesLet
+from repro.core.pdgraph import PDGraph
+from repro.core.scheduler import HermesScheduler
+
+
+@dataclass
+class SimConfig:
+    n_llm_slots: int = 16
+    n_docker_slots: int = 32   # containers run host-side (64-core testbed)
+    n_dnn_slots: int = 3
+    bucket_s: float = 1.0
+    t_in: float = T_IN
+    t_out: float = T_OUT
+    policy: str = "gittins"
+    K: float = 0.5
+    refine: bool = True
+    prewarm_mode: str = "hermes"    # hermes | epwq | lru
+    preemptive: bool = True
+    kv_capacity: int = 16
+    lora_capacity: int = 10
+    docker_capacity: int = 32
+    dnn_capacity: int = 2
+    mc_walkers: int = 256
+    n_buckets: int = 10
+    seed: int = 0
+
+
+@dataclass
+class SimTask:
+    task_id: int
+    app_id: str
+    unit: str
+    kind: str                  # llm | docker | dnn
+    service: float
+    keys: Tuple[str, ...]
+    submitted: float
+    remaining: float = 0.0
+    running: bool = False
+    ready_at: float = 0.0      # warm-up gate when running cold
+    last_credit: float = 0.0
+    epoch: int = 0             # invalidates stale completion events
+
+    def __post_init__(self):
+        self.remaining = self.service
+
+
+@dataclass
+class AppSim:
+    inst: AppInstance
+    unit_idx: int = 0
+    open_tasks: int = 0
+    finished: Optional[float] = None
+    true_remaining: float = 0.0
+
+
+@dataclass
+class SimResult:
+    acts: Dict[str, float]
+    app_names: Dict[str, str]
+    dsr: Dict[str, bool]
+    ddl_class: Dict[str, str]
+    cache_stats: Dict[str, Dict[str, float]]
+    policy_time_s: float
+    policy_calls: int
+    makespan: float
+
+    def act_values(self) -> np.ndarray:
+        return np.asarray(sorted(self.acts.values()))
+
+    def mean_act(self) -> float:
+        return float(np.mean(list(self.acts.values()))) if self.acts else 0.0
+
+    def p95_act(self) -> float:
+        v = self.act_values()
+        return float(np.percentile(v, 95)) if len(v) else 0.0
+
+    def dsr_ratio(self, cls: Optional[str] = None) -> float:
+        items = [(k, ok) for k, ok in self.dsr.items()
+                 if cls is None or self.ddl_class.get(k) == cls]
+        return (sum(ok for _, ok in items) / len(items)) if items else 0.0
+
+
+class ClusterSim:
+    def __init__(self, kb: Dict[str, PDGraph], cfg: SimConfig):
+        self.kb = kb
+        self.cfg = cfg
+        self.sched = HermesScheduler(
+            kb, policy=cfg.policy, t_in=cfg.t_in, t_out=cfg.t_out, K=cfg.K,
+            n_buckets=cfg.n_buckets, refine=cfg.refine,
+            prewarm=(cfg.prewarm_mode == "hermes"),
+            mc_walkers=cfg.mc_walkers, seed=cfg.seed)
+        self.let = HermesLet(kv_capacity=cfg.kv_capacity,
+                             lora_capacity=cfg.lora_capacity,
+                             docker_capacity=cfg.docker_capacity,
+                             dnn_capacity=cfg.dnn_capacity)
+        self.slots = {"llm": cfg.n_llm_slots, "docker": cfg.n_docker_slots,
+                      "dnn": cfg.n_dnn_slots}
+        self.running: Dict[str, List[SimTask]] = {k: [] for k in self.slots}
+        self.waiting: Dict[str, List[SimTask]] = {k: [] for k in self.slots}
+        self.apps: Dict[str, AppSim] = {}
+        self.events: List[Tuple[float, int, str, object]] = []
+        self._eid = itertools.count()
+        self._tid = itertools.count()
+        self.now = 0.0
+        self.rng = np.random.default_rng(cfg.seed + 1)
+        self.policy_time = 0.0
+        self.policy_calls = 0
+        self._ranks: Dict[str, float] = {}
+        self._prewarm_fired: Set[Tuple[str, str, str]] = set()
+
+    # ----------------------------------------------------------- event glue
+    def _push(self, t: float, kind: str, payload=None):
+        heapq.heappush(self.events, (t, next(self._eid), kind, payload))
+
+    # -------------------------------------------------------------- running
+    def run(self, instances: List[AppInstance]) -> SimResult:
+        for inst in instances:
+            self._push(inst.arrival, "arrival", inst)
+        self._push(self.cfg.bucket_s, "tick", None)
+        remaining_apps = len(instances)
+
+        while self.events and remaining_apps > 0:
+            t, _, kind, payload = heapq.heappop(self.events)
+            self.now = max(self.now, t)
+            if kind == "arrival":
+                self._on_arrival(payload)
+            elif kind == "task_done":
+                task, epoch = payload
+                if task.epoch == epoch and task.running:
+                    done = self._on_task_done(task)
+                    remaining_apps -= int(done)
+            elif kind == "prewarm":
+                self.let.prewarm(payload, self.now)
+            elif kind == "tick":
+                self._on_tick()
+                if remaining_apps > 0:
+                    self._push(self.now + self.cfg.bucket_s, "tick", None)
+            self._reschedule()
+
+        self.let.finalize(self.now)
+        return SimResult(
+            acts={a: s.finished - s.inst.arrival
+                  for a, s in self.apps.items() if s.finished is not None},
+            app_names={a: s.inst.app_name for a, s in self.apps.items()},
+            dsr={a: (s.inst.deadline is None or
+                     (s.finished is not None and s.finished <= s.inst.deadline))
+                 for a, s in self.apps.items() if s.inst.deadline is not None},
+            ddl_class={a: s.inst.ddl_class for a, s in self.apps.items()},
+            cache_stats=self.let.stats(),
+            policy_time_s=self.policy_time,
+            policy_calls=self.policy_calls,
+            makespan=self.now)
+
+    # --------------------------------------------------------------- events
+    def _on_arrival(self, inst: AppInstance):
+        sim = AppSim(inst=inst)
+        # true demand incl. expected cold starts (what the oracle of a real
+        # system would know about wall cost)
+        from repro.apps.spec import coldstart_overhead
+        from repro.apps.suite import SUITE
+        sim.true_remaining = trajectory_service(inst.trajectory,
+                                                self.cfg.t_in, self.cfg.t_out)
+        base_name = inst.app_name.split("#")[0]
+        if base_name in SUITE:
+            sim.true_remaining += coldstart_overhead(SUITE[base_name],
+                                                     inst.trajectory)
+        self.apps[inst.app_id] = sim
+        self.sched.on_arrival(inst.app_id, inst.app_name, self.now,
+                              tenant=inst.tenant, deadline=inst.deadline)
+        self.sched.set_oracle(inst.app_id, sim.true_remaining)
+        if self.cfg.prewarm_mode == "hermes":
+            # application viewpoint: arrival IS the signal for the entry
+            # unit's backends (p_s = 1) — start loads in parallel with the
+            # queue wait instead of at slot assignment
+            g = self.kb[inst.app_name]
+            for key in g.units[g.entry].backend.resource_keys():
+                self.let.prewarm(self._qualify(key, inst.app_id), self.now)
+        self._spawn_unit(sim)
+        self._refresh_ranks()
+
+    def _qualify(self, key: str, app_id: str) -> str:
+        """Docker containers are per-application-run (the paper's code-exec
+        model): the warmable identity is (image, app)."""
+        return f"{key}@{app_id}" if key.startswith("docker:") else key
+
+    def _spawn_unit(self, sim: AppSim):
+        unit, obs = sim.inst.trajectory[sim.unit_idx]
+        g = self.kb[sim.inst.app_name]
+        backend = g.units[unit].backend
+        self.sched.on_unit_start(sim.inst.app_id, unit, self.now)
+        if backend.kind == "llm":
+            per_task = obs["in"] * self.cfg.t_in + obs["out"] * self.cfg.t_out
+            n = int(obs["par"])
+        else:
+            per_task, n = obs["dur"], 1
+        sim.open_tasks = n
+        keys = tuple(self._qualify(k, sim.inst.app_id)
+                     for k in backend.resource_keys())
+        for _ in range(n):
+            task = SimTask(task_id=next(self._tid), app_id=sim.inst.app_id,
+                           unit=unit, kind=backend.kind, service=per_task,
+                           keys=keys, submitted=self.now)
+            self.waiting[backend.kind].append(task)
+            if self.cfg.prewarm_mode == "epwq":
+                for key in task.keys:  # prefetch for queued requests only
+                    if not self.let.is_present(key):
+                        self.let.prewarm(key, self.now)
+        self._plan_prewarms(sim.inst.app_id)
+
+    def _plan_prewarms(self, app_id: str):
+        if self.cfg.prewarm_mode != "hermes":
+            return
+        sigs = self.sched.prewarm_signals(
+            app_id, self.now, self.let.warmup_time,
+            lambda k: self.let.is_present(self._qualify(k, app_id)))
+        for s in sigs:
+            key = self._qualify(s.resource_key, s.app_id)
+            tag = (s.app_id, s.unit, key)
+            if tag in self._prewarm_fired:
+                continue
+            self._prewarm_fired.add(tag)
+            self._push(max(s.fire_at, self.now), "prewarm", key)
+
+    def _credit(self, task: SimTask):
+        if not task.running:
+            return
+        start = max(task.last_credit, task.ready_at)
+        delta = max(self.now - start, 0.0)
+        if delta > 0:
+            task.remaining = max(task.remaining - delta, 0.0)
+            self.sched.on_progress(task.app_id, delta)
+            sim = self.apps[task.app_id]
+            sim.true_remaining = max(sim.true_remaining - delta, 0.0)
+            self.sched.set_oracle(task.app_id, sim.true_remaining)
+        task.last_credit = self.now
+
+    def _on_task_done(self, task: SimTask) -> bool:
+        """Returns True when the whole application finished."""
+        self._credit(task)
+        task.running = False
+        self.running[task.kind].remove(task)
+        sim = self.apps[task.app_id]
+        sim.open_tasks -= 1
+        if sim.open_tasks > 0:
+            return False
+        # unit complete
+        unit, obs = sim.inst.trajectory[sim.unit_idx]
+        sim.unit_idx += 1
+        nxt = (sim.inst.trajectory[sim.unit_idx][0]
+               if sim.unit_idx < len(sim.inst.trajectory) else None)
+        self.sched.on_unit_finish(task.app_id, unit, obs, self.now, nxt)
+        if nxt is None:
+            sim.finished = self.now
+            return True
+        self._spawn_unit(sim)
+        self._refresh_ranks()
+        return False
+
+    def _on_tick(self):
+        for pool in self.running.values():
+            for task in pool:
+                self._credit(task)
+        self._refresh_ranks()
+
+    def _refresh_ranks(self):
+        t0 = _time.perf_counter()
+        self._ranks = self.sched.priorities(self.now)
+        self.policy_time += _time.perf_counter() - t0
+        self.policy_calls += 1
+
+    # ------------------------------------------------------------ scheduling
+    def _task_rank(self, task: SimTask) -> Tuple[float, float]:
+        if getattr(self.sched.policy, "task_level", False):
+            return (task.submitted, task.task_id)
+        return (self._ranks.get(task.app_id, np.inf), task.submitted)
+
+    def _start(self, task: SimTask):
+        ready = self.now
+        for key in task.keys:
+            hit, key_ready = self.let.access(key, self.now)
+            ready = max(ready, key_ready)
+        task.running = True
+        task.ready_at = ready
+        task.last_credit = self.now
+        task.epoch += 1
+        self.running[task.kind].append(task)
+        self._push(ready + task.remaining, "task_done", (task, task.epoch))
+
+    def _preempt(self, task: SimTask):
+        self._credit(task)
+        task.running = False
+        task.epoch += 1
+        self.running[task.kind].remove(task)
+        self.waiting[task.kind].append(task)
+
+    def _reschedule(self):
+        for kind, cap in self.slots.items():
+            waiting = self.waiting[kind]
+            if not waiting and len(self.running[kind]) <= cap:
+                continue
+            waiting.sort(key=self._task_rank)
+            # fill free slots
+            while waiting and len(self.running[kind]) < cap:
+                self._start(waiting.pop(0))
+            if not self.cfg.preemptive or not waiting:
+                continue
+            # preempt: lowest-priority running vs highest-priority waiting
+            changed = True
+            while changed and waiting:
+                changed = False
+                run = self.running[kind]
+                victim = max(run, key=self._task_rank, default=None)
+                if victim is None:
+                    break
+                cand = waiting[0]
+                if (self._task_rank(cand) < self._task_rank(victim)
+                        and victim.ready_at <= self.now):
+                    self._preempt(victim)
+                    self._start(waiting.pop(0))
+                    waiting.sort(key=self._task_rank)
+                    changed = True
+
+
+def run_sim(kb: Dict[str, PDGraph], instances: List[AppInstance],
+            cfg: SimConfig) -> SimResult:
+    return ClusterSim(kb, cfg).run(instances)

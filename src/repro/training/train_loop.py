@@ -1,0 +1,102 @@
+"""Training loop: jit'd train step + checkpoint/restart + straggler watchdog
++ optional microbatch gradient accumulation and int8 gradient compression.
+
+``run_training`` is the restartable inner driver used by launch/train.py and
+the fault-tolerance tests: it restores the latest checkpoint if one exists,
+then steps until `total_steps`, checkpointing every `checkpoint_every`.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointing import CheckpointManager, latest_step
+from repro.config import ModelConfig, TrainConfig
+from repro.data.pipeline import DataConfig, batch_at
+from repro.launch.steps import make_train_step
+from repro.models.model import Model, build_model
+from repro.runtime.fault_tolerance import FailureInjector, StragglerWatchdog
+from repro.training.optimizer import init_opt_state
+
+
+@dataclass
+class TrainReport:
+    losses: List[float] = field(default_factory=list)
+    steps_run: int = 0
+    restarts: int = 0
+    straggler_steps: List[int] = field(default_factory=list)
+    wall_s: float = 0.0
+
+
+def run_training(cfg: ModelConfig, tcfg: TrainConfig, dcfg: DataConfig, *,
+                 total_steps: int, ckpt_dir: Optional[str] = None,
+                 injector: Optional[FailureInjector] = None,
+                 log_every: int = 10,
+                 report: Optional[TrainReport] = None,
+                 verbose: bool = True) -> TrainReport:
+    report = report or TrainReport()
+    model = build_model(cfg)
+    t0 = time.time()
+
+    params = model.init(jax.random.PRNGKey(dcfg.seed))
+    opt_state = init_opt_state(params, cfg.opt_state_dtype)
+    start = 0
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if mgr is not None and latest_step(ckpt_dir) is not None:
+        (params, opt_state), extra = mgr.restore_latest((params, opt_state))
+        start = int(extra["step"]) + 1
+        report.restarts += 1
+        if verbose:
+            print(f"[train] restored step {start - 1}, resuming")
+
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    watchdog = StragglerWatchdog()
+
+    for step in range(start, total_steps):
+        ts = time.time()
+        batch = {k: jnp.asarray(v) for k, v in batch_at(dcfg, step).items()}
+        if injector is not None:
+            injector.maybe_fail(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        report.losses.append(loss)
+        report.steps_run += 1
+        dt = time.time() - ts
+        if watchdog.record(dt):
+            report.straggler_steps.append(step)
+        if mgr is not None and (step + 1) % tcfg.checkpoint_every == 0:
+            mgr.save(step, (params, opt_state), {"step": step})
+        if verbose and step % log_every == 0:
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"({dt*1000:.0f} ms)", flush=True)
+    if mgr is not None:
+        mgr.save(total_steps - 1, (params, opt_state),
+                 {"step": total_steps - 1}, blocking=True)
+    report.wall_s = time.time() - t0
+    return report
+
+
+def run_training_with_restarts(cfg, tcfg, dcfg, *, total_steps: int,
+                               ckpt_dir: str,
+                               injector: Optional[FailureInjector] = None,
+                               max_restarts: int = 3,
+                               verbose: bool = True) -> TrainReport:
+    """Outer supervisor: restart-from-checkpoint on (injected) failures —
+    the single-host stand-in for the cluster controller's restart loop."""
+    report = TrainReport()
+    for _attempt in range(max_restarts + 1):
+        try:
+            return run_training(cfg, tcfg, dcfg, total_steps=total_steps,
+                                ckpt_dir=ckpt_dir, injector=injector,
+                                report=report, verbose=verbose)
+        except Exception as e:  # noqa: BLE001 — supervisor catches anything
+            if verbose:
+                print(f"[train] failure: {e}; restarting from checkpoint")
+            continue
+    raise RuntimeError("exceeded max_restarts")

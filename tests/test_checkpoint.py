@@ -1,0 +1,64 @@
+"""Checkpoint: bit-exact restore, async publish, bf16 round-trip, retention."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointing import (CheckpointManager, latest_step,
+                                            restore_checkpoint, save_checkpoint)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (16, 8), jnp.float32),
+            "b16": jax.random.normal(k, (4, 4)).astype(jnp.bfloat16),
+            "nested": {"step": jnp.asarray(7, jnp.int32),
+                       "m": jnp.ones((3, 5), jnp.float32)}}
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 3, t, {"step": 3})
+    restored, extra = restore_checkpoint(str(tmp_path), t)
+    assert extra["step"] == 3
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s), {"step": s}, blocking=True)
+    assert latest_step(str(tmp_path)) == 4
+    import pathlib
+    kept = sorted(p.name for p in pathlib.Path(tmp_path).glob("step_*"))
+    assert len(kept) == 2
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree(9)
+    mgr.save(5, t, {"step": 5})          # async
+    restored, extra = mgr.restore_latest(t)
+    assert extra["step"] == 5
+    np.testing.assert_array_equal(np.asarray(t["w"]),
+                                  np.asarray(restored["w"]))
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Save from a 1x2 mesh layout, restore onto 2x1 (different sharding)."""
+    import os
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    devs = jax.devices()
+    if len(devs) < 2:
+        pytest.skip("single device container: elastic path covered in dryrun")
+    arr = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    save_checkpoint(str(tmp_path), 0, {"a": arr}, {"step": 0})
+    mesh = Mesh(np.asarray(devs[:2]).reshape(2, 1), ("data", "model"))
+    sh = {"a": NamedSharding(mesh, P("data", None))}
+    restored, _ = restore_checkpoint(str(tmp_path), {"a": arr}, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(arr))

@@ -1,0 +1,76 @@
+"""The ten assigned architectures carry the exact dims from the brief."""
+import pytest
+
+from repro.config import SHAPES, applicable_shapes, get_config
+
+BRIEF = {
+    "qwen2-moe-a2.7b": dict(num_layers=24, d_model=2048, num_heads=16,
+                            num_kv_heads=16, vocab_size=151936,
+                            num_experts=60, top_k=4, d_ff_expert=1408),
+    "phi3.5-moe-42b-a6.6b": dict(num_layers=32, d_model=4096, num_heads=32,
+                                 num_kv_heads=8, d_ff=6400, vocab_size=32064,
+                                 num_experts=16, top_k=2),
+    "jamba-1.5-large-398b": dict(num_layers=72, d_model=8192, num_heads=64,
+                                 num_kv_heads=8, d_ff=24576, vocab_size=65536,
+                                 num_experts=16, top_k=2, attn_every=8),
+    "internvl2-26b": dict(num_layers=48, d_model=6144, num_heads=48,
+                          num_kv_heads=8, d_ff=16384, vocab_size=92553),
+    "qwen2-7b": dict(num_layers=28, d_model=3584, num_heads=28,
+                     num_kv_heads=4, d_ff=18944, vocab_size=152064,
+                     qkv_bias=True),
+    "qwen3-4b": dict(num_layers=36, d_model=2560, num_heads=32,
+                     num_kv_heads=8, d_ff=9728, vocab_size=151936,
+                     qk_norm=True),
+    "llama3-8b": dict(num_layers=32, d_model=4096, num_heads=32,
+                      num_kv_heads=8, d_ff=14336, vocab_size=128256),
+    "yi-9b": dict(num_layers=48, d_model=4096, num_heads=32, num_kv_heads=4,
+                  d_ff=11008, vocab_size=64000),
+    "whisper-large-v3": dict(num_layers=32, d_model=1280, num_heads=20,
+                             num_kv_heads=20, d_ff=5120, vocab_size=51866),
+    "mamba2-1.3b": dict(num_layers=48, d_model=2048, vocab_size=50280,
+                        ssm_state=128),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(BRIEF))
+def test_exact_dims(arch):
+    cfg = get_config(arch)
+    for k, v in BRIEF[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_param_counts_sane():
+    # headline sizes within ~20% of the advertised parameter counts
+    expect = {"llama3-8b": 8.0e9, "yi-9b": 8.8e9, "qwen2-7b": 7.6e9,
+              "jamba-1.5-large-398b": 398e9, "qwen3-4b": 4.0e9,
+              "mamba2-1.3b": 1.3e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_counts()["total"]
+        assert abs(got - n) / n < 0.25, (arch, got, n)
+
+
+def test_moe_active_counts():
+    cfg = get_config("qwen2-moe-a2.7b")
+    c = cfg.param_counts()
+    assert c["active"] < 0.35 * c["total"]          # A2.7B of 14B
+    jam = get_config("jamba-1.5-large-398b").param_counts()
+    assert 80e9 < jam["active"] < 120e9             # 94B active
+
+
+def test_shape_applicability():
+    # long_500k only for sub-quadratic families
+    for arch in BRIEF:
+        cfg = get_config(arch)
+        shapes = applicable_shapes(cfg)
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in shapes, arch
+        else:
+            assert "long_500k" not in shapes, arch
+        assert "train_4k" in shapes and "decode_32k" in shapes
+
+
+def test_shape_table():
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288

@@ -1,0 +1,58 @@
+"""Correlation masks + conditional refinement narrow the demand estimate."""
+import numpy as np
+import pytest
+
+from repro.core import correlation as C
+from repro.core.pdgraph import BackendSpec, PDGraph, UnitNode
+
+
+def _correlated_graph(n=400, seed=0):
+    g = PDGraph("corr", "up", {
+        "up": UnitNode("up", BackendSpec("llm", "m")),
+        "down": UnitNode("down", BackendSpec("llm", "m")),
+    })
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        z = rng.uniform()
+        up_out = 100 + 900 * z + rng.normal(0, 20)
+        down_in = up_out * 1.1 + rng.normal(0, 10)   # strongly correlated
+        down_out = 50 + rng.normal(0, 5)             # independent
+        g.record_trial([
+            ("up", {"in": 500 + rng.normal(0, 30), "out": up_out, "par": 1}),
+            ("down", {"in": down_in, "out": down_out, "par": 1}),
+        ])
+    return g
+
+
+def test_masks_detect_induced_correlation():
+    g = _correlated_graph()
+    C.apply_masks(g)
+    m = g.units["down"].corr_mask
+    assert m["up|in~up_out"] is True       # down.in tracks up.out
+    assert m.get("up|out~up_out", False) is False  # down.out independent
+
+
+def test_conditional_refinement_narrows_variance():
+    g = _correlated_graph()
+    C.apply_masks(g)
+    full = g.units["down"].service_samples(1e-3, 1e-2)
+    cond = C.conditional_samples(g, "up", "down",
+                                 {"in": 500, "out": 950, "par": 1},
+                                 1e-3, 1e-2)
+    assert cond is not None
+    assert np.std(cond) < 0.6 * np.std(full)
+    # conditioning on a high upstream output selects high-demand trials
+    assert np.mean(cond) > np.mean(full)
+
+
+def test_no_mask_no_refinement():
+    g = _correlated_graph()
+    # masks not applied -> no refinement available
+    assert C.conditional_samples(g, "up", "down", {"out": 900}, 1e-3, 1e-2) is None
+
+
+def test_pearson_bucketized():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1, 300)
+    assert C.pearson(x, 2 * x + rng.normal(0, 0.01, 300)) > 0.9
+    assert abs(C.pearson(x, rng.uniform(0, 1, 300))) < 0.3

@@ -1,0 +1,102 @@
+"""Dry-run tooling units: HLO collective parser, extrapolation, sharding
+rules, roofline terms (no 512-device compile here — the sweep does that)."""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.dryrun import (_SHAPE_RE, accounting_cfg, collective_bytes,
+                                 extrapolate, model_flops)
+from repro.config import SHAPES, get_config
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[16,4096,128]{2,1,0} parameter(0)
+  %ag = bf16[16,4096,2048]{2,1,0} all-gather(bf16[16,4096,128]{2,1,0} %p0), dimensions={2}
+  %ar = f32[1024,1024]{1,0} all-reduce(f32[1024,1024]{1,0} %ag2), to_apply=%sum
+  %rs = f32[64,1024]{1,0} reduce-scatter(f32[1024,1024]{1,0} %ar), dimensions={0}
+  %a2a = bf16[8,128,256]{2,1,0} all-to-all(bf16[8,128,256]{2,1,0} %x), dimensions={0}
+  %cp = u32[4,8]{1,0} collective-permute(u32[4,8]{1,0} %y), source_target_pairs={{0,1}}
+  ROOT %t = (f32[1]{0}) tuple(%cp)
+}
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 16 * 4096 * 2048 * 2
+    assert out["all-reduce"] == 2 * 1024 * 1024 * 4
+    assert out["reduce-scatter"] == 1024 * 1024 * 4
+    assert out["all-to-all"] == 8 * 128 * 256 * 2
+    assert out["collective-permute"] == 4 * 8 * 4
+    assert out["num_collectives"] == 5
+    assert out["total_wire_bytes"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+
+
+def test_extrapolation_linear():
+    m1 = {"flops": 10.0, "bytes": 100.0, "coll": {"all-reduce": 4.0,
+                                                  "total_wire_bytes": 4.0}}
+    m2 = {"flops": 16.0, "bytes": 130.0, "coll": {"all-reduce": 7.0,
+                                                  "total_wire_bytes": 7.0}}
+    tot = extrapolate(m1, m2, 10)
+    assert tot["flops"] == pytest.approx(10 + 9 * 6)
+    assert tot["bytes"] == pytest.approx(100 + 9 * 30)
+    assert tot["coll"]["all-reduce"] == pytest.approx(4 + 9 * 3)
+
+
+def test_accounting_cfg_unrolls():
+    cfg = get_config("jamba-1.5-large-398b")
+    acc = accounting_cfg(cfg, 2)
+    assert acc.scan_layers is False
+    assert acc.num_layers == 16        # 2 periods of 8
+    assert acc.attn_block_q >= 1 << 30
+    w = accounting_cfg(get_config("whisper-large-v3"), 1)
+    assert w.num_layers == 1 and w.enc_layers == 1
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("llama3-8b")
+    tr = model_flops(cfg, SHAPES["train_4k"], 256)
+    de = model_flops(cfg, SHAPES["decode_32k"], 256)
+    assert tr / de == pytest.approx(
+        3 * SHAPES["train_4k"].global_batch * 4096 / 128, rel=1e-6)
+
+
+def test_param_sharding_rules():
+    from repro.distributed.sharding import param_pspecs
+    from repro.models.model import build_model
+    from repro.testing import tiny_config
+    m = build_model(tiny_config("llama3-8b"))
+    params = m.init_abstract()
+    specs = param_pspecs(params)
+    flat = {("/".join(str(getattr(p, "key", p)) for p in path)): s
+            for path, s in jax.tree_util.tree_flatten_with_path(specs)[0]}
+    assert flat["embed/table"] == P("vocab", "fsdp")
+    wq = [v for k, v in flat.items() if k.endswith("attn/wq")][0]
+    assert wq == P(None, "fsdp", "model")
+    wo = [v for k, v in flat.items() if k.endswith("mlp/wo")][0]
+    assert wo == P(None, "model", "fsdp")
+    norm = [v for k, v in flat.items() if "mixer_norm" in k][0]
+    assert norm == P()
+
+
+def test_sweep_results_if_present():
+    """Validate whatever the background sweep has produced so far."""
+    d = Path("results/dryrun")
+    cells = list(d.glob("*/*.json")) if d.exists() else []
+    if not cells:
+        pytest.skip("no dry-run results yet")
+    bad = []
+    for c in cells:
+        r = json.loads(c.read_text())
+        if not r.get("ok"):
+            bad.append((c.name, r.get("error", "?")[:120]))
+    assert not bad, bad

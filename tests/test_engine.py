@@ -1,0 +1,102 @@
+"""Real serving engine: prefix-cache correctness, LoRA pool, paged allocator,
+priority admission."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import build_model
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.kvcache import PagedAllocator
+from repro.serving.lora import LoraPool, make_random_adapter, merge_adapter
+from repro.testing import tiny_config
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_config("llama3-8b", num_layers=2)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _engine(m, params, **kw):
+    base = dict(max_slots=2, max_seq=96,
+                prefix_prompts={"p1": list(range(10, 30)),
+                                "p2": list(range(40, 70))})
+    base.update(kw)
+    return InferenceEngine(m, params, **base)
+
+
+def test_warm_prefix_matches_full_prefill(setup):
+    cfg, m, params = setup
+    eng = _engine(m, params)
+    eng.prewarm_prefix("p1")
+    r_warm = Request("w", prompt=[1, 2, 3], max_new_tokens=6, prefix_id="p1")
+    eng.submit(r_warm)
+    eng.run()
+    r_full = Request("f", prompt=list(range(10, 30)) + [1, 2, 3],
+                     max_new_tokens=6)
+    eng.submit(r_full)
+    eng.run()
+    assert r_warm.prefix_hit is True
+    assert r_warm.output == r_full.output
+
+
+def test_cold_prefix_correct_but_miss(setup):
+    cfg, m, params = setup
+    eng = _engine(m, params)
+    r = Request("c", prompt=[5, 6], max_new_tokens=4, prefix_id="p2")
+    eng.submit(r)
+    eng.run()
+    assert r.prefix_hit is False
+    assert len(r.output) == 4
+
+
+def test_priority_admission_orders_queue(setup):
+    cfg, m, params = setup
+    eng = _engine(m, params, max_slots=1)
+    ranks = {"hi": 0.0, "lo": 1.0}
+    eng.submit(Request("a", prompt=[1], max_new_tokens=2, app_id="lo"))
+    eng.submit(Request("b", prompt=[2], max_new_tokens=2, app_id="hi"))
+    done = eng.run(rank_fn=lambda r: ranks[r.app_id])
+    assert [r.app_id for r in done] == ["hi", "lo"]
+
+
+def test_lora_changes_output_and_pool_evicts(setup):
+    cfg, m, params = setup
+    pool = LoraPool(params, capacity=2)
+    for i in range(3):
+        pool.register(make_random_adapter(f"l{i}", params, seed=i))
+    base_out = params
+    p0 = pool.get("l0")
+    assert pool.merges == 1
+    # merged weights differ from base
+    a = np.asarray(jax.tree_util.tree_leaves(p0)[0], np.float32)
+    b = np.asarray(jax.tree_util.tree_leaves(params)[0], np.float32)
+    # at least one leaf differs
+    diff = any(not np.array_equal(np.asarray(x, np.float32),
+                                  np.asarray(y, np.float32))
+               for x, y in zip(jax.tree_util.tree_leaves(p0),
+                               jax.tree_util.tree_leaves(params)))
+    assert diff
+    pool.get("l1")
+    pool.get("l2")          # evicts l0
+    assert not pool.is_warm("l0")
+    assert pool.is_warm("l2")
+
+
+def test_paged_allocator_invariants():
+    a = PagedAllocator(n_blocks=10, block_size=4)
+    t = a.allocate("s1", 10)          # 3 blocks
+    assert len(t.blocks) == 3
+    a.extend("s1", 3)                 # 13 tokens -> 4 blocks
+    assert len(a.tables["s1"].blocks) == 4
+    assert len(a.free) == 6
+    with pytest.raises(MemoryError):
+        a.allocate("s2", 100)
+    a.release("s1")
+    assert len(a.free) == 10
+    a.release("s1")                   # idempotent
+    assert len(a.free) == 10

@@ -1,0 +1,130 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,K,hd", [
+    (1, 128, 128, 4, 4, 32),     # MHA
+    (2, 256, 256, 8, 2, 64),     # GQA 4:1
+    (1, 64, 256, 4, 1, 128),     # MQA, rectangular
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(B, Sq, Skv, H, K, hd, dtype, causal):
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Skv, K, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Skv, K, hd)), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64)
+    G = H // K
+    qf = (q.reshape(B, Sq, K, G, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(B * K * G, Sq, hd))
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, Skv, hd)
+    ref = (attention_ref(qf, kf, vf, causal=causal)
+           .reshape(B, K, G, Sq, hd).transpose(0, 3, 1, 2, 4)
+           .reshape(B, Sq, H, hd))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,H,K,hd,Smax,pos", [
+    (2, 8, 4, 64, 512, 300),
+    (1, 4, 4, 32, 256, 255),
+    (3, 6, 2, 128, 1024, 17),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, H, K, hd, Smax, pos, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, 1, H, hd)), dtype)
+    kc = jnp.asarray(RNG.normal(size=(B, Smax, K, hd)), dtype)
+    vc = jnp.asarray(RNG.normal(size=(B, Smax, K, hd)), dtype)
+    out = decode_attention(q, kc, vc, jnp.asarray(pos, jnp.int32), block_s=128)
+    G = H // K
+    qf = q.reshape(B, K, G, hd).reshape(B * K, G, hd)
+    kf = kc.transpose(0, 2, 1, 3).reshape(B * K, Smax, hd)
+    vf = vc.transpose(0, 2, 1, 3).reshape(B * K, Smax, hd)
+    ref = (decode_attention_ref(qf, kf, vf,
+                                jnp.full((B * K,), pos + 1, jnp.int32))
+           .reshape(B, K, G, hd).reshape(B, 1, H, hd))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 128, 2, 32, 16, 32),
+    (2, 256, 4, 64, 32, 64),
+    (1, 64, 8, 16, 8, 64),      # chunk == S
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(B, S, H, P, N, chunk, dtype):
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, N)), dtype)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, N)), dtype)
+    out = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    ref = ssd_scan_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (4, 32, 128), (3, 5, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    s = jnp.asarray(RNG.normal(size=shape[-1:]), jnp.float32)
+    out = rmsnorm(x, s)
+    ref = rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_vs_model_xla_path():
+    """The Pallas kernel and the model's lax.scan XLA path agree."""
+    from repro.models.layers import flash_attention_xla
+    q = jnp.asarray(RNG.normal(size=(2, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 128, 2, 32)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    b = flash_attention_xla(q, k, v, causal=True, block_q=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("E,C,D,N,bc,bn,bd", [
+    (4, 64, 128, 256, 32, 128, 64),
+    (2, 128, 256, 128, 128, 128, 256),
+    (8, 32, 64, 64, 32, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm(E, C, D, N, bc, bn, bd, dtype):
+    from repro.kernels.moe_gmm.ops import moe_gmm
+    from repro.kernels.moe_gmm.ref import moe_gmm_ref
+    x = jnp.asarray(RNG.normal(size=(E, C, D)), dtype)
+    w = jnp.asarray(RNG.normal(size=(E, D, N)), dtype) * 0.1
+    out = moe_gmm(x, w, block_c=bc, block_n=bn, block_d=bd)
+    ref = moe_gmm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-4)

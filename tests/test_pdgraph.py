@@ -1,0 +1,101 @@
+"""PDGraph: recording, serialization, Monte-Carlo estimation."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.apps.spec import profile_app, sample_trajectory, trajectory_service
+from repro.apps.suite import SUITE, T_IN, T_OUT
+from repro.core.pdgraph import MAX_SAMPLES, BackendSpec, PDGraph, UnitNode
+
+
+def _linear_graph():
+    g = PDGraph("test", "a", {
+        "a": UnitNode("a", BackendSpec("llm", "m", prefix="p.a")),
+        "b": UnitNode("b", BackendSpec("docker", "img")),
+    })
+    for i in range(50):
+        g.record_trial([("a", {"in": 100 + i, "out": 10 + i, "par": 2}),
+                        ("b", {"dur": 5.0 + 0.01 * i})])
+    return g
+
+
+def test_record_and_probs():
+    g = _linear_graph()
+    assert g.units["a"].next_probs() == {"b": 1.0}
+    assert g.units["b"].next_probs() == {"$end": 1.0}
+    assert len(g.units["a"].input_len) == 50
+    assert len(g.trials) == 50
+
+
+def test_fifo_cap():
+    g = _linear_graph()
+    for i in range(MAX_SAMPLES + 100):
+        g.record_trial([("a", {"in": i, "out": 1, "par": 1})])
+    assert len(g.units["a"].input_len) == MAX_SAMPLES
+
+
+def test_json_roundtrip():
+    g = _linear_graph()
+    g2 = PDGraph.from_json(g.to_json())
+    assert g2.entry == g.entry
+    assert g2.units["a"].input_len == g.units["a"].input_len
+    assert g2.units["a"].next_counts == g.units["a"].next_counts
+    assert g2.units["a"].backend.prefix == "p.a"
+    assert len(g2.trials) == len(g.trials)
+
+
+def test_mc_estimates_deterministic_chain():
+    g = _linear_graph()
+    out = g.mc_service_samples(jax.random.PRNGKey(0), t_in=0.001, t_out=0.01,
+                               n_walkers=256)
+    # service(a) = 2*(in*0.001 + out*0.01), service(b) = dur
+    expect_mean = np.mean([2 * ((100 + i) * 0.001 + (10 + i) * 0.01) +
+                           5.0 + 0.01 * i for i in range(50)])
+    assert out.shape == (256,)
+    assert np.mean(out) == pytest.approx(expect_mean, rel=0.1)
+
+
+def test_mc_remaining_subtracts_executed():
+    g = _linear_graph()
+    full = g.mc_service_samples(jax.random.PRNGKey(0), 0.001, 0.01)
+    rem = g.mc_service_samples(jax.random.PRNGKey(0), 0.001, 0.01,
+                               start_unit="b", executed_in_unit=2.0)
+    assert np.mean(rem) < np.mean(full)
+    assert np.all(rem >= 0)
+
+
+def test_mc_branch_probabilities():
+    g = PDGraph("b", "a", {
+        "a": UnitNode("a", BackendSpec("docker", "x")),
+        "short": UnitNode("short", BackendSpec("docker", "x")),
+        "long": UnitNode("long", BackendSpec("docker", "x")),
+    })
+    rng = np.random.default_rng(0)
+    for _ in range(400):
+        branch = "short" if rng.uniform() < 0.75 else "long"
+        g.record_trial([("a", {"dur": 1.0}),
+                        (branch, {"dur": 1.0 if branch == "short" else 100.0})])
+    out = g.mc_service_samples(jax.random.PRNGKey(1), 0.001, 0.01,
+                               n_walkers=2048)
+    expect = 1.0 + 0.75 * 1.0 + 0.25 * 100.0
+    assert np.mean(out) == pytest.approx(expect, rel=0.15)
+
+
+def test_suite_profiles_match_generator():
+    # PDGraph MC total estimate ~ generator ground truth (profiled durations
+    # include cold starts, per the paper's real-testbed profiling)
+    from repro.apps.spec import coldstart_overhead
+    rng = np.random.default_rng(5)
+    for name in ("KBQAV", "CG", "ALFWI"):
+        g = profile_app(SUITE[name], 300, seed=1)
+        mc = g.mc_service_samples(jax.random.PRNGKey(2), T_IN, T_OUT,
+                                  n_walkers=1024)
+        truths = []
+        for _ in range(300):
+            traj = sample_trajectory(SUITE[name], rng)
+            truths.append(trajectory_service(traj, T_IN, T_OUT) +
+                          coldstart_overhead(SUITE[name], traj))
+        assert np.mean(mc) == pytest.approx(np.mean(truths), rel=0.30), name

@@ -1,0 +1,46 @@
+"""Prewarming trigger math (§3.4) + knob-K trade-off."""
+import numpy as np
+import pytest
+
+from repro.core.prewarm import prewarm_trigger_time, quantile
+
+
+def test_low_branch_prob_never_prewarms():
+    d = np.full(100, 30.0)
+    assert prewarm_trigger_time(d, 0.0, 0.0, p_s=0.3, t_p=5.0, K=0.5) is None
+
+
+def test_deterministic_duration_exact_timing():
+    # p_s=1, K=1 -> fire so the backend is warm exactly at completion:
+    # remaining quantile at q=0 is the min remaining = 30 -> t_s = 30 - t_p
+    d = np.full(100, 30.0)
+    t = prewarm_trigger_time(d, 0.0, 0.0, p_s=1.0, t_p=5.0, K=1.0)
+    assert t == pytest.approx(25.0, abs=0.5)
+
+
+def test_k_knob_semantics():
+    """Eq. 3: within a branch, smaller K fires *later* (q = 1 - K/p_s grows);
+    what makes small K globally aggressive is the p_s >= K coverage gate —
+    more (lower-probability) branches get prewarmed at all (Fig. 14)."""
+    rng = np.random.default_rng(0)
+    d = rng.lognormal(3.0, 0.5, size=400)
+    ts = [prewarm_trigger_time(d, 0.0, 0.0, p_s=0.9, t_p=4.0, K=k)
+          for k in (0.2, 0.5, 0.8)]
+    assert ts[0] >= ts[1] >= ts[2]
+    # coverage gate: a 0.4-probability branch fires only under small K
+    assert prewarm_trigger_time(d, 0.0, 0.0, p_s=0.4, t_p=4.0, K=0.2) is not None
+    assert prewarm_trigger_time(d, 0.0, 0.0, p_s=0.4, t_p=4.0, K=0.5) is None
+
+
+def test_conditions_on_elapsed_time():
+    # unit already ran 40s: only the >40 tail matters -> later trigger than
+    # scheduling from scratch at t=0
+    d = np.concatenate([np.full(50, 10.0), np.full(50, 100.0)])
+    t_late = prewarm_trigger_time(d, 0.0, 40.0, p_s=1.0, t_p=5.0, K=0.9)
+    assert t_late >= 40.0
+
+
+def test_outlived_history_fires_now():
+    d = np.full(10, 5.0)
+    t = prewarm_trigger_time(d, 0.0, 50.0, p_s=1.0, t_p=5.0, K=0.5)
+    assert t == pytest.approx(50.0)

@@ -1,0 +1,87 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gittins import to_histogram
+from repro.core.pdgraph import BackendSpec, PDGraph, UnitNode
+from repro.core.prewarm import prewarm_trigger_time
+from repro.serving.kvcache import PagedAllocator
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.01, 1e5), min_size=2, max_size=500),
+       st.integers(2, 32))
+def test_histogram_is_distribution(samples, nb):
+    probs, edges = to_histogram(np.asarray(samples), nb)
+    assert probs.shape == (nb,) and edges.shape == (nb,)
+    assert abs(probs.sum() - 1.0) < 1e-9
+    assert np.all(np.diff(edges) > 0)
+    assert edges[-1] >= max(samples) - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 50.0))
+def test_mc_walk_total_bounded_by_graph(seed, scale):
+    """Every MC sample lies within [min, max] achievable path service."""
+    g = PDGraph("p", "a", {
+        "a": UnitNode("a", BackendSpec("docker", "x")),
+        "b": UnitNode("b", BackendSpec("docker", "x")),
+    })
+    for i in range(20):
+        g.record_trial([("a", {"dur": scale}), ("b", {"dur": 2 * scale})])
+    out = g.mc_service_samples(jax.random.PRNGKey(seed), 1e-3, 1e-2,
+                               n_walkers=64)
+    assert np.all(out >= 3 * scale * 0.99)
+    assert np.all(out <= 3 * scale * 1.01)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.01, 1.0), st.floats(0.01, 1.0), st.floats(0.1, 100.0))
+def test_prewarm_never_fires_below_k(p_s, K, t_p):
+    d = np.random.default_rng(0).lognormal(2.0, 0.5, 200)
+    t = prewarm_trigger_time(d, 0.0, 0.0, p_s=p_s, t_p=t_p, K=K)
+    if p_s < K:
+        assert t is None
+    else:
+        assert t is not None and t >= 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 60), st.booleans()),
+                min_size=1, max_size=40),
+       st.integers(4, 64), st.integers(2, 16))
+def test_allocator_conservation(ops, n_blocks, block_size):
+    """Blocks are conserved: free + allocated == total, never double-freed."""
+    a = PagedAllocator(n_blocks, block_size)
+    live = []
+    for i, (tokens, release_one) in enumerate(ops):
+        if release_one and live:
+            a.release(live.pop())
+        else:
+            sid = f"s{i}"
+            if a.can_allocate(tokens):
+                a.allocate(sid, tokens)
+                live.append(sid)
+        used = sum(len(t.blocks) for t in a.tables.values())
+        assert used + len(a.free) == n_blocks
+        assert len(set(a.free)) == len(a.free)  # no dup frees
+    for sid in live:
+        a.release(sid)
+    assert len(a.free) == n_blocks
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 10**6), st.integers(1, 10**6))
+def test_sharding_divisibility_fallback_never_errors(d0, d1):
+    """shard() must never raise regardless of shapes (dims fall back to
+    replicated when not divisible)."""
+    from repro.distributed.sharding import ShardCtx, shard, use_shard_ctx
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1)
+    x = jnp.zeros((d0 % 7 + 1, d1 % 5 + 1))
+    with use_shard_ctx(ShardCtx(mesh)):
+        y = shard(x, "batch", "model")
+    assert y.shape == x.shape

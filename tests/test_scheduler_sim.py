@@ -1,0 +1,89 @@
+"""End-to-end scheduler/simulator behaviour: the paper's headline orderings."""
+import numpy as np
+import pytest
+
+from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
+from repro.apps.workload import bursty_arrivals, make_workload
+from repro.serving.simulator import ClusterSim, SimConfig
+
+
+@pytest.fixture(scope="module")
+def kb():
+    return build_knowledge_base(n_trials=150, seed=3)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return make_workload(120, 360.0, seed=11, t_in=T_IN, t_out=T_OUT)
+
+
+def _run(kb, insts, **kw):
+    base = dict(seed=5, prewarm_mode="lru", n_llm_slots=8, mc_walkers=128)
+    base.update(kw)
+    return ClusterSim(kb, SimConfig(**base)).run(list(insts))
+
+
+@pytest.fixture(scope="module")
+def results(kb, workload):
+    return {p: _run(kb, workload, policy=p)
+            for p in ("fcfs_req", "fcfs_app", "gittins", "oracle")}
+
+
+def test_all_apps_complete(results, workload):
+    for res in results.values():
+        assert len(res.acts) == len(workload)
+        assert all(v >= 0 for v in res.acts.values())
+
+
+def test_gittins_beats_fcfs(results):
+    assert results["gittins"].mean_act() < 0.75 * results["fcfs_req"].mean_act()
+    assert results["gittins"].p95_act() < results["fcfs_req"].p95_act()
+
+
+def test_gittins_close_to_oracle(results):
+    # paper Fig. 12: within ~10% of the oracle
+    assert results["gittins"].mean_act() <= 1.25 * results["oracle"].mean_act()
+
+
+def test_deadlines_hermes_ddl_beats_edf(kb):
+    # fig-11 regime (contended): the full Hermes-DDL system (demand-aware
+    # triage + prewarming) vs the EDF baseline system, as the paper compares
+    insts = make_workload(150, 400.0, seed=7, with_deadlines=True,
+                          t_in=T_IN, t_out=T_OUT)
+    edf = _run(kb, insts, policy="edf")
+    ddl = _run(kb, insts, policy="hermes_ddl", prewarm_mode="hermes")
+    assert ddl.dsr_ratio() >= edf.dsr_ratio()
+    # and pure eq-2 LSTF remains available as an ablation
+    lstf = _run(kb, insts, policy="lstf")
+    assert 0.0 <= lstf.dsr_ratio() <= 1.0
+
+
+def test_refinement_ablation(kb, workload):
+    with_r = _run(kb, workload, policy="gittins", refine=True)
+    without = _run(kb, workload, policy="gittins", refine=False)
+    # refinement should not hurt (paper: helps by ~15%)
+    assert with_r.mean_act() <= 1.10 * without.mean_act()
+
+
+def test_prewarm_improves_act_and_kv_hits(kb, workload):
+    lru = _run(kb, workload, policy="gittins", prewarm_mode="lru")
+    hermes = _run(kb, workload, policy="gittins", prewarm_mode="hermes")
+    # prewarming takes cold starts off the critical path -> faster completion
+    assert hermes.mean_act() < lru.mean_act()
+
+    def kv_hit(res):
+        c = res.cache_stats["kv"]
+        return c["hits"] / max(c["hits"] + c["misses"], 1)
+    # speculative loads may displace a little reactive-hit mass; the end
+    # metric (ACT, asserted above) is what prewarming optimizes
+    assert kv_hit(hermes) >= kv_hit(lru) - 0.05
+
+
+def test_bursty_arrivals_shape():
+    rng = np.random.default_rng(0)
+    t = bursty_arrivals(500, 600.0, rng)
+    assert len(t) == 500 and t.min() >= 0 and t.max() <= 600
+    assert np.all(np.diff(t) >= 0)
+    # bursty: inter-arrival CV well above Poisson's 1.0
+    gaps = np.diff(t)
+    assert np.std(gaps) / np.mean(gaps) > 1.2

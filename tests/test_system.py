@@ -1,0 +1,69 @@
+"""End-to-end behaviour of the full Hermes system (paper §5 in miniature):
+KB build -> workload -> simulator under all policies -> headline orderings,
+plus the real-engine integration path via launch/serve components."""
+import numpy as np
+import pytest
+
+from repro.apps.suite import SUITE, T_IN, T_OUT, build_knowledge_base
+from repro.apps.workload import make_workload
+from repro.serving.simulator import ClusterSim, SimConfig
+
+
+@pytest.fixture(scope="module")
+def system():
+    kb = build_knowledge_base(n_trials=120, seed=3)
+    insts = make_workload(90, 240.0, seed=29, t_in=T_IN, t_out=T_OUT)
+    return kb, insts
+
+
+def _run(kb, insts, **kw):
+    cfg = SimConfig(seed=5, n_llm_slots=8, mc_walkers=128, **kw)
+    return ClusterSim(kb, cfg).run(list(insts))
+
+
+def test_full_stack_hermes_vs_baselines(system):
+    kb, insts = system
+    hermes = _run(kb, insts, policy="gittins", prewarm_mode="hermes")
+    vllm = _run(kb, insts, policy="fcfs_req", prewarm_mode="lru")
+    parrot = _run(kb, insts, policy="fcfs_app", prewarm_mode="lru")
+    vtc = _run(kb, insts, policy="vtc", prewarm_mode="lru")
+    assert hermes.mean_act() < vllm.mean_act()
+    assert hermes.mean_act() < parrot.mean_act()
+    assert hermes.mean_act() < vtc.mean_act()
+    assert hermes.p95_act() < vllm.p95_act()
+
+
+def test_suite_covers_ten_apps(system):
+    assert len(SUITE) == 10
+    assert set(SUITE) == {"DM", "MRS", "LLMR", "EV", "FEV", "CC", "ALFWI",
+                          "CG", "KBQAV", "PE"}
+
+
+def test_workload_mix_proportions():
+    insts = make_workload(2000, 1000.0, seed=1, t_in=T_IN, t_out=T_OUT)
+    small = {"EV", "FEV", "CC", "ALFWI", "KBQAV"}
+    large = {"DM", "MRS"}
+    n_small = sum(1 for i in insts if i.app_name in small)
+    n_large = sum(1 for i in insts if i.app_name in large)
+    assert abs(n_small / 2000 - 0.72) < 0.05
+    assert abs(n_large / 2000 - 0.02) < 0.02
+
+
+def test_policy_runtime_small(system):
+    kb, insts = system
+    res = _run(kb, insts, policy="gittins")
+    per_call_ms = 1000 * res.policy_time_s / max(res.policy_calls, 1)
+    # paper: <3 ms; allow slack for the CPU container + jax dispatch
+    assert per_call_ms < 50.0
+
+
+def test_scheduler_state_consistency(system):
+    kb, insts = system
+    sim = ClusterSim(kb, SimConfig(seed=5, n_llm_slots=8, mc_walkers=128))
+    res = sim.run(list(insts))
+    # every app completed exactly once with monotone nonneg ACT
+    assert sorted(res.acts) == sorted(i.app_id for i in insts)
+    assert all(a >= 0 for a in res.acts.values())
+    # all slots drained
+    assert all(not v for v in sim.running.values())
+    assert all(not v for v in sim.waiting.values())
