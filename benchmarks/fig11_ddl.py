@@ -8,8 +8,11 @@ POLICIES = {"vllm(fcfs_req)": "fcfs_req", "edf": "edf", "lstf(eq2)": "lstf",
             "hermes-ddl": "hermes_ddl"}
 
 
-def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
+def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
+        smoke: bool = False):
     n, win = (300, 900.0) if paper_scale else (150, 450.0)
+    if smoke:
+        n, win = 24, 120.0
     insts = workload(n, win, seed=seed, deadlines=True)
     res = {}
     for name, pol in POLICIES.items():

@@ -5,8 +5,11 @@ from __future__ import annotations
 from benchmarks.common import Csv, run_policy, workload
 
 
-def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
+def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
+        smoke: bool = False):
     n, win = (300, 600.0) if paper_scale else (200, 600.0)
+    if smoke:
+        n, win = 24, 120.0
     insts = workload(n, win, seed=seed)
     res = {
         "hermes": run_policy(insts, "gittins", refine=True, prewarm="hermes"),

@@ -20,11 +20,15 @@ def _lora_hit(res):
     return c["hits"] / max(c["hits"] + c["misses"], 1)
 
 
-def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
+def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
+        smoke: bool = False):
     # ---- (a) KV prefix cache across capacities (paper: 8/16/32 GB) -------
     n, win = (500, 900.0) if paper_scale else (200, 400.0)
+    caps = ((6, "8GB"), (12, "16GB"), (24, "32GB"))
+    if smoke:
+        n, win, caps = 30, 120.0, ((12, "16GB"),)
     insts = workload(n, win, seed=seed)
-    for cap, label in ((6, "8GB"), (12, "16GB"), (24, "32GB")):
+    for cap, label in caps:
         accs = {}
         for mode in ("lru", "epwq", "hermes"):
             res = run_policy(insts, "gittins", prewarm=mode, kv_capacity=cap)
@@ -40,7 +44,7 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
     # churn regime (paper: 200 adapters vs max-cpu-loras 20): adapters get
     # evicted between an app's units; Hermes re-warms them ahead of the next
     # unit, LRU/EPWQ pay the reload at slot assignment
-    n_var = 8 if paper_scale else 5
+    n_var = 8 if paper_scale else (2 if smoke else 5)
     lkb = clone_kb_with_loras(kb(), n_var,
                               app_names=["KBQAV", "FEV", "CG", "CC", "EV"])
     from repro.apps.spec import AppSpec
@@ -54,7 +58,7 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
     from repro.apps.spec import sample_trajectory
     from repro.apps.workload import AppInstance, bursty_arrivals
     names = sorted(variant_apps)
-    n2 = 400 if paper_scale else 160
+    n2 = 400 if paper_scale else (30 if smoke else 160)
     times = bursty_arrivals(n2, win, rng)
     insts2 = []
     for i, t in enumerate(times):

@@ -19,8 +19,12 @@ def _single_app_workload(app_name: str, n: int, win: float, seed: int):
             for i, t in enumerate(times)]
 
 
-def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
+def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
+        smoke: bool = False):
     n, win = (60, 600.0) if paper_scale else (40, 400.0)
+    ks = (0.9, 0.7, 0.5, 0.3, 0.1)
+    if smoke:
+        n, win, ks = 8, 120.0, (0.5,)
     for app in ("CG", "PE"):
         # PE's tool models contend for one accelerator slot (the paper's
         # HuggingGPT setup where tools swap in/out of GPU memory)
@@ -29,7 +33,7 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
             caps["dnn_capacity"] = 1
         insts = _single_app_workload(app, n, win, seed)
         base = run_policy(insts, "gittins", prewarm="lru", **caps)
-        for K in (0.9, 0.7, 0.5, 0.3, 0.1):
+        for K in ks:
             res = run_policy(insts, "gittins", prewarm="hermes", K=K, **caps)
             waste = sum(c["wasted_warm_s"] for c in res.cache_stats.values())
             red = 100 * (1 - res.mean_act() / base.mean_act())

@@ -30,20 +30,31 @@ def _time_gittins(n_jobs: int, n_buckets: int, iters: int = 50) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def run(csv: Csv, paper_scale: bool = False, seed: int = 7):
+def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
+        smoke: bool = False):
+    jobs_sweep = (16,) if smoke else (16, 64, 256, 1024)
+    bucket_sweep = (10,) if smoke else (5, 10, 20, 40, 80)
+    timings = {}                 # (jobs, buckets) -> s; smoke mode overlaps
+
+    def timed(n_jobs, nb):
+        if (n_jobs, nb) not in timings:
+            timings[(n_jobs, nb)] = _time_gittins(n_jobs, nb)
+        return timings[(n_jobs, nb)]
+
     # (a) queue-size sweep (stands in for arrival rate)
-    for n_jobs in (16, 64, 256, 1024):
-        dt = _time_gittins(n_jobs, 10)
+    for n_jobs in jobs_sweep:
+        dt = timed(n_jobs, 10)
         csv.add(f"fig15a/gittins_runtime/jobs={n_jobs}", 1e6 * dt,
                 f"{1e3*dt:.3f} ms/refresh")
     # (b) bucket-count sweep at a fixed queue
-    for nb in (5, 10, 20, 40, 80):
-        dt = _time_gittins(256, nb)
+    for nb in bucket_sweep:
+        dt = timed(16 if smoke else 256, nb)
         csv.add(f"fig15b/gittins_runtime/buckets={nb}", 1e6 * dt,
                 f"{1e3*dt:.3f} ms/refresh")
     # (b') does more buckets help ACT? (paper: no)
-    insts = workload(120, 300.0, seed=seed)
-    for nb in (5, 10, 40):
+    insts = workload(20 if smoke else 120, 120.0 if smoke else 300.0,
+                     seed=seed)
+    for nb in ((10,) if smoke else (5, 10, 40)):
         res = run_policy(insts, "gittins", n_buckets=nb)
         csv.add(f"fig15b/act_vs_buckets/nb={nb}", 0.0,
                 f"mean_act={res.mean_act():.1f}s")

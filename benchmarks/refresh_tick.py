@@ -1,0 +1,99 @@
+"""Refresh-tick microbenchmark: looped vs batched priority refresh.
+
+The Fig. 15 argument — scheduling overhead stays negligible at cluster
+scale — only holds if the bucket-tick refresh is a batched hot path.  This
+benchmark builds a queue of N live applications and times one full refresh
+tick (re-draw every demand estimate from the PDGraphs, re-bucketize, re-rank)
+under:
+
+  looped    the seed implementation — one MC walk + one histogram per
+            application per tick (``HermesScheduler(batched=False)``)
+  batched   the whole queue packed into one jitted vmapped walk + one
+            vectorized bucketize + one rank dispatch (``batched=True``)
+
+plus the cheaper rank-only tick (demand estimates cached, re-rank only).
+
+  PYTHONPATH=src python -m benchmarks.refresh_tick [--smoke] [--paper]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")  # repo-root invocation without an installed package
+
+from benchmarks.common import Csv, kb  # noqa: E402
+from repro.apps.suite import T_IN, T_OUT  # noqa: E402
+from repro.core.scheduler import HermesScheduler  # noqa: E402
+
+MC_WALKERS = 128
+
+
+def build_queue(knowledge, n_apps: int, batched: bool,
+                seed: int = 11) -> HermesScheduler:
+    sched = HermesScheduler(knowledge, policy="gittins", t_in=T_IN,
+                            t_out=T_OUT, mc_walkers=MC_WALKERS, seed=seed,
+                            batched=batched)
+    names = sorted(knowledge)
+    rng = np.random.default_rng(seed)
+    for i in range(n_apps):
+        aid = f"app{i:05d}"
+        sched.on_arrival(aid, names[i % len(names)],
+                         now=float(rng.uniform(0.0, 100.0)))
+        sched.on_progress(aid, float(rng.uniform(0.0, 5.0)))
+    return sched
+
+
+def time_refresh(sched: HermesScheduler, iters: int,
+                 resample: bool) -> float:
+    sched.refresh_tick(100.0, resample=resample)       # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        sched.refresh_tick(100.0, resample=resample)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
+        smoke: bool = False):
+    if smoke:
+        sizes, iters = (16,), 1
+    elif paper_scale:
+        sizes, iters = (64, 256, 1024, 2048), 3
+    else:
+        sizes, iters = (64, 256, 1024), 3
+    knowledge = kb()
+    for n in sizes:
+        t_loop = time_refresh(build_queue(knowledge, n, batched=False,
+                                          seed=seed), iters, resample=True)
+        t_batch = time_refresh(build_queue(knowledge, n, batched=True,
+                                           seed=seed), iters, resample=True)
+        csv.add(f"refresh_tick/full/looped/apps={n}", 1e6 * t_loop,
+                f"{1e3 * t_loop:.2f} ms/tick")
+        csv.add(f"refresh_tick/full/batched/apps={n}", 1e6 * t_batch,
+                f"{1e3 * t_batch:.2f} ms/tick speedup={t_loop / t_batch:.1f}x")
+    # rank-only tick (demand estimates cached between ticks)
+    for n in sizes[-1:]:
+        sched = build_queue(knowledge, n, batched=True, seed=seed)
+        t_rank = time_refresh(sched, max(iters, 5), resample=False)
+        csv.add(f"refresh_tick/rank_only/apps={n}", 1e6 * t_rank,
+                f"{1e3 * t_rank:.3f} ms/tick")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration (API drift canary)")
+    ap.add_argument("--paper", action="store_true",
+                    help="include the 2048-app point")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+    csv = Csv()
+    run(csv, paper_scale=args.paper, seed=args.seed, smoke=args.smoke)
+    csv.dump()
+
+
+if __name__ == "__main__":
+    main()

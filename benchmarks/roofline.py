@@ -78,7 +78,8 @@ def summary(mesh: str = "single") -> Dict[str, float]:
             "median_fraction": float(np.median(fracs)) if fracs else 0.0}
 
 
-def run(csv, paper_scale: bool = False, seed: int = 0):
+def run(csv, paper_scale: bool = False, seed: int = 0,
+        smoke: bool = False):
     for mesh in ("single", "multi"):
         cells = load_cells(mesh)
         n_ok = sum(1 for c in cells.values() if c.get("ok"))

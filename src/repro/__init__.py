@@ -1,0 +1,5 @@
+"""Reproduction of "Efficient Serving of LLM Applications with Probabilistic
+Demand Modeling" (Hermes): PDGraph demand modeling, Gittins scheduling,
+demand-aware prewarming, a cluster simulator, and JAX/Pallas model kernels."""
+
+__version__ = "0.1.0"

@@ -1,11 +1,24 @@
-"""Workload generation: bursty (MoonCake-like) arrivals over a submission
-window with the §5.1 size mix, optional per-app deadlines (1.2x/1.5x/2x true
+"""Workload generation.
+
+Two regimes:
+
+* **Closed window** (``make_workload``): a fixed population of applications
+  submitted over a window with bursty MoonCake-like arrivals — the §5.1
+  experiment shape.
+* **Open arrival** (``make_open_workload``): an unbounded arrival *process*
+  (Poisson, or bursty Gamma-renewal with a configurable coefficient of
+  variation) running for a duration, with per-tenant traffic mixes and an
+  optional ``target_load`` knob that back-solves the arrival rate from the
+  suite's mean demand and the cluster's service capacity — the cluster-scale
+  regime the Fig. 15 overhead argument is about.
+
+Both attach the §5.1 size mix, optional per-app deadlines (1.2x/1.5x/2x true
 execution, as in Fig. 11), and multi-tenant labels for the VTC baseline.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -68,3 +81,138 @@ def _coldstart_overhead(app, traj) -> float:
     execution times, which include container starts / tool loads)."""
     from repro.apps.spec import coldstart_overhead
     return coldstart_overhead(app, traj)
+
+
+# ---------------------------------------------------------------------------
+# Open-arrival (cluster-scale) workloads
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TenantProfile:
+    """One tenant's traffic share and application mix.
+
+    ``app_mix`` maps application name -> weight; ``None`` uses the global
+    §5.1 size mix.  ``deadline_frac`` is the fraction of this tenant's
+    applications that carry deadlines (only used when the workload is built
+    with deadlines enabled)."""
+    name: str
+    weight: float = 1.0
+    app_mix: Optional[Dict[str, float]] = None
+    deadline_frac: float = 1.0
+
+
+def open_arrivals(rate_per_s: float, duration_s: float,
+                  rng: np.random.Generator, *,
+                  process: str = "poisson", cv: float = 2.0) -> np.ndarray:
+    """Arrival times of an open-loop renewal process on [0, duration).
+
+    process="poisson": exponential inter-arrivals (cv = 1).
+    process="gamma":   Gamma-renewal inter-arrivals with coefficient of
+                       variation ``cv`` > 1 — bursty traffic (cv < 1 would be
+                       smoother-than-Poisson; both are valid Gamma shapes).
+    """
+    if rate_per_s <= 0 or duration_s <= 0:
+        return np.zeros(0)
+    if process == "gamma" and cv <= 0:
+        raise ValueError(f"gamma arrivals need cv > 0, got {cv}")
+    mean_gap = 1.0 / rate_per_s
+    out, t = [], 0.0
+    # draw in chunks to avoid Python-level per-arrival loops
+    chunk = max(int(rate_per_s * duration_s * 1.25) + 16, 64)
+    while t < duration_s:
+        if process == "poisson":
+            gaps = rng.exponential(mean_gap, chunk)
+        elif process == "gamma":
+            shape = 1.0 / (cv * cv)
+            gaps = rng.gamma(shape, mean_gap / shape, chunk)
+        else:
+            raise ValueError(f"unknown arrival process {process!r}")
+        times = t + np.cumsum(gaps)
+        out.append(times[times < duration_s])
+        t = float(times[-1])
+    return np.concatenate(out) if out else np.zeros(0)
+
+
+def mean_service_demand(suite: Optional[Dict[str, AppSpec]] = None, *,
+                        t_in: float, t_out: float, n_probe: int = 200,
+                        seed: int = 0) -> float:
+    """Monte-Carlo estimate of E[service seconds] per application under the
+    §5.1 mix (cold starts included) — the λ·E[S] side of the load equation."""
+    rng = np.random.default_rng(seed)
+    suite = suite or SUITE
+    names = sample_app_names(n_probe, rng)
+    tot = 0.0
+    for name in names:
+        traj = sample_trajectory(suite[name], rng)
+        tot += trajectory_service(traj, t_in, t_out) \
+            + _coldstart_overhead(suite[name], traj)
+    return tot / max(n_probe, 1)
+
+
+def make_open_workload(duration_s: float, *,
+                       t_in: float, t_out: float,
+                       rate_per_s: Optional[float] = None,
+                       target_load: Optional[float] = None,
+                       n_service_slots: int = 16,
+                       process: str = "poisson", cv: float = 2.0,
+                       tenants: Union[int, Sequence[TenantProfile]] = 8,
+                       with_deadlines: bool = False,
+                       seed: int = 0,
+                       max_apps: Optional[int] = None,
+                       apps: Optional[Dict[str, AppSpec]] = None
+                       ) -> List[AppInstance]:
+    """Open-arrival workload: applications arrive by a renewal process for
+    ``duration_s`` seconds.
+
+    Exactly one of ``rate_per_s`` / ``target_load`` must be given.
+    ``target_load`` is the offered load ρ = λ·E[S] / n_service_slots; the
+    arrival rate is solved from the suite's mean demand so ρ≈0.8 keeps the
+    cluster busy-but-stable and ρ>1 overloads it.
+
+    ``tenants`` is either a tenant count (uniform weights, global app mix) or
+    a list of :class:`TenantProfile` for skewed per-tenant traffic.
+    """
+    if (rate_per_s is None) == (target_load is None):
+        raise ValueError("give exactly one of rate_per_s / target_load")
+    rng = np.random.default_rng(seed)
+    suite = apps or SUITE
+    if rate_per_s is None:
+        e_s = mean_service_demand(suite, t_in=t_in, t_out=t_out, seed=seed)
+        rate_per_s = target_load * n_service_slots / max(e_s, 1e-9)
+    times = open_arrivals(rate_per_s, duration_s, rng,
+                          process=process, cv=cv)
+    if max_apps is not None:
+        times = times[:max_apps]
+
+    if isinstance(tenants, int):
+        profiles = [TenantProfile(name=f"tenant{i}")
+                    for i in range(max(tenants, 1))]
+    else:
+        profiles = list(tenants)
+    weights = np.asarray([max(p.weight, 0.0) for p in profiles], np.float64)
+    weights = weights / weights.sum()
+
+    out: List[AppInstance] = []
+    ddl_scales = [(1.2, "tight"), (1.5, "modest"), (2.0, "loose")]
+    for i, t in enumerate(times):
+        prof = profiles[int(rng.choice(len(profiles), p=weights))]
+        if prof.app_mix:
+            mix_names = sorted(prof.app_mix)
+            mix_w = np.asarray([prof.app_mix[n] for n in mix_names],
+                               np.float64)
+            name = mix_names[int(rng.choice(len(mix_names),
+                                            p=mix_w / mix_w.sum()))]
+        else:
+            name = sample_app_names(1, rng)[0]
+        traj = sample_trajectory(suite[name], rng)
+        inst = AppInstance(app_id=f"app{i:06d}", app_name=name,
+                           tenant=prof.name, arrival=float(t),
+                           trajectory=traj)
+        if with_deadlines and rng.uniform() < prof.deadline_frac:
+            scale, cls = ddl_scales[int(rng.integers(len(ddl_scales)))]
+            base = trajectory_service(traj, t_in, t_out) \
+                + _coldstart_overhead(suite[name], traj)
+            inst.deadline = float(t + scale * base)
+            inst.ddl_class = cls
+        out.append(inst)
+    return out

@@ -31,15 +31,41 @@ _INF = 1e30
 
 def to_histogram(samples: np.ndarray, n_buckets: int = N_BUCKETS
                  ) -> Tuple[np.ndarray, np.ndarray]:
-    """(probs (n,), right edges (n,)) over [min, max] of the samples."""
+    """(probs (n,), right edges (n,)) over [min, max] of the samples.
+
+    Delegates to the vectorized batch implementation so the per-app and
+    whole-queue paths share one binning definition (bit-identical results
+    even for samples landing exactly on a bin edge)."""
+    s = np.asarray(samples, np.float64).reshape(1, -1)
+    probs, edges = to_histogram_batch(s, n_buckets)
+    return probs[0], edges[0]
+
+
+def to_histogram_batch(samples: np.ndarray, n_buckets: int = N_BUCKETS
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Row-wise ``to_histogram`` without the per-app Python loop.
+
+    samples: (A, W) — one row of raw demand samples per application.
+    Returns (probs (A, n), right edges (A, n)).  Bins are uniform over
+    [min, max], right-open with the last bin closed; this floor-based
+    assignment is THE binning definition for both the per-app and batched
+    paths (``to_histogram`` delegates here), so the two can never diverge
+    on edge-coincident samples.
+    """
     s = np.asarray(samples, np.float64)
-    lo, hi = float(s.min()), float(s.max())
-    if hi <= lo:
-        hi = lo + max(abs(lo) * 1e-3, 1e-6)
-    edges = np.linspace(lo, hi, n_buckets + 1)
-    cnt, _ = np.histogram(s, bins=edges)
-    probs = cnt / max(cnt.sum(), 1)
-    return probs.astype(np.float64), edges[1:].astype(np.float64)
+    A, W = s.shape
+    lo = s.min(axis=1)
+    hi = s.max(axis=1)
+    hi = np.where(hi <= lo, lo + np.maximum(np.abs(lo) * 1e-3, 1e-6), hi)
+    norm = n_buckets / (hi - lo)
+    idx = ((s - lo[:, None]) * norm[:, None]).astype(np.int64)
+    np.clip(idx, 0, n_buckets - 1, out=idx)
+    flat = idx + (np.arange(A) * n_buckets)[:, None]
+    cnt = np.bincount(flat.ravel(), minlength=A * n_buckets) \
+        .reshape(A, n_buckets)
+    probs = cnt / max(W, 1)
+    edges = np.linspace(lo, hi, n_buckets + 1, axis=1)[:, 1:]
+    return probs.astype(np.float64), edges
 
 
 def gittins_rank_samples(samples: np.ndarray, attained: float) -> float:

@@ -16,11 +16,13 @@ Every policy maps application states to scalar ranks — lower rank runs first.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.gittins import gittins_rank_hist, to_histogram
+from repro.core.gittins import (gittins_rank_hist, to_histogram,
+                                to_histogram_batch)
+from repro.core.pdgraph import _pow2_ceil
 
 
 @dataclass
@@ -40,6 +42,10 @@ class Policy:
     name = "base"
     task_level = False
     needs_deadline = False
+    # True when one app's rank depends only on that app's own state (not on
+    # other apps, shared counters, or wall time) — hosts may then re-rank
+    # just the apps an event touched between full bucket-tick refreshes
+    independent_ranks = True
 
     def ranks(self, apps: List[AppView], now: float) -> np.ndarray:
         raise NotImplementedError
@@ -48,22 +54,44 @@ class Policy:
 class GittinsPolicy(Policy):
     name = "gittins"
 
-    def __init__(self, n_buckets: int = 10):
+    def __init__(self, n_buckets: int = 10, vectorized: bool = True):
         self.n_buckets = n_buckets
+        self.vectorized = vectorized   # False = seed-style per-app bucketize
 
     def ranks(self, apps: List[AppView], now: float) -> np.ndarray:
         if not apps:
             return np.zeros(0)
-        probs, edges, att = [], [], []
-        for a in apps:
-            if a.hist is None or a.hist[0].shape[0] != self.n_buckets:
+        stale = [a for a in apps
+                 if a.hist is None or a.hist[0].shape[0] != self.n_buckets]
+        if self.vectorized and len(stale) > 1 and \
+                len({len(a.total_samples) for a in stale}) == 1:
+            # whole-queue bucketization in one vectorized pass
+            P, E = to_histogram_batch(
+                np.stack([a.total_samples for a in stale]), self.n_buckets)
+            for a, p, e in zip(stale, P, E):
+                a.hist = (p, e)
+        else:
+            for a in stale:
                 a.hist = to_histogram(a.total_samples, self.n_buckets)
-            probs.append(a.hist[0])
-            edges.append(a.hist[1])
-            att.append(a.attained)
-        return np.asarray(gittins_rank_hist(
-            np.asarray(probs, np.float32), np.asarray(edges, np.float32),
-            np.asarray(att, np.float32)))
+        J = len(apps)
+        probs = np.empty((J, self.n_buckets), np.float32)
+        edges = np.empty((J, self.n_buckets), np.float32)
+        att = np.empty((J,), np.float32)
+        for i, a in enumerate(apps):
+            probs[i] = a.hist[0]
+            edges[i] = a.hist[1]
+            att[i] = a.attained
+        # pad the queue axis to a power of two: without it every distinct
+        # queue size J traces a fresh jit executable, which dominates the
+        # refresh tick once queues churn at cluster scale
+        Jp = _pow2_ceil(J)
+        if Jp > J:
+            probs = np.concatenate(
+                [probs, np.tile(probs[-1:], (Jp - J, 1))])
+            edges = np.concatenate(
+                [edges, np.tile(edges[-1:], (Jp - J, 1))])
+            att = np.concatenate([att, np.zeros(Jp - J, np.float32)])
+        return np.asarray(gittins_rank_hist(probs, edges, att))[:J]
 
 
 class SRPTMeanPolicy(Policy):
@@ -91,6 +119,7 @@ class FCFSRequestPolicy(FCFSAppPolicy):
 class VTCPolicy(Policy):
     """Virtual-token-counter fairness: serve the least-served tenant first."""
     name = "vtc"
+    independent_ranks = False    # rank = shared per-tenant counter
 
     def __init__(self):
         self.counters: Dict[str, float] = {}
@@ -111,6 +140,22 @@ class EDFPolicy(Policy):
                            for a in apps])
 
 
+def _demand_stats(apps: List[AppView], sup_q: float, hopeless_q: float
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(P_sup, P_hopeless, mean) of every app's demand samples — one
+    vectorized pass when the queue's sample arrays share a length (the
+    batched-refresh common case), per-app otherwise."""
+    lens = {len(a.total_samples) for a in apps}
+    if len(apps) > 1 and len(lens) == 1:
+        M = np.stack([a.total_samples for a in apps])
+        sup, opt = np.quantile(M, [sup_q, hopeless_q], axis=1)
+        return sup, opt, M.mean(axis=1)
+    sup = np.asarray([np.quantile(a.total_samples, sup_q) for a in apps])
+    opt = np.asarray([np.quantile(a.total_samples, hopeless_q) for a in apps])
+    mean = np.asarray([np.mean(a.total_samples) for a in apps])
+    return sup, opt, mean
+
+
 class LSTFPolicy(Policy):
     """Worst-case slack: S = ddl - now - (sup X - a)   (eq. 2).
 
@@ -124,6 +169,7 @@ class LSTFPolicy(Policy):
     """
     name = "lstf"
     needs_deadline = True
+    independent_ranks = False    # slack is a function of `now`
     sup_q = 0.9
     hopeless_q = 0.1
     slack_bucket_s = 20.0
@@ -135,21 +181,19 @@ class LSTFPolicy(Policy):
         (3) within a slack bucket, smallest expected remaining first — equal
         urgency is broken by throughput, which is what lifts DSR when many
         deadlines compete."""
-        out = []
-        for a in apps:
+        sup, opt, mean = _demand_stats(apps, self.sup_q, self.hopeless_q)
+        out = np.full(len(apps), np.inf)
+        for i, a in enumerate(apps):
             if a.deadline is None:
-                out.append(np.inf)
                 continue
-            sup = float(np.quantile(a.total_samples, self.sup_q))
-            opt = float(np.quantile(a.total_samples, self.hopeless_q))
-            mean_rem = max(float(np.mean(a.total_samples)) - a.attained, 0.0)
-            slack = a.deadline - now - max(sup - a.attained, 0.0)
+            mean_rem = max(mean[i] - a.attained, 0.0)
+            slack = a.deadline - now - max(sup[i] - a.attained, 0.0)
             bucket = np.floor(slack / self.slack_bucket_s) * self.slack_bucket_s
             rank = bucket * 1e3 + mean_rem
-            if a.deadline - now - max(opt - a.attained, 0.0) < 0.0:
+            if a.deadline - now - max(opt[i] - a.attained, 0.0) < 0.0:
                 rank += self.hopeless_penalty  # even optimistically missed
-            out.append(rank)
-        return np.asarray(out)
+            out[i] = rank
+        return out
 
 
 class HermesDDLPolicy(Policy):
@@ -168,6 +212,7 @@ class HermesDDLPolicy(Policy):
     """
     name = "hermes_ddl"
     needs_deadline = True
+    independent_ranks = False    # triage class is a function of `now`
     sup_q = 0.9
     hopeless_q = 0.1
     risk_window_s = 30.0
@@ -176,18 +221,25 @@ class HermesDDLPolicy(Policy):
     def __init__(self, n_buckets: int = 10):
         self.gittins = GittinsPolicy(n_buckets)
 
+    @property
+    def vectorized(self) -> bool:
+        return self.gittins.vectorized
+
+    @vectorized.setter
+    def vectorized(self, value: bool) -> None:
+        self.gittins.vectorized = value
+
     def ranks(self, apps, now):
         g = self.gittins.ranks(apps, now)
         g = np.minimum(g, self.cls_span * 0.99)
+        sup, opt, _ = _demand_stats(apps, self.sup_q, self.hopeless_q)
         out = []
-        for a, gr in zip(apps, g):
+        for i, (a, gr) in enumerate(zip(apps, g)):
             if a.deadline is None:
                 out.append(self.cls_span + gr)
                 continue
-            sup = float(np.quantile(a.total_samples, self.sup_q))
-            opt = float(np.quantile(a.total_samples, self.hopeless_q))
-            slack_sup = a.deadline - now - max(sup - a.attained, 0.0)
-            slack_opt = a.deadline - now - max(opt - a.attained, 0.0)
+            slack_sup = a.deadline - now - max(sup[i] - a.attained, 0.0)
+            slack_opt = a.deadline - now - max(opt[i] - a.attained, 0.0)
             if slack_opt < 0.0:
                 cls = 2
             elif slack_sup < self.risk_window_s:

@@ -12,6 +12,7 @@ same ``on_*`` callbacks; in a production deployment these arrive over RPC
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -20,7 +21,8 @@ import numpy as np
 import jax
 
 from repro.core import correlation as C
-from repro.core.pdgraph import PDGraph
+from repro.core.pdgraph import (PDGraph, mc_service_samples_batch,
+                                pack_graphs)
 from repro.core.policies import AppView, Policy, VTCPolicy, make_policy
 from repro.core.prewarm import PrewarmSignal, plan_prewarms
 
@@ -40,6 +42,8 @@ class AppRuntime:
     overrides: Dict[str, np.ndarray] = field(default_factory=dict)
     view: Optional[AppView] = None
     oracle_remaining: Optional[float] = None
+    key_id: int = 0                       # stable per-app RNG stream id
+    refreshes: int = 0                    # per-app view-refresh counter
 
 
 class HermesScheduler:
@@ -48,7 +52,8 @@ class HermesScheduler:
                  t_in: float = 1e-4, t_out: float = 2e-3,
                  K: float = 0.5, n_buckets: int = 10,
                  refine: bool = True, prewarm: bool = True,
-                 mc_walkers: int = 512, seed: int = 0):
+                 mc_walkers: int = 512, seed: int = 0,
+                 batched: bool = True):
         self.kb = knowledge_base
         self.policy: Policy = make_policy(policy) if policy != "gittins" \
             else make_policy(policy, n_buckets=n_buckets)
@@ -58,33 +63,89 @@ class HermesScheduler:
         self.refine = refine
         self.prewarm_enabled = prewarm
         self.mc_walkers = mc_walkers
+        # batched=True packs the whole queue into one jitted MC dispatch per
+        # refresh; False keeps the seed's per-application loop (the Fig. 15
+        # "looped" baseline).  Both derive identical per-app RNG streams.
+        self.batched = batched
+        if hasattr(self.policy, "vectorized"):
+            self.policy.vectorized = batched
         self.apps: Dict[str, AppRuntime] = {}
-        self._key = jax.random.PRNGKey(seed)
+        # live subset of `apps`: the refresh tick iterates only this, and
+        # retired apps drop their sample arrays, so an unbounded open-arrival
+        # stream costs O(live queue) per tick, not O(total arrivals)
+        self._live: Dict[str, AppRuntime] = {}
+        self._base_key = jax.random.PRNGKey(seed)
+        self._app_seq = itertools.count()
+        self._packed = None               # (kb versions, PackedKB) cache
         for g in self.kb.values():
             C.apply_masks(g)
 
     # ------------------------------------------------------------ internals
-    def _next_key(self):
-        self._key, k = jax.random.split(self._key)
-        return k
+    def _app_key(self, app: AppRuntime):
+        """Deterministic per-(app, refresh) key — mode-independent, so the
+        looped and batched paths draw bit-identical MC samples."""
+        k = jax.random.fold_in(self._base_key, app.key_id)
+        return jax.random.fold_in(k, app.refreshes)
+
+    def _packed_kb(self):
+        versions = tuple(sorted((n, g.version) for n, g in self.kb.items()))
+        if self._packed is None or self._packed[0] != versions:
+            self._packed = (versions,
+                            pack_graphs(self.kb, self.t_in, self.t_out))
+        return self._packed[1]
 
     def _total_samples(self, app: AppRuntime) -> np.ndarray:
         """TOTAL demand distribution = attained + MC(remaining)."""
         g = self.kb[app.app_name]
         rem = g.mc_service_samples(
-            self._next_key(), self.t_in, self.t_out,
+            self._app_key(app), self.t_in, self.t_out,
             start_unit=app.current_unit,
             executed_in_unit=app.attained_in_unit,
             unit_sample_override=app.overrides or None,
             n_walkers=self.mc_walkers)
+        app.refreshes += 1
         return app.attained + np.maximum(rem, 0.0)
 
-    def _refresh_view(self, app: AppRuntime) -> None:
-        samples = self._total_samples(app)
+    def _make_view(self, app: AppRuntime, samples: np.ndarray) -> None:
         app.view = AppView(app_id=app.app_id, tenant=app.tenant,
                            arrival=app.arrival, attained=app.attained,
                            total_samples=samples, deadline=app.deadline,
                            oracle_remaining=app.oracle_remaining)
+
+    def _refresh_view(self, app: AppRuntime) -> None:
+        self._make_view(app, self._total_samples(app))
+
+    def _refresh_views(self, apps: List[AppRuntime]) -> None:
+        """Refresh many views at once: one padded batched MC dispatch for
+        the whole set instead of one walk per application."""
+        if not apps:
+            return
+        if not self.batched or len(apps) == 1:
+            for a in apps:
+                self._refresh_view(a)
+            return
+        packed = self._packed_kb()
+        gi = np.asarray([packed.graph_index[a.app_name] for a in apps],
+                        np.int32)
+        start = np.asarray(
+            [packed.unit_index[g][a.current_unit] if a.current_unit
+             else packed.entry[g] for g, a in zip(gi, apps)], np.int32)
+        rem = mc_service_samples_batch(
+            packed, self._base_key,
+            graph_idx=gi, start=start,
+            executed=np.asarray([a.attained_in_unit for a in apps]),
+            key_ids=np.asarray([a.key_id for a in apps], np.int32),
+            refresh_ids=np.asarray([a.refreshes for a in apps], np.int32),
+            overrides=[a.overrides or None for a in apps],
+            n_walkers=self.mc_walkers)
+        total = np.maximum(rem, 0.0)
+        # float32 addend: bit-identical to the looped path's
+        # `attained + np.maximum(rem, 0.0)` float32 scalar promotion
+        total += np.asarray([a.attained for a in apps],
+                            np.float32)[:, None]
+        for a, row in zip(apps, total):
+            a.refreshes += 1
+            self._make_view(a, row)
 
     # -------------------------------------------------------------- events
     def on_arrival(self, app_id: str, app_name: str, now: float, *,
@@ -93,9 +154,12 @@ class HermesScheduler:
         g = self.kb[app_name]
         app = AppRuntime(app_id=app_id, app_name=app_name, tenant=tenant,
                          arrival=now, deadline=deadline,
-                         current_unit=g.entry, unit_start=now)
+                         current_unit=g.entry, unit_start=now,
+                         key_id=next(self._app_seq))
         self.apps[app_id] = app
-        self._refresh_view(app)
+        self._live[app_id] = app
+        # view stays stale until the next priorities() call, which refreshes
+        # every stale view in one batched dispatch
 
     def on_unit_start(self, app_id: str, unit: str, now: float) -> None:
         app = self.apps[app_id]
@@ -134,17 +198,26 @@ class HermesScheduler:
                 if cond is not None:
                     app.overrides[name] = cond
         if next_unit is None:
-            app.done = True
-            app.current_unit = None
+            self._retire(app)
         else:
             app.current_unit = next_unit
             app.unit_start = now
             app.attained_in_unit = 0.0
         if not app.done:
-            self._refresh_view(app)
+            app.view = None          # stale: re-estimated on next priorities()
 
     def on_app_complete(self, app_id: str) -> None:
-        self.apps[app_id].done = True
+        self._retire(self.apps[app_id])
+
+    def _retire(self, app: AppRuntime) -> None:
+        """Mark done and release the per-app demand state (sample arrays,
+        refinement overrides); the AppRuntime shell stays in `apps` for
+        host-side bookkeeping."""
+        app.done = True
+        app.current_unit = None
+        app.view = None
+        app.overrides.clear()
+        self._live.pop(app.app_id, None)
 
     def set_oracle(self, app_id: str, remaining: float) -> None:
         app = self.apps[app_id]
@@ -153,18 +226,35 @@ class HermesScheduler:
             app.view.oracle_remaining = remaining
 
     # ------------------------------------------------------------ decisions
-    def priorities(self, now: float) -> Dict[str, float]:
-        """Rank every live application (lower = run first).  Called once per
-        bucket period — the Fig. 15 hot path."""
-        live = [a for a in self.apps.values() if not a.done]
-        for a in live:
-            if a.view is None:
-                self._refresh_view(a)
+    def priorities(self, now: float,
+                   app_ids: Optional[List[str]] = None) -> Dict[str, float]:
+        """Rank live applications (lower = run first).  Called once per
+        bucket period — the Fig. 15 hot path.  ``app_ids`` restricts the
+        ranking to a subset (ranks are per-app independent, so hosts can
+        re-rank just the applications an event touched between full ticks).
+        """
+        if app_ids is None:
+            live = list(self._live.values())
+        else:
+            live = [self.apps[i] for i in app_ids
+                    if i in self.apps and not self.apps[i].done]
+        self._refresh_views([a for a in live if a.view is None])
         views = [a.view for a in live]
         if not views:
             return {}
         ranks = self.policy.ranks(views, now)
         return {a.app_id: float(r) for a, r in zip(live, ranks)}
+
+    def refresh_tick(self, now: float, *,
+                     resample: bool = False) -> Dict[str, float]:
+        """The bucket-tick refresh: re-rank the whole queue.  With
+        ``resample=True`` every live demand estimate is first re-drawn from
+        the PDGraphs (one batched MC dispatch in batched mode, one walk per
+        app in looped mode) — the full Fig. 15 refresh cost."""
+        if resample:
+            for a in self._live.values():
+                a.view = None
+        return self.priorities(now)
 
     def prewarm_signals(self, app_id: str, now: float,
                         warmup_time_of, is_warm) -> List[PrewarmSignal]:

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_scr, *, n_d: int):
     di = pl.program_id(3)
@@ -60,7 +62,7 @@ def moe_gmm_kernel(x: jnp.ndarray, w: jnp.ndarray, *, block_c: int = 128,
                                lambda e, c, n, d: (e, c, n)),
         out_shape=jax.ShapeDtypeStruct((E, C, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_c, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -1,0 +1,1 @@
+"""Runtime services: fault tolerance."""

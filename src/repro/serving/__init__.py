@@ -1,0 +1,1 @@
+"""Serving layer: engine, KV cache, LoRA, cluster simulator."""

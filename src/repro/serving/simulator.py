@@ -120,7 +120,11 @@ class ClusterSim:
         self.slots = {"llm": cfg.n_llm_slots, "docker": cfg.n_docker_slots,
                       "dnn": cfg.n_dnn_slots}
         self.running: Dict[str, List[SimTask]] = {k: [] for k in self.slots}
-        self.waiting: Dict[str, List[SimTask]] = {k: [] for k in self.slots}
+        # waiting queues are heaps of (rank_key, task); keys go stale when
+        # ranks refresh, so full refreshes rebuild the heaps (O(Q)) instead
+        # of resorting every queue on every event (O(E * Q log Q))
+        self.waiting: Dict[str, List[Tuple[tuple, SimTask]]] = \
+            {k: [] for k in self.slots}
         self.apps: Dict[str, AppSim] = {}
         self.events: List[Tuple[float, int, str, object]] = []
         self._eid = itertools.count()
@@ -199,8 +203,8 @@ class ClusterSim:
             g = self.kb[inst.app_name]
             for key in g.units[g.entry].backend.resource_keys():
                 self.let.prewarm(self._qualify(key, inst.app_id), self.now)
+        self._refresh_ranks([inst.app_id])
         self._spawn_unit(sim)
-        self._refresh_ranks()
 
     def _qualify(self, key: str, app_id: str) -> str:
         """Docker containers are per-application-run (the paper's code-exec
@@ -224,7 +228,7 @@ class ClusterSim:
             task = SimTask(task_id=next(self._tid), app_id=sim.inst.app_id,
                            unit=unit, kind=backend.kind, service=per_task,
                            keys=keys, submitted=self.now)
-            self.waiting[backend.kind].append(task)
+            self._enqueue(task)
             if self.cfg.prewarm_mode == "epwq":
                 for key in task.keys:  # prefetch for queued requests only
                     if not self.let.is_present(key):
@@ -275,9 +279,10 @@ class ClusterSim:
         self.sched.on_unit_finish(task.app_id, unit, obs, self.now, nxt)
         if nxt is None:
             sim.finished = self.now
+            self._ranks.pop(task.app_id, None)
             return True
+        self._refresh_ranks([task.app_id])
         self._spawn_unit(sim)
-        self._refresh_ranks()
         return False
 
     def _on_tick(self):
@@ -286,17 +291,39 @@ class ClusterSim:
                 self._credit(task)
         self._refresh_ranks()
 
-    def _refresh_ranks(self):
+    def _refresh_ranks(self, app_ids=None):
+        """Full queue refresh on bucket ticks (stale heap keys rebuilt).
+        Between ticks, policies whose ranks depend only on the app's own
+        state re-rank just the applications an event touched; policies with
+        cross-app or time-dependent ranks (VTC counters, deadline slack)
+        keep the seed's full re-rank on every event."""
         t0 = _time.perf_counter()
-        self._ranks = self.sched.priorities(self.now)
+        if app_ids is not None and \
+                getattr(self.sched.policy, "independent_ranks", True):
+            self._ranks.update(self.sched.priorities(self.now,
+                                                     app_ids=app_ids))
+        else:
+            self._ranks = self.sched.priorities(self.now)
+            self._rebuild_waiting()
         self.policy_time += _time.perf_counter() - t0
         self.policy_calls += 1
 
     # ------------------------------------------------------------ scheduling
-    def _task_rank(self, task: SimTask) -> Tuple[float, float]:
+    def _task_rank(self, task: SimTask) -> Tuple[float, float, int]:
         if getattr(self.sched.policy, "task_level", False):
-            return (task.submitted, task.task_id)
-        return (self._ranks.get(task.app_id, np.inf), task.submitted)
+            return (task.submitted, task.task_id, 0)
+        return (self._ranks.get(task.app_id, np.inf), task.submitted,
+                task.task_id)
+
+    def _enqueue(self, task: SimTask):
+        heapq.heappush(self.waiting[task.kind], (self._task_rank(task), task))
+
+    def _rebuild_waiting(self):
+        for kind, entries in self.waiting.items():
+            if entries:
+                fresh = [(self._task_rank(t), t) for _, t in entries]
+                heapq.heapify(fresh)
+                self.waiting[kind] = fresh
 
     def _start(self, task: SimTask):
         ready = self.now
@@ -315,34 +342,27 @@ class ClusterSim:
         task.running = False
         task.epoch += 1
         self.running[task.kind].remove(task)
-        self.waiting[task.kind].append(task)
+        self._enqueue(task)
 
     def _reschedule(self):
         for kind, cap in self.slots.items():
-            waiting = self.waiting[kind]
-            if not waiting and len(self.running[kind]) <= cap:
-                continue
-            waiting.sort(key=self._task_rank)
+            wq = self.waiting[kind]
             # fill free slots
-            while waiting and len(self.running[kind]) < cap:
-                self._start(waiting.pop(0))
-            if not self.cfg.preemptive or not waiting:
+            while wq and len(self.running[kind]) < cap:
+                self._start(heapq.heappop(wq)[1])
+            if not self.cfg.preemptive or not wq:
                 continue
             # preempt: lowest-priority running vs highest-priority waiting
-            changed = True
-            while changed and waiting:
-                changed = False
+            while wq:
                 run = self.running[kind]
                 victim = max(run, key=self._task_rank, default=None)
-                if victim is None:
+                if victim is None or victim.ready_at > self.now:
                     break
-                cand = waiting[0]
-                if (self._task_rank(cand) < self._task_rank(victim)
-                        and victim.ready_at <= self.now):
+                if wq[0][0] < self._task_rank(victim):
                     self._preempt(victim)
-                    self._start(waiting.pop(0))
-                    waiting.sort(key=self._task_rank)
-                    changed = True
+                    self._start(heapq.heappop(wq)[1])
+                else:
+                    break
 
 
 def run_sim(kb: Dict[str, PDGraph], instances: List[AppInstance],

@@ -4,3 +4,12 @@ import sys
 # tests must see ONE device (the dry-run sets its own flag in-process)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# hermetic fallback: when real Hypothesis isn't installed (no-network
+# containers), expose the deterministic stub in tests/_stubs so the property
+# tests still collect and run; `pip install -e .[dev]` / CI always get the
+# real engine
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_stubs"))

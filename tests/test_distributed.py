@@ -21,6 +21,7 @@ def _run_subprocess(code: str, n_devices: int = 4) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_ep_moe_matches_dense_on_2x2_mesh():
     out = _run_subprocess("""
         import numpy as np, jax, jax.numpy as jnp
@@ -45,6 +46,7 @@ def test_ep_moe_matches_dense_on_2x2_mesh():
     assert "ERR" in out
 
 
+@pytest.mark.slow
 def test_train_step_shards_and_runs_on_mesh():
     out = _run_subprocess("""
         import numpy as np, jax, jax.numpy as jnp

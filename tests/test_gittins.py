@@ -4,7 +4,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.gittins import (gittins_rank_hist_np, gittins_rank_samples,
-                                srpt_mean_rank, to_histogram)
+                                srpt_mean_rank, to_histogram,
+                                to_histogram_batch)
 
 
 def test_deterministic_equals_srpt():
@@ -107,3 +108,47 @@ def test_property_scale_equivariance(mean, sigma):
     g1 = gittins_rank_samples(s, 0.0)
     g2 = gittins_rank_samples(s * 7.0, 0.0)
     assert g2 == pytest.approx(7.0 * g1, rel=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(40, 300))
+def test_property_batched_rank_matches_numpy_oracle(seed, n_apps, n_samples):
+    """The whole-queue vmapped rank agrees with the per-app numpy oracle
+    within one bucket width on bucket-friendly distributions — the batched
+    hot path cannot silently drift from the exact Gittins definition."""
+    rng = np.random.default_rng(seed)
+    rows = rng.uniform(10.0, 10.0 + rng.uniform(5.0, 40.0, (n_apps, 1)),
+                       (n_apps, n_samples))
+    probs, edges = to_histogram_batch(rows, 10)
+    batch = gittins_rank_hist_np(probs, edges, np.zeros(n_apps))
+    for i in range(n_apps):
+        width = float(edges[i, 1] - edges[i, 0])
+        oracle = gittins_rank_samples(rows[i], 0.0)
+        assert batch[i] == pytest.approx(oracle, abs=1.5 * width)
+
+
+def test_histogram_edge_coincident_samples_identical():
+    """Lattice-valued samples land exactly on interior bin edges — the
+    per-app and batched binning must still agree bin-for-bin (they share
+    one floor-based definition; a second implementation regressed here)."""
+    s = np.arange(2.0, 103.0, 10.0)          # edges every 10.0, all on-edge
+    p1, e1 = to_histogram(s, 10)
+    P, E = to_histogram_batch(np.stack([s, s * 0.5]), 10)
+    np.testing.assert_array_equal(P[0], p1)
+    np.testing.assert_array_equal(E[0], e1)
+    assert P[0].sum() == pytest.approx(1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(2, 32))
+def test_property_histogram_batch_matches_per_app(seed, n_apps, nb):
+    """to_histogram_batch rows == per-app to_histogram (same probs/edges)."""
+    rng = np.random.default_rng(seed)
+    rows = rng.lognormal(rng.uniform(0, 3, (n_apps, 1)), 0.7, (n_apps, 120))
+    P, E = to_histogram_batch(rows, nb)
+    assert P.shape == E.shape == (n_apps, nb)
+    for i in range(n_apps):
+        p, e = to_histogram(rows[i], nb)
+        np.testing.assert_allclose(P[i], p, atol=1e-12)
+        np.testing.assert_allclose(E[i], e, rtol=1e-12)
+        assert P[i].sum() == pytest.approx(1.0)

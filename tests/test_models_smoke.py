@@ -11,6 +11,12 @@ from repro.models.model import build_model
 from repro.testing import tiny_config
 
 ARCHS = sorted(list_configs())
+# the jamba hybrid (tens of seconds per step on CPU) and the two MoE configs
+# are the expensive tiny-configs; they run in the non-blocking slow tier —
+# MoE logic keeps fast-tier coverage via test_moe.py and the kernel sweeps
+_SLOW_ARCHS = ("jamba", "moe")
+_ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow)
+                if any(s in a for s in _SLOW_ARCHS) else a for a in ARCHS]
 RNG = jax.random.PRNGKey(0)
 
 
@@ -26,7 +32,7 @@ def _batch(cfg, B=2, S=16):
     return b
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_train_step_shapes_and_finite(arch):
     cfg = tiny_config(arch)
     m = build_model(cfg)
@@ -36,7 +42,7 @@ def test_train_step_shapes_and_finite(arch):
     assert np.isfinite(float(loss))
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_prefill_decode_roundtrip(arch):
     cfg = tiny_config(arch)
     m = build_model(cfg)
@@ -71,7 +77,7 @@ def test_all_ten_archs_registered():
     assert len(ARCHS) == 10
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_decode_matches_prefill_logits(arch):
     """Teacher-forcing agreement: decode(t) after prefill(:t) == prefill(:t+1)."""
     if arch == "whisper-large-v3":

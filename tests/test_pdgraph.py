@@ -80,7 +80,11 @@ def test_mc_branch_probabilities():
                         (branch, {"dur": 1.0 if branch == "short" else 100.0})])
     out = g.mc_service_samples(jax.random.PRNGKey(1), 0.001, 0.01,
                                n_walkers=2048)
-    expect = 1.0 + 0.75 * 1.0 + 0.25 * 100.0
+    # the MC walk reproduces the *recorded* branch frequencies, which for a
+    # finite trial set deviate from the 0.75/0.25 generator (seed 0 lands on
+    # ~0.29 long) — compare against the empirical next-unit distribution
+    p_long = g.units["a"].next_probs()["long"]
+    expect = 1.0 + (1.0 - p_long) * 1.0 + p_long * 100.0
     assert np.mean(out) == pytest.approx(expect, rel=0.15)
 
 

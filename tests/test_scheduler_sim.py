@@ -45,6 +45,7 @@ def test_gittins_close_to_oracle(results):
     assert results["gittins"].mean_act() <= 1.25 * results["oracle"].mean_act()
 
 
+@pytest.mark.slow
 def test_deadlines_hermes_ddl_beats_edf(kb):
     # fig-11 regime (contended): the full Hermes-DDL system (demand-aware
     # triage + prewarming) vs the EDF baseline system, as the paper compares

@@ -21,6 +21,7 @@ def _run(kb, insts, **kw):
     return ClusterSim(kb, cfg).run(list(insts))
 
 
+@pytest.mark.slow
 def test_full_stack_hermes_vs_baselines(system):
     kb, insts = system
     hermes = _run(kb, insts, policy="gittins", prewarm_mode="hermes")

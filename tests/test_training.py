@@ -20,11 +20,13 @@ DCFG = DataConfig(vocab_size=256, seq_len=32, global_batch=4)
 TCFG = TrainConfig(learning_rate=1e-3, warmup_steps=5, checkpoint_every=10)
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     rep = run_training(CFG, TCFG, DCFG, total_steps=40, verbose=False)
     assert np.mean(rep.losses[-5:]) < np.mean(rep.losses[:5])
 
 
+@pytest.mark.slow
 def test_restart_bit_exact(tmp_path):
     rep_a = run_training(CFG, TCFG, DCFG, total_steps=35,
                          ckpt_dir=str(tmp_path / "a"), verbose=False)

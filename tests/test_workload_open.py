@@ -1,0 +1,108 @@
+"""Open-arrival workload generation + cluster-scale simulator runs."""
+import numpy as np
+import pytest
+
+from repro.apps.suite import SUITE, T_IN, T_OUT, build_knowledge_base
+from repro.apps.workload import (TenantProfile, make_open_workload,
+                                 mean_service_demand, open_arrivals)
+from repro.serving.simulator import SimConfig, run_sim
+
+
+def test_poisson_rate_and_window():
+    rng = np.random.default_rng(0)
+    t = open_arrivals(5.0, 400.0, rng, process="poisson")
+    assert np.all((t >= 0) & (t < 400.0))
+    assert np.all(np.diff(t) >= 0)
+    # ~2000 expected arrivals; 5 sigma ≈ 225
+    assert len(t) == pytest.approx(2000, abs=250)
+
+
+def test_gamma_is_burstier_than_poisson():
+    rng = np.random.default_rng(1)
+    tp = open_arrivals(4.0, 2000.0, np.random.default_rng(1), process="poisson")
+    tg = open_arrivals(4.0, 2000.0, rng, process="gamma", cv=3.0)
+    cv_p = np.std(np.diff(tp)) / np.mean(np.diff(tp))
+    cv_g = np.std(np.diff(tg)) / np.mean(np.diff(tg))
+    assert cv_p == pytest.approx(1.0, abs=0.15)
+    assert cv_g > 2.0
+
+
+def test_unknown_process_raises():
+    with pytest.raises(ValueError):
+        open_arrivals(1.0, 10.0, np.random.default_rng(0), process="pareto")
+
+
+def test_target_load_solves_rate():
+    """ρ = λ·E[S]/slots: the generated arrival rate matches the back-solved
+    λ for the requested load."""
+    e_s = mean_service_demand(t_in=T_IN, t_out=T_OUT, seed=4)
+    insts = make_open_workload(3000.0, t_in=T_IN, t_out=T_OUT,
+                               target_load=0.7, n_service_slots=64, seed=4)
+    lam = len(insts) / 3000.0
+    assert lam * e_s / 64 == pytest.approx(0.7, rel=0.2)
+
+
+def test_tenant_profiles_and_mixes():
+    profs = [TenantProfile("whale", weight=8.0, app_mix={"CG": 1.0}),
+             TenantProfile("minnow", weight=1.0)]
+    insts = make_open_workload(500.0, t_in=T_IN, t_out=T_OUT, rate_per_s=1.0,
+                               tenants=profs, seed=2)
+    assert len(insts) > 100
+    by_tenant = {p.name: [i for i in insts if i.tenant == p.name]
+                 for p in profs}
+    # 8:1 weights
+    ratio = len(by_tenant["whale"]) / max(len(by_tenant["minnow"]), 1)
+    assert ratio == pytest.approx(8.0, rel=0.5)
+    # whale only ever submits CG; minnow draws from the whole suite mix
+    assert {i.app_name for i in by_tenant["whale"]} == {"CG"}
+    assert len({i.app_name for i in by_tenant["minnow"]}) > 1
+    assert all(i.app_name in SUITE for i in insts)
+
+
+def test_deadline_fraction():
+    profs = [TenantProfile("ddl", deadline_frac=1.0),
+             TenantProfile("nodl", deadline_frac=0.0)]
+    insts = make_open_workload(400.0, t_in=T_IN, t_out=T_OUT, rate_per_s=0.5,
+                               tenants=profs, with_deadlines=True, seed=3)
+    for i in insts:
+        if i.tenant == "ddl":
+            assert i.deadline is not None and i.deadline > i.arrival
+            assert i.ddl_class in ("tight", "modest", "loose")
+        else:
+            assert i.deadline is None
+
+
+def test_rate_xor_load_required():
+    with pytest.raises(ValueError):
+        make_open_workload(10.0, t_in=T_IN, t_out=T_OUT)
+    with pytest.raises(ValueError):
+        make_open_workload(10.0, t_in=T_IN, t_out=T_OUT,
+                           rate_per_s=1.0, target_load=0.5)
+
+
+def test_open_arrival_sim_completes_small():
+    kb = build_knowledge_base(n_trials=60, seed=3)
+    insts = make_open_workload(240.0, t_in=T_IN, t_out=T_OUT,
+                               target_load=0.8, n_service_slots=16,
+                               process="gamma", cv=2.0, seed=5, max_apps=60)
+    res = run_sim(kb, insts, SimConfig(mc_walkers=32, seed=6))
+    assert len(res.acts) == len(insts)
+    assert res.makespan > 0
+    assert all(v > 0 for v in res.acts.values())
+
+
+@pytest.mark.slow
+def test_open_arrival_sim_sustains_2000_apps():
+    """The scale acceptance bar: a 2,000+ application open-arrival run
+    completes on the batched refresh path."""
+    kb = build_knowledge_base(n_trials=100, seed=3)
+    insts = make_open_workload(4000.0, t_in=T_IN, t_out=T_OUT,
+                               target_load=0.85, n_service_slots=128,
+                               process="gamma", cv=2.5, tenants=16,
+                               seed=1, max_apps=2100)
+    assert len(insts) >= 2000
+    cfg = SimConfig(n_llm_slots=128, n_docker_slots=256, n_dnn_slots=24,
+                    kv_capacity=128, lora_capacity=64, docker_capacity=256,
+                    dnn_capacity=16, mc_walkers=64, seed=2)
+    res = run_sim(kb, insts, cfg)
+    assert len(res.acts) == len(insts)
