@@ -1,23 +1,36 @@
-"""Refresh-tick microbenchmark: looped vs batched priority refresh.
+"""Refresh-tick microbenchmark: looped vs composed vs fused priority refresh.
 
 The Fig. 15 argument — scheduling overhead stays negligible at cluster
 scale — only holds if the bucket-tick refresh is a batched hot path.  This
 benchmark builds a queue of N live applications and times one full refresh
-tick (re-draw every demand estimate from the PDGraphs, re-bucketize, re-rank)
-under:
+tick (re-draw every demand estimate from the PDGraphs, re-bucketize,
+re-rank) under:
 
-  looped    the seed implementation — one MC walk + one histogram per
-            application per tick (``HermesScheduler(batched=False)``)
-  batched   the whole queue packed into one jitted vmapped walk + one
-            vectorized bucketize + one rank dispatch (``batched=True``)
+  looped        the seed implementation — one MC walk + one histogram per
+                application per tick (``HermesScheduler(mode="looped")``)
+  composed      PR 1: one jitted vmapped walk, host-side numpy bucketize,
+                second jitted rank dispatch (``mode="composed"``)
+  fused         the device-resident pipeline with the threefry walker —
+                walk → bucketize → rank in ONE dispatch, bit-identical
+                demand samples to composed (``mode="fused",
+                walker="threefry"``): isolates the fusion gain
+  fused_pallas  the shipping fused path: the counter-RNG ``pdgraph_walk``
+                kernel package with phase compaction (``walker="pallas"``;
+                Pallas kernel on TPU, its bit-identical jnp twin on CPU):
+                fusion + RNG + compaction gains together
 
 plus the cheaper rank-only tick (demand estimates cached, re-rank only).
+
+Every run (including ``--smoke``) also records machine-readable results in
+``BENCH_refresh_tick.json`` so CI can archive the trajectory.
 
   PYTHONPATH=src python -m benchmarks.refresh_tick [--smoke] [--paper]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -30,13 +43,24 @@ from repro.apps.suite import T_IN, T_OUT  # noqa: E402
 from repro.core.scheduler import HermesScheduler  # noqa: E402
 
 MC_WALKERS = 128
+JSON_PATH = "BENCH_refresh_tick.json"
+
+ARMS = {
+    "looped": dict(mode="looped"),
+    "composed": dict(mode="composed"),
+    "fused": dict(mode="fused", walker="threefry"),
+    "fused_pallas": dict(mode="fused", walker="pallas"),
+}
+# the per-app looped baseline is O(queue) dispatches per tick; past 1k apps
+# it would dominate the whole benchmark wall time for a known-linear curve
+LOOPED_MAX_APPS = 1024
 
 
-def build_queue(knowledge, n_apps: int, batched: bool,
+def build_queue(knowledge, n_apps: int, arm: str,
                 seed: int = 11) -> HermesScheduler:
     sched = HermesScheduler(knowledge, policy="gittins", t_in=T_IN,
                             t_out=T_OUT, mc_walkers=MC_WALKERS, seed=seed,
-                            batched=batched)
+                            **ARMS[arm])
     names = sorted(knowledge)
     rng = np.random.default_rng(seed)
     for i in range(n_apps):
@@ -50,6 +74,7 @@ def build_queue(knowledge, n_apps: int, batched: bool,
 def time_refresh(sched: HermesScheduler, iters: int,
                  resample: bool) -> float:
     sched.refresh_tick(100.0, resample=resample)       # warmup / compile
+    sched.fused_spill = 0          # count spill over the timed ticks only
     t0 = time.perf_counter()
     for _ in range(iters):
         sched.refresh_tick(100.0, resample=resample)
@@ -61,25 +86,60 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
     if smoke:
         sizes, iters = (16,), 1
     elif paper_scale:
-        sizes, iters = (64, 256, 1024, 2048), 3
+        sizes, iters = (256, 1024, 4096, 8192), 3
     else:
-        sizes, iters = (64, 256, 1024), 3
+        sizes, iters = (256, 1024, 4096), 3
     knowledge = kb()
+    records = []
+    per_size = {}
     for n in sizes:
-        t_loop = time_refresh(build_queue(knowledge, n, batched=False,
-                                          seed=seed), iters, resample=True)
-        t_batch = time_refresh(build_queue(knowledge, n, batched=True,
-                                           seed=seed), iters, resample=True)
-        csv.add(f"refresh_tick/full/looped/apps={n}", 1e6 * t_loop,
-                f"{1e3 * t_loop:.2f} ms/tick")
-        csv.add(f"refresh_tick/full/batched/apps={n}", 1e6 * t_batch,
-                f"{1e3 * t_batch:.2f} ms/tick speedup={t_loop / t_batch:.1f}x")
+        ticks = {}
+        for arm in ARMS:
+            if arm == "looped" and n > LOOPED_MAX_APPS:
+                continue
+            sched = build_queue(knowledge, n, arm, seed=seed)
+            t = time_refresh(sched, iters, resample=True)
+            ticks[arm] = t
+            derived = f"{1e3 * t:.2f} ms/tick"
+            if arm != "looped" and "looped" in ticks:
+                derived += f" vs_looped={ticks['looped'] / t:.1f}x"
+            if arm.startswith("fused") and "composed" in ticks:
+                derived += f" vs_composed={ticks['composed'] / t:.2f}x"
+            if arm == "fused_pallas":
+                derived += f" spill/tick={sched.fused_spill / iters:.0f}"
+            csv.add(f"refresh_tick/full/{arm}/apps={n}", 1e6 * t, derived)
+            records.append({"name": f"refresh_tick/full/{arm}/apps={n}",
+                            "arm": arm, "apps": n, "us_per_call": 1e6 * t,
+                            "ms_per_tick": 1e3 * t})
+        per_size[n] = ticks
     # rank-only tick (demand estimates cached between ticks)
     for n in sizes[-1:]:
-        sched = build_queue(knowledge, n, batched=True, seed=seed)
+        sched = build_queue(knowledge, n, "composed", seed=seed)
         t_rank = time_refresh(sched, max(iters, 5), resample=False)
         csv.add(f"refresh_tick/rank_only/apps={n}", 1e6 * t_rank,
                 f"{1e3 * t_rank:.3f} ms/tick")
+        records.append({"name": f"refresh_tick/rank_only/apps={n}",
+                        "arm": "rank_only", "apps": n,
+                        "us_per_call": 1e6 * t_rank,
+                        "ms_per_tick": 1e3 * t_rank})
+    speedups = {
+        f"{arm}_vs_composed@{n}": ticks["composed"] / ticks[arm]
+        for n, ticks in per_size.items() if "composed" in ticks
+        for arm in ("fused", "fused_pallas") if arm in ticks}
+    payload = {
+        "benchmark": "refresh_tick",
+        "smoke": smoke,
+        "mc_walkers": MC_WALKERS,
+        "sizes": list(sizes),
+        "iters": iters,
+        "platform": platform.platform(),
+        "rows": records,
+        "speedup": speedups,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {JSON_PATH}")
+    return payload
 
 
 def main(argv=None):
@@ -87,7 +147,7 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI configuration (API drift canary)")
     ap.add_argument("--paper", action="store_true",
-                    help="include the 2048-app point")
+                    help="include the 8192-app point")
     ap.add_argument("--seed", type=int, default=7)
     args = ap.parse_args(argv)
     csv = Csv()

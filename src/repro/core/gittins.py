@@ -17,7 +17,6 @@ job then competes with rank ≈ the top-bucket width) — see DESIGN.md.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import numpy as np
@@ -87,10 +86,37 @@ def gittins_rank_samples(samples: np.ndarray, attained: float) -> float:
     return float(np.min(e_min / p_le))
 
 
-@partial(jax.jit)
-def gittins_rank_hist(probs: jnp.ndarray, edges: jnp.ndarray,
+def to_histogram_rows_jnp(total: jnp.ndarray, n_buckets: int = N_BUCKETS
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Device-side row-wise ``to_histogram_batch`` (float32, jit-safe).
+
+    Same floor-based binning definition as the numpy batch path, evaluated
+    in float32 on device so the fused refresh pipeline never ships the
+    (A, n_walkers) sample matrix to the host.  Bucket counts come from a
+    one-hot reduction (vectorizes where scatter-add would serialize on CPU).
+    """
+    W = total.shape[1]
+    lo = total.min(axis=1)
+    hi = total.max(axis=1)
+    hi = jnp.where(hi <= lo, lo + jnp.maximum(jnp.abs(lo) * 1e-3, 1e-6), hi)
+    norm = n_buckets / (hi - lo)
+    idx = ((total - lo[:, None]) * norm[:, None]).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, n_buckets - 1)
+    onehot = (idx[:, :, None] == jnp.arange(n_buckets)[None, None, :])
+    probs = onehot.sum(axis=1).astype(jnp.float32) / max(W, 1)
+    frac = jnp.arange(1, n_buckets + 1, dtype=jnp.float32) / n_buckets
+    edges = lo[:, None] + (hi - lo)[:, None] * frac[None, :]
+    # pin the last edge to hi exactly (float32 lo + (hi-lo) can round off by
+    # an ulp; np.linspace pins the endpoint, and `exhausted` compares to it)
+    edges = edges.at[:, -1].set(hi)
+    return probs, edges
+
+
+def gittins_rank_core(probs: jnp.ndarray, edges: jnp.ndarray,
                       attained: jnp.ndarray) -> jnp.ndarray:
-    """Vectorized Gittins ranks for a whole queue.
+    """Vectorized Gittins ranks for a whole queue (pure jnp; traced both by
+    the standalone ``gittins_rank_hist`` jit and inline by the fused
+    refresh pipeline).
 
     probs: (J, n_buckets) bucket probabilities per job
     edges: (J, n_buckets) right bucket edges (midpoints used as bucket values)
@@ -124,13 +150,30 @@ def gittins_rank_hist(probs: jnp.ndarray, edges: jnp.ndarray,
     return jnp.where(exhausted, attained, ranks)
 
 
+gittins_rank_hist = jax.jit(gittins_rank_core)
+
+
 def gittins_rank_hist_np(probs: np.ndarray, edges: np.ndarray,
                          attained: np.ndarray) -> np.ndarray:
-    """Numpy twin (used when jit warmup would dominate tiny queues)."""
-    out = np.asarray(gittins_rank_hist(jnp.asarray(probs, jnp.float32),
-                                       jnp.asarray(edges, jnp.float32),
-                                       jnp.asarray(attained, jnp.float32)))
-    return out
+    """Numpy twin (used when jit warmup would dominate tiny queues).
+
+    Pads the queue axis to a power of two before dispatch — same policy as
+    ``GittinsPolicy.ranks`` and the fused refresh pipeline — so ad-hoc
+    callers (tests, figure benchmarks) don't churn a fresh jit executable
+    for every distinct queue length."""
+    from repro.core.pdgraph import _pow2_ceil
+    probs = np.asarray(probs, np.float32)
+    edges = np.asarray(edges, np.float32)
+    attained = np.asarray(attained, np.float32)
+    J = probs.shape[0]
+    Jp = _pow2_ceil(J)
+    if Jp > J:
+        probs = np.concatenate([probs, np.tile(probs[-1:], (Jp - J, 1))])
+        edges = np.concatenate([edges, np.tile(edges[-1:], (Jp - J, 1))])
+        attained = np.concatenate([attained, np.zeros(Jp - J, np.float32)])
+    return np.asarray(gittins_rank_hist(jnp.asarray(probs),
+                                        jnp.asarray(edges),
+                                        jnp.asarray(attained)))[:J]
 
 
 def srpt_mean_rank(samples: np.ndarray, attained: float) -> float:

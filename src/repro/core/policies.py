@@ -20,22 +20,27 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.gittins import (gittins_rank_hist, to_histogram,
+from repro.core.gittins import (gittins_rank_hist_np, to_histogram,
                                 to_histogram_batch)
-from repro.core.pdgraph import _pow2_ceil
 
 
 @dataclass
 class AppView:
-    """What a policy may see about one application."""
+    """What a policy may see about one application.
+
+    In the scheduler's fused refresh mode ``total_samples`` is None — the
+    sample matrix never reaches the host; the view instead carries the
+    device-computed histogram rows (``hist``) and, until invalidated by
+    further progress, the device-computed Gittins rank (``fused_rank``)."""
     app_id: str
     tenant: str
     arrival: float
     attained: float                      # service seconds received so far
-    total_samples: np.ndarray            # est. TOTAL demand distribution
+    total_samples: Optional[np.ndarray]  # est. TOTAL demand distribution
     deadline: Optional[float] = None
     oracle_remaining: Optional[float] = None
     hist: Optional[tuple] = None         # cached (probs, edges)
+    fused_rank: Optional[float] = None   # device-computed rank (fused mode)
 
 
 class Policy:
@@ -61,6 +66,11 @@ class GittinsPolicy(Policy):
     def ranks(self, apps: List[AppView], now: float) -> np.ndarray:
         if not apps:
             return np.zeros(0)
+        # fused path: the scheduler already computed every rank on device in
+        # the fused refresh dispatch — accept them directly, no host
+        # bucketize / rank dispatch at all
+        if all(a.fused_rank is not None for a in apps):
+            return np.asarray([a.fused_rank for a in apps], np.float32)
         stale = [a for a in apps
                  if a.hist is None or a.hist[0].shape[0] != self.n_buckets]
         if self.vectorized and len(stale) > 1 and \
@@ -81,17 +91,9 @@ class GittinsPolicy(Policy):
             probs[i] = a.hist[0]
             edges[i] = a.hist[1]
             att[i] = a.attained
-        # pad the queue axis to a power of two: without it every distinct
-        # queue size J traces a fresh jit executable, which dominates the
-        # refresh tick once queues churn at cluster scale
-        Jp = _pow2_ceil(J)
-        if Jp > J:
-            probs = np.concatenate(
-                [probs, np.tile(probs[-1:], (Jp - J, 1))])
-            edges = np.concatenate(
-                [edges, np.tile(edges[-1:], (Jp - J, 1))])
-            att = np.concatenate([att, np.zeros(Jp - J, np.float32)])
-        return np.asarray(gittins_rank_hist(probs, edges, att))[:J]
+        # gittins_rank_hist_np pads the queue axis to a power of two so
+        # churning queue sizes don't trace a fresh jit executable each
+        return gittins_rank_hist_np(probs, edges, att)
 
 
 class SRPTMeanPolicy(Policy):

@@ -1,0 +1,266 @@
+"""Device-resident fused refresh pipeline (§3.3 hot path, Fig. 15).
+
+One jitted dispatch chains the whole bucket-tick estimate refresh —
+
+    MC walk  →  row-wise bucketize  →  Gittins rank
+
+— over packed PDGraph tables and incrementally-maintained queue-state
+buffers.  Only the ``(A,)`` rank vector (plus the tiny ``(A, n_buckets)``
+histogram rows, cached for rank-only re-ranks between ticks) ever crosses
+the host boundary; the ``(A, n_walkers)`` sample matrix lives and dies on
+device.  This replaces the composed three-hop path (jitted walk → host
+``np.asarray`` → numpy ``to_histogram_batch`` → second jitted rank
+dispatch) that PR 1 left as the scale ceiling.
+
+Two walker backends:
+
+* ``walker="threefry"`` — the original ``_walk_core`` under vmap with the
+  per-(app, refresh) fold_in chain: bit-identical demand samples to the
+  composed/looped paths, so fused ranks match them to float32 tolerance.
+  The equivalence baseline.
+* ``walker="pallas"`` — the counter-RNG ``pdgraph_walk`` kernel package
+  (Pallas kernel on TPU, bit-identical jnp twin elsewhere): breaks the
+  threefry bottleneck and adds phase compaction; distributionally
+  equivalent (KS-tested), and the default for fused mode.
+
+``QueueState`` owns the queue-axis buffers (graph/start/executed/attained/
+key/refresh ids + refinement override tables).  ``HermesScheduler`` updates
+them in place as events arrive — O(1) per event, swap-with-last removal —
+instead of rebuilding Python lists into fresh arrays every tick.  Buffers
+are capacity-grown in powers of two and dispatched at ``_pow2_ceil(size)``
+rows so jit caches stay small while open-arrival queues grow and shrink.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gittins import (N_BUCKETS, gittins_rank_core,
+                                to_histogram_rows_jnp)
+from repro.core.pdgraph import PackedKB, _mc_walk_batch, _pow2_ceil
+from repro.kernels.pdgraph_walk.ops import pdgraph_walk, walker_streams
+
+
+@partial(jax.jit, static_argnames=("n_walkers", "max_steps", "n_buckets",
+                                   "walker", "impl", "with_overrides",
+                                   "compact_after", "compact_shrink"))
+def _fused_pipeline(samples, counts, cum_trans,        # KB: (G,U,S),(G,U),(G,U,U+1)
+                    graph_idx, start, executed, attained,   # (A,) queue state
+                    key_ids, refresh_ids,                   # (A,) RNG stream ids
+                    base_key, seed,                         # threefry / counter seeds
+                    ov_samples, ov_counts,                  # (A,U,So), (A,U)
+                    valid,                                  # (A,) bool queue rows
+                    *, n_walkers: int, max_steps: int, n_buckets: int,
+                    walker: str, impl: Optional[str], with_overrides: bool,
+                    compact_after: int, compact_shrink: int):
+    """walk → bucketize → rank, one dispatch.  Returns (ranks, probs, edges,
+    spill) — all shaped (A, ...), A padded to a power of two by the caller."""
+    if walker == "threefry":
+        # the composed path's walker verbatim — ONE implementation carries
+        # the fold_in chain, so fused/composed bit-identity cannot drift
+        rem = _mc_walk_batch(samples, counts, cum_trans,
+                             graph_idx, start, executed,
+                             base_key, key_ids, refresh_ids,
+                             ov_samples, ov_counts, n_walkers, max_steps)
+        spill = jnp.zeros((), jnp.int32)
+    elif walker == "pallas":
+        streams = walker_streams(seed, key_ids, refresh_ids)
+        rem, spill = pdgraph_walk(
+            samples, counts, cum_trans, graph_idx, start, executed, streams,
+            ov_samples if with_overrides else None,
+            ov_counts if with_overrides else None,
+            valid=valid, n_walkers=n_walkers, max_steps=max_steps,
+            impl=impl, compact_after=compact_after,
+            compact_shrink=compact_shrink)
+    else:
+        raise ValueError(f"unknown walker {walker!r}")
+    total = attained[:, None] + jnp.maximum(rem, 0.0)
+    probs, edges = to_histogram_rows_jnp(total, n_buckets)
+    ranks = gittins_rank_core(probs, edges, attained)
+    return ranks, probs, edges, spill
+
+
+class QueueState:
+    """Queue-axis device-feed buffers, updated in place per scheduler event.
+
+    Slots are dense [0, size); removal swaps the last slot in (O(1)), so the
+    first ``_pow2_ceil(size)`` rows are always a valid dispatch view.  Rows
+    beyond ``size`` keep stale-but-in-bounds values (their walk output is
+    discarded), so padding costs no masking."""
+
+    def __init__(self, packed: PackedKB, capacity: int = 64):
+        self.n_units = packed.n_units
+        self.max_samples = packed.n_samples
+        cap = max(_pow2_ceil(capacity), 1)
+        self.graph_idx = np.zeros(cap, np.int32)
+        self.start = np.zeros(cap, np.int32)
+        self.executed = np.zeros(cap, np.float32)
+        self.attained = np.zeros(cap, np.float32)
+        self.key_id = np.zeros(cap, np.int32)
+        self.refresh_id = np.zeros(cap, np.int32)
+        self.ov_samples = np.zeros((cap, self.n_units, 1), np.float32)
+        self.ov_counts = np.zeros((cap, self.n_units), np.int32)
+        self.slot: Dict[str, int] = {}
+        self.ids: List[str] = []
+        self.override_apps = 0       # apps with >= 1 active override row
+        self.kb_token = None         # packed-KB version tag (rebuild guard)
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    # ------------------------------------------------------------- capacity
+    def _grow(self) -> None:
+        for name in ("graph_idx", "start", "executed", "attained",
+                     "key_id", "refresh_id", "ov_samples", "ov_counts"):
+            a = getattr(self, name)
+            b = np.zeros((a.shape[0] * 2,) + a.shape[1:], a.dtype)
+            b[:a.shape[0]] = a
+            setattr(self, name, b)
+
+    def _grow_override_width(self, width: int) -> None:
+        width = min(_pow2_ceil(width), self.max_samples)
+        if width <= self.ov_samples.shape[2]:
+            return
+        b = np.zeros(self.ov_samples.shape[:2] + (width,), np.float32)
+        b[:, :, :self.ov_samples.shape[2]] = self.ov_samples
+        self.ov_samples = b
+
+    # --------------------------------------------------------------- events
+    def add(self, app_id: str, graph_idx: int, start: int, key_id: int,
+            refresh_id: int = 0) -> int:
+        if len(self.ids) == self.graph_idx.shape[0]:
+            self._grow()
+        i = len(self.ids)
+        self.ids.append(app_id)
+        self.slot[app_id] = i
+        self.graph_idx[i] = graph_idx
+        self.start[i] = start
+        self.executed[i] = 0.0
+        self.attained[i] = 0.0
+        self.key_id[i] = key_id
+        self.refresh_id[i] = refresh_id
+        self.ov_counts[i] = 0
+        return i
+
+    def remove(self, app_id: str) -> None:
+        i = self.slot.pop(app_id, None)
+        if i is None:
+            return
+        if self.ov_counts[i].any():
+            self.override_apps -= 1
+        last = len(self.ids) - 1
+        if i != last:
+            moved = self.ids[last]
+            self.ids[i] = moved
+            self.slot[moved] = i
+            for a in (self.graph_idx, self.start, self.executed,
+                      self.attained, self.key_id, self.refresh_id,
+                      self.ov_samples, self.ov_counts):
+                a[i] = a[last]
+        self.ids.pop()
+        self.ov_counts[last] = 0
+
+    def set_unit(self, app_id: str, unit_idx: int) -> None:
+        i = self.slot[app_id]
+        self.start[i] = unit_idx
+        self.executed[i] = 0.0
+
+    def add_progress(self, app_id: str, delta: float) -> None:
+        i = self.slot[app_id]
+        self.executed[i] += delta
+        self.attained[i] += delta
+
+    def set_override(self, app_id: str, unit_idx: int,
+                     arr: np.ndarray) -> None:
+        i = self.slot[app_id]
+        arr = np.asarray(arr, np.float32)[:self.max_samples]
+        if len(arr) == 0:
+            return
+        self._grow_override_width(len(arr))
+        arr = arr[:self.ov_samples.shape[2]]
+        if not self.ov_counts[i].any():
+            self.override_apps += 1
+        self.ov_samples[i, unit_idx, :len(arr)] = arr
+        self.ov_counts[i, unit_idx] = len(arr)
+
+    def bump_refresh(self, slots: np.ndarray) -> None:
+        self.refresh_id[slots] += 1
+
+    # ------------------------------------------------------------- dispatch
+    def gather(self, slots: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, ...]:
+        """Padded dispatch view: the full queue (zero-copy slices) or a
+        slot subset (fancy-index copies), padded to a power of two."""
+        if slots is None:
+            n = len(self.ids)
+            ap = max(_pow2_ceil(n), 1)
+            return (self.graph_idx[:ap], self.start[:ap], self.executed[:ap],
+                    self.attained[:ap], self.key_id[:ap],
+                    self.refresh_id[:ap], self.ov_samples[:ap],
+                    self.ov_counts[:ap])
+        n = len(slots)
+        ap = max(_pow2_ceil(n), 1)
+        pad = np.zeros(ap - n, np.int32)      # slot 0 rows: valid, discarded
+        idx = np.concatenate([np.asarray(slots, np.int64), pad])
+        return (self.graph_idx[idx], self.start[idx], self.executed[idx],
+                self.attained[idx], self.key_id[idx], self.refresh_id[idx],
+                self.ov_samples[idx], self.ov_counts[idx])
+
+
+def build_queue_state(packed: PackedKB, apps: Sequence, kb_token=None
+                      ) -> QueueState:
+    """Rebuild a QueueState from live AppRuntime records (used on first
+    fused refresh and whenever the packed KB tables change shape/content)."""
+    qs = QueueState(packed, capacity=max(len(apps), 64))
+    qs.kb_token = kb_token
+    for a in apps:
+        g = packed.graph_index[a.app_name]
+        start = (packed.unit_index[g][a.current_unit] if a.current_unit
+                 else int(packed.entry[g]))
+        i = qs.add(a.app_id, g, start, a.key_id, a.refreshes)
+        qs.executed[i] = a.attained_in_unit
+        qs.attained[i] = a.attained
+        for name, arr in (a.overrides or {}).items():
+            uidx = packed.unit_index[g]
+            if name in uidx:
+                qs.set_override(a.app_id, uidx[name], arr)
+    return qs
+
+
+def refresh_ranks_fused(packed: PackedKB, qs: QueueState, base_key, seed,
+                        *, slots: Optional[np.ndarray] = None,
+                        n_walkers: int = 512, max_steps: int = 64,
+                        n_buckets: int = N_BUCKETS, walker: str = "pallas",
+                        impl: Optional[str] = None,
+                        compact_after: int = 16, compact_shrink: int = 4
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """One fused refresh over the queue (or a slot subset).
+
+    Returns ``(ranks (A,), probs (A, n_buckets), edges (A, n_buckets),
+    spill)`` as host arrays — the (A, n_walkers) sample matrix stays on
+    device.  Does NOT bump refresh ids; callers bump after consuming."""
+    gi, start, executed, attained, kid, rid, ovs, ovc = qs.gather(slots)
+    A = len(slots) if slots is not None else len(qs)
+    if A == 0:
+        z = np.zeros((0, n_buckets), np.float32)
+        return np.zeros(0, np.float32), z, z, 0
+    with_ov = qs.override_apps > 0
+    if not with_ov and ovs.shape[2] > 1:
+        ovs = ovs[:, :, :1]                  # keep the no-override jit cache
+    ranks, probs, edges, spill = _fused_pipeline(
+        packed.samples, packed.counts, packed.cum_trans,
+        jnp.asarray(gi), jnp.asarray(start), jnp.asarray(executed),
+        jnp.asarray(attained), jnp.asarray(kid), jnp.asarray(rid),
+        base_key, np.uint32(int(seed) & 0xFFFFFFFF),
+        jnp.asarray(ovs), jnp.asarray(ovc),
+        jnp.asarray(np.arange(len(gi)) < A),
+        n_walkers=n_walkers, max_steps=max_steps, n_buckets=n_buckets,
+        walker=walker, impl=impl, with_overrides=with_ov,
+        compact_after=compact_after, compact_shrink=compact_shrink)
+    return (np.asarray(ranks)[:A], np.asarray(probs)[:A],
+            np.asarray(edges)[:A], int(spill))

@@ -23,8 +23,10 @@ import jax
 from repro.core import correlation as C
 from repro.core.pdgraph import (PDGraph, mc_service_samples_batch,
                                 pack_graphs)
-from repro.core.policies import AppView, Policy, VTCPolicy, make_policy
+from repro.core.policies import (AppView, GittinsPolicy, Policy, VTCPolicy,
+                                 make_policy)
 from repro.core.prewarm import PrewarmSignal, plan_prewarms
+from repro.core.refresh import build_queue_state, refresh_ranks_fused
 
 
 @dataclass
@@ -53,7 +55,9 @@ class HermesScheduler:
                  K: float = 0.5, n_buckets: int = 10,
                  refine: bool = True, prewarm: bool = True,
                  mc_walkers: int = 512, seed: int = 0,
-                 batched: bool = True):
+                 batched: bool = True, mode: Optional[str] = None,
+                 walker: str = "pallas",
+                 compact_after: int = 16, compact_shrink: int = 4):
         self.kb = knowledge_base
         self.policy: Policy = make_policy(policy) if policy != "gittins" \
             else make_policy(policy, n_buckets=n_buckets)
@@ -63,20 +67,39 @@ class HermesScheduler:
         self.refine = refine
         self.prewarm_enabled = prewarm
         self.mc_walkers = mc_walkers
-        # batched=True packs the whole queue into one jitted MC dispatch per
-        # refresh; False keeps the seed's per-application loop (the Fig. 15
-        # "looped" baseline).  Both derive identical per-app RNG streams.
-        self.batched = batched
+        # Refresh modes (``mode`` wins; ``batched`` kept for compatibility):
+        #   looped    the seed's per-application walk + histogram loop
+        #   composed  one batched jitted MC dispatch, host histogram, second
+        #             rank dispatch (PR 1; bit-identical streams to looped)
+        #   fused     the device-resident pipeline: walk -> bucketize -> rank
+        #             in ONE dispatch over incrementally-maintained queue
+        #             buffers; only (A,) ranks + (A, n_buckets) hists return
+        # Fused walker: "pallas" = counter-RNG pdgraph_walk kernel package
+        # (distributionally equivalent, fastest); "threefry" = the fold_in
+        # chain (bit-identical samples to composed/looped).
+        self.mode = mode if mode is not None else \
+            ("composed" if batched else "looped")
+        if self.mode not in ("looped", "composed", "fused"):
+            raise ValueError(f"unknown refresh mode {self.mode!r}")
+        if walker not in ("pallas", "threefry"):
+            raise ValueError(f"unknown fused walker {walker!r}")
+        self.batched = self.mode != "looped"
+        self.walker = walker
+        self.compact_after = compact_after
+        self.compact_shrink = compact_shrink
         if hasattr(self.policy, "vectorized"):
-            self.policy.vectorized = batched
+            self.policy.vectorized = self.batched
         self.apps: Dict[str, AppRuntime] = {}
         # live subset of `apps`: the refresh tick iterates only this, and
         # retired apps drop their sample arrays, so an unbounded open-arrival
         # stream costs O(live queue) per tick, not O(total arrivals)
         self._live: Dict[str, AppRuntime] = {}
+        self._seed = seed
         self._base_key = jax.random.PRNGKey(seed)
         self._app_seq = itertools.count()
         self._packed = None               # (kb versions, PackedKB) cache
+        self._qstate = None               # fused-mode queue buffers (lazy)
+        self.fused_spill = 0              # walkers truncated by compaction
         for g in self.kb.values():
             C.apply_masks(g)
 
@@ -93,6 +116,37 @@ class HermesScheduler:
             self._packed = (versions,
                             pack_graphs(self.kb, self.t_in, self.t_out))
         return self._packed[1]
+
+    def _fused_active(self) -> bool:
+        """The fused pipeline computes Gittins ranks on device, so it only
+        engages for the plain Gittins policy; composite policies (deadline
+        triage etc.) still need host-side demand stats and fall back to the
+        composed path."""
+        return self.mode == "fused" and type(self.policy) is GittinsPolicy
+
+    def _ensure_qstate(self):
+        """Queue buffers are maintained incrementally by the on_* events;
+        (re)built from scratch only on first use and when the packed KB
+        tables change shape/content (record_trial bumps graph versions)."""
+        packed = self._packed_kb()
+        token = self._packed[0]
+        if self._qstate is None or self._qstate.kb_token != token:
+            self._qstate = build_queue_state(
+                packed, list(self._live.values()), kb_token=token)
+        return self._qstate
+
+    def _qstate_if_current(self):
+        """PackedKB when the incremental QueueState may be mutated in place;
+        None when there is none or the KB was repacked since it was built
+        (then the stale buffers are dropped — unit indices/table shapes may
+        have changed — and rebuilt wholesale on the next fused refresh)."""
+        if self._qstate is None:
+            return None
+        packed = self._packed_kb()
+        if self._qstate.kb_token != self._packed[0]:
+            self._qstate = None
+            return None
+        return packed
 
     def _total_samples(self, app: AppRuntime) -> np.ndarray:
         """TOTAL demand distribution = attained + MC(remaining)."""
@@ -147,6 +201,39 @@ class HermesScheduler:
             a.refreshes += 1
             self._make_view(a, row)
 
+    def _refresh_views_fused(self, apps: List[AppRuntime]) -> None:
+        """Fused refresh: one device dispatch re-estimates, bucketizes and
+        ranks the stale set; views carry the (n_buckets,) histogram rows and
+        the device rank — never the (A, n_walkers) sample matrix."""
+        if not apps:
+            return
+        qs = self._ensure_qstate()
+        full = len(apps) == len(qs)
+        if full:
+            # the zero-copy full-queue gather returns rows in SLOT order,
+            # which diverges from _live insertion order once any retirement
+            # has swap-compacted the slots — realign the app list to it
+            apps = [self.apps[i] for i in qs.ids]
+        slots = None if full else \
+            np.asarray([qs.slot[a.app_id] for a in apps], np.int64)
+        ranks, probs, edges, spill = refresh_ranks_fused(
+            self._packed[1], qs, self._base_key, self._seed,
+            slots=slots, n_walkers=self.mc_walkers,
+            n_buckets=self.n_buckets, walker=self.walker,
+            compact_after=self.compact_after,
+            compact_shrink=self.compact_shrink)
+        self.fused_spill += spill
+        for i, a in enumerate(apps):
+            a.refreshes += 1
+            a.view = AppView(app_id=a.app_id, tenant=a.tenant,
+                             arrival=a.arrival, attained=a.attained,
+                             total_samples=None, deadline=a.deadline,
+                             oracle_remaining=a.oracle_remaining,
+                             hist=(probs[i], edges[i]),
+                             fused_rank=float(ranks[i]))
+        qs.bump_refresh(slots if slots is not None
+                        else np.arange(len(qs)))
+
     # -------------------------------------------------------------- events
     def on_arrival(self, app_id: str, app_name: str, now: float, *,
                    tenant: str = "default",
@@ -158,14 +245,27 @@ class HermesScheduler:
                          key_id=next(self._app_seq))
         self.apps[app_id] = app
         self._live[app_id] = app
+        packed = self._qstate_if_current()
+        if packed is not None:
+            gi = packed.graph_index[app_name]
+            self._qstate.add(app_id, gi, int(packed.entry[gi]), app.key_id)
         # view stays stale until the next priorities() call, which refreshes
         # every stale view in one batched dispatch
+
+    def _qstate_set_unit(self, app: AppRuntime, unit: Optional[str]) -> None:
+        packed = self._qstate_if_current()
+        if packed is None or app.app_id not in self._qstate.slot:
+            return
+        g = packed.graph_index[app.app_name]
+        idx = packed.unit_index[g][unit] if unit else int(packed.entry[g])
+        self._qstate.set_unit(app.app_id, idx)
 
     def on_unit_start(self, app_id: str, unit: str, now: float) -> None:
         app = self.apps[app_id]
         app.current_unit = unit
         app.unit_start = now
         app.attained_in_unit = 0.0
+        self._qstate_set_unit(app, unit)
 
     def on_progress(self, app_id: str, service_delta: float) -> None:
         app = self.apps[app_id]
@@ -173,6 +273,12 @@ class HermesScheduler:
         app.attained_in_unit += service_delta
         if app.view is not None:
             app.view.attained = app.attained
+            # rank depends on attained: drop the cached device rank (the
+            # cached histogram of TOTAL demand stays valid) so the next
+            # priorities() re-ranks from the hist at the new attained
+            app.view.fused_rank = None
+        if self._qstate is not None and app_id in self._qstate.slot:
+            self._qstate.add_progress(app_id, service_delta)
         if isinstance(self.policy, VTCPolicy):
             self.policy.account(app.tenant, service_delta)
 
@@ -184,6 +290,8 @@ class HermesScheduler:
         app = self.apps[app_id]
         g = self.kb[app.app_name]
         if self.refine:
+            # one KB-version check for the whole refinement loop
+            qs_packed = self._qstate_if_current()
             # refine every unit whose demand is correlation-masked on the
             # just-finished one (direct successors and 2-hop pairs alike)
             prefix = unit + "|"
@@ -197,12 +305,20 @@ class HermesScheduler:
                                              self.t_in, self.t_out)
                 if cond is not None:
                     app.overrides[name] = cond
+                    if qs_packed is not None and \
+                            app_id in self._qstate.slot:
+                        uidx = qs_packed.unit_index[
+                            qs_packed.graph_index[app.app_name]]
+                        if name in uidx:
+                            self._qstate.set_override(app_id, uidx[name],
+                                                      cond)
         if next_unit is None:
             self._retire(app)
         else:
             app.current_unit = next_unit
             app.unit_start = now
             app.attained_in_unit = 0.0
+            self._qstate_set_unit(app, next_unit)
         if not app.done:
             app.view = None          # stale: re-estimated on next priorities()
 
@@ -218,6 +334,8 @@ class HermesScheduler:
         app.view = None
         app.overrides.clear()
         self._live.pop(app.app_id, None)
+        if self._qstate is not None:
+            self._qstate.remove(app.app_id)
 
     def set_oracle(self, app_id: str, remaining: float) -> None:
         app = self.apps[app_id]
@@ -238,7 +356,11 @@ class HermesScheduler:
         else:
             live = [self.apps[i] for i in app_ids
                     if i in self.apps and not self.apps[i].done]
-        self._refresh_views([a for a in live if a.view is None])
+        stale = [a for a in live if a.view is None]
+        if self._fused_active():
+            self._refresh_views_fused(stale)
+        else:
+            self._refresh_views(stale)
         views = [a.view for a in live]
         if not views:
             return {}

@@ -1,0 +1,3 @@
+from repro.kernels.pdgraph_walk.ops import (pdgraph_walk,  # noqa: F401
+                                            pdgraph_walk_jit)
+from repro.kernels.pdgraph_walk.ref import walker_streams  # noqa: F401

@@ -1,0 +1,142 @@
+"""Pallas PDGraph random-walk kernel (counter-based in-kernel RNG).
+
+One program instance advances a block of walkers through ``n_steps``
+transitions of the packed unit tables entirely in VMEM.  Design choices for
+the TPU target:
+
+* **walkers on lanes** — all per-walker state is ``(1, BN)`` with BN a
+  multiple of 128, so comparisons/selects run full-width on the VPU;
+* **one-hot matmuls instead of gathers** — TPU Pallas has no vectorized
+  gather, so table rows are selected by ``table^T @ onehot(row)`` on the MXU
+  (tables are passed pre-transposed: ``(S, G*U)`` / ``(U+1, G*U)``).  Each
+  one-hot dot sums exactly one non-zero term, which keeps the kernel
+  bit-identical to the flat-gather jnp twin in ``ref.py``;
+* **in-kernel counter RNG** — the per-step uniforms come from the shared
+  ``fmix32`` hash over (stream, step*W + lane), so no threefry key chain is
+  ever materialized and the RNG costs ~5 integer ops per walker-step.
+
+The interpret-mode path (auto off-TPU) runs the identical program through
+the Pallas interpreter; the correctness sweeps in tests/test_pdgraph_walk.py
+check it bitwise against the twin and distributionally (KS) against the
+threefry oracle `_walk_core`.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import tpu_compiler_params
+from repro.kernels.pdgraph_walk.ref import counter_uniforms
+
+
+def _kernel(samples_t_ref, counts_ref, cum_t_ref, ovs_t_ref, ovc_ref,
+            cur_ref, gi_ref, app_ref, stream_ref, lane_ref, ex_ref,
+            total_ref, done_ref,
+            cur_out_ref, total_out_ref, done_out_ref,
+            *, step0: int, n_steps: int, lanes_per_app: int,
+            with_overrides: bool, with_executed: bool):
+    S = samples_t_ref.shape[0]
+    GU = samples_t_ref.shape[1]
+    U = cum_t_ref.shape[0] - 1               # absorbing state == unit stride
+    BN = cur_ref.shape[1]
+
+    samples_t = samples_t_ref[...]           # (S, GU)
+    counts = counts_ref[...]                 # (1, GU) float32
+    cum_t = cum_t_ref[...]                   # (U+1, GU)
+    gi = gi_ref[...]
+    app = app_ref[...]
+    stream = stream_ref[...]
+    lane = lane_ref[...]
+    ex = ex_ref[...]
+    iota_gu = jax.lax.broadcasted_iota(jnp.int32, (GU, BN), 0)
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (S, BN), 0)
+    if with_overrides:
+        ovs_t = ovs_t_ref[...]               # (So, A*U)
+        ovc = ovc_ref[...]                   # (1, A*U) float32
+        So, AU = ovs_t.shape
+        iota_au = jax.lax.broadcasted_iota(jnp.int32, (AU, BN), 0)
+        iota_so = jax.lax.broadcasted_iota(jnp.int32, (So, BN), 0)
+
+    def step_fn(k, carry):
+        cur, total, done = carry             # (1,BN) i32 / f32 / bool
+        s = step0 + k
+        ctr = s.astype(jnp.uint32) * np.uint32(lanes_per_app) + lane
+        r, r2 = counter_uniforms(stream, ctr)
+        row = gi * U + cur
+        roh = (iota_gu == row).astype(jnp.float32)        # (GU, BN)
+        n_eff = jnp.dot(counts, roh)                      # (1, BN)
+        if with_overrides:
+            orow = app * U + cur
+            aoh = (iota_au == orow).astype(jnp.float32)   # (AU, BN)
+            oc = jnp.dot(ovc, aoh)                        # (1, BN)
+            n_eff = jnp.where(oc > 0, oc, n_eff)
+        si = jnp.floor(r * n_eff).astype(jnp.int32)       # (1, BN)
+        rowvals = jnp.dot(samples_t, roh)                 # (S, BN)
+        sioh = (iota_s == si).astype(jnp.float32)
+        svc = jnp.sum(rowvals * sioh, axis=0, keepdims=True)
+        if with_overrides:
+            ovals = jnp.dot(ovs_t, aoh)                   # (So, BN)
+            osel = (iota_so == jnp.minimum(si, So - 1)).astype(jnp.float32)
+            osvc = jnp.sum(ovals * osel, axis=0, keepdims=True)
+            svc = jnp.where(oc > 0, osvc, svc)
+        if with_executed:
+            svc = jnp.where(s == 0, jnp.maximum(svc - ex, 0.0), svc)
+        total = total + jnp.where(done, 0.0, svc)
+        cumsel = jnp.dot(cum_t, roh)                      # (U+1, BN)
+        nxt = jnp.sum((r2 > cumsel).astype(jnp.int32), axis=0, keepdims=True)
+        nxt = jnp.minimum(nxt, U)
+        new_done = done | (nxt >= U)
+        cur = jnp.where(new_done, cur, nxt)
+        return cur, total, new_done
+
+    init = (cur_ref[...], total_ref[...], done_ref[...] != 0)
+    cur, total, done = jax.lax.fori_loop(0, n_steps, step_fn, init)
+    cur_out_ref[...] = cur
+    total_out_ref[...] = total
+    done_out_ref[...] = done.astype(jnp.int32)
+
+
+def pdgraph_walk_kernel(samples_t, counts_row, cum_t, ovs_t, ovc_row,
+                        cur, gi, app, stream, lane, executed, total, done,
+                        *, step0: int, n_steps: int, lanes_per_app: int,
+                        with_overrides: bool, with_executed: bool,
+                        block_n: int = 512, interpret: bool = False):
+    """Run one walk phase over flat walker state.
+
+    State arrays are (N,) and are laid out as (1, N) lanes; tables come
+    pre-transposed (see module docstring).  Returns (cur, total, done).
+    """
+    N = cur.shape[0]
+    # largest block dividing N (gcd keeps lane-multiple blocks whenever the
+    # walker count allows; never asserts on odd n_walkers/compact configs)
+    BN = math.gcd(N, block_n)
+    as_row = lambda a, dt: a.astype(dt).reshape(1, N)  # noqa: E731
+    state = [as_row(cur, jnp.int32), as_row(gi, jnp.int32),
+             as_row(app, jnp.int32), as_row(stream, jnp.uint32),
+             as_row(lane, jnp.uint32), as_row(executed, jnp.float32),
+             as_row(total, jnp.float32), as_row(done, jnp.int32)]
+    tables = [samples_t, counts_row.reshape(1, -1), cum_t,
+              ovs_t, ovc_row.reshape(1, -1)]
+    kernel = functools.partial(
+        _kernel, step0=step0, n_steps=n_steps, lanes_per_app=lanes_per_app,
+        with_overrides=with_overrides, with_executed=with_executed)
+    table_spec = lambda t: pl.BlockSpec(t.shape, lambda i: (0,) * t.ndim)  # noqa: E731
+    lane_spec = pl.BlockSpec((1, BN), lambda i: (0, i))
+    cur_o, total_o, done_o = pl.pallas_call(
+        kernel,
+        grid=(N // BN,),
+        in_specs=[table_spec(t) for t in tables] + [lane_spec] * len(state),
+        out_specs=[lane_spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((1, N), jnp.int32),
+                   jax.ShapeDtypeStruct((1, N), jnp.float32),
+                   jax.ShapeDtypeStruct((1, N), jnp.int32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*tables, *state)
+    return (cur_o.reshape(N), total_o.reshape(N), done_o.reshape(N) != 0)

@@ -1,0 +1,150 @@
+"""Public wrapper for the PDGraph counter-RNG walker.
+
+``pdgraph_walk`` runs the whole-queue remaining-service walk over packed
+knowledge-base tables and returns the (A, n_walkers) totals as a *device*
+array — it is designed to be traced inline into the fused refresh pipeline
+(`repro.core.refresh`) so the sample matrix never crosses the host boundary.
+
+Implementation dispatch:
+  impl="pallas"  the Pallas kernel (compiled on TPU, interpreter elsewhere)
+  impl="ref"     the flat-gather jnp twin — bit-identical to the kernel and
+                 the fast path on CPU, where interpret-mode Pallas would
+                 dominate the tick
+  impl=None      auto: "pallas" on TPU backends, "ref" otherwise
+
+Phase compaction: walker absorption is heavily front-loaded (the app suite
+retires ~75-85% of walkers within the first few transitions), so after
+``compact_after`` steps the surviving walkers are packed into an
+``N // compact_shrink``-slot phase-2 state and only those keep stepping.
+Compaction is exact — the counter RNG is indexed by (stream, original lane,
+global step), so a walker draws the same bits wherever it sits — and the
+rare capacity overflow is surfaced as a ``spill`` count (spilled walkers
+keep their phase-1 partial totals) instead of silently biasing estimates.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pdgraph_walk.kernel import pdgraph_walk_kernel
+from repro.kernels.pdgraph_walk.ref import walk_phase_ref, walker_streams  # noqa: F401  (re-export)
+
+
+def _phase(flat_tables, ov_tables, state, *, step0, n_steps, lanes_per_app,
+           impl, interpret):
+    """One walk phase via the kernel or its jnp twin (identical bits)."""
+    fsamples, fcounts, fcum = flat_tables
+    fov_s, fov_c = ov_tables
+    cur, total, done, gi, app, stream, lane, executed = state
+    if impl == "pallas":
+        ex = executed if executed is not None \
+            else jnp.zeros_like(total)
+        ovs_t = fov_s.T if fov_s is not None \
+            else jnp.zeros((1, 1), jnp.float32)
+        ovc = fov_c if fov_c is not None else jnp.zeros((1,), jnp.float32)
+        return pdgraph_walk_kernel(
+            fsamples.T, fcounts, fcum.T, ovs_t, ovc,
+            cur, gi, app, stream, lane, ex, total, done,
+            step0=step0, n_steps=n_steps, lanes_per_app=lanes_per_app,
+            with_overrides=fov_s is not None,
+            with_executed=executed is not None,
+            interpret=interpret)
+    return walk_phase_ref(fsamples, fcounts, fcum, fov_s, fov_c,
+                          cur, total, done, gi, app, stream, lane, executed,
+                          step0=step0, n_steps=n_steps,
+                          lanes_per_app=lanes_per_app)
+
+
+def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
+                 counts: jnp.ndarray,         # (G, U)
+                 cum_trans: jnp.ndarray,      # (G, U, U+1)
+                 graph_idx: jnp.ndarray,      # (A,)
+                 start: jnp.ndarray,          # (A,)
+                 executed: jnp.ndarray,       # (A,)
+                 streams: jnp.ndarray,        # (A,) uint32
+                 ov_samples: Optional[jnp.ndarray] = None,   # (A, U, So)
+                 ov_counts: Optional[jnp.ndarray] = None,    # (A, U)
+                 *, valid: Optional[jnp.ndarray] = None,     # (A,) bool
+                 n_walkers: int = 512, max_steps: int = 64,
+                 impl: Optional[str] = None, interpret: Optional[bool] = None,
+                 compact_after: int = 16, compact_shrink: int = 4
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Remaining-service totals for A apps: ``((A, n_walkers), spill)``.
+
+    Pure jnp — safe to call inside an outer jit.  ``streams`` come from
+    ``walker_streams(seed, key_ids, refresh_ids)``.  ``valid`` marks real
+    queue rows: padding rows start their walkers absorbed, so they neither
+    occupy phase-2 compaction capacity nor inflate the spill count.
+    """
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    A = graph_idx.shape[0]
+    G, U, S = samples.shape
+    N = A * n_walkers
+    W = n_walkers
+    flat_tables = (samples.reshape(G * U, S),
+                   counts.reshape(G * U).astype(jnp.float32),
+                   cum_trans.reshape(G * U, U + 1))
+    with_ov = ov_samples is not None
+    ov_tables = ((ov_samples.reshape(A * U, -1),
+                  ov_counts.reshape(A * U).astype(jnp.float32))
+                 if with_ov else (None, None))
+
+    rep = lambda a, dt: jnp.repeat(jnp.asarray(a, dt), W)  # noqa: E731
+    gi = rep(graph_idx, jnp.int32)
+    app = jnp.repeat(jnp.arange(A, dtype=jnp.int32), W)
+    stream = rep(streams, jnp.uint32)
+    lane = jnp.tile(jnp.arange(W, dtype=jnp.uint32), A)
+    done0 = (jnp.zeros((N,), bool) if valid is None
+             else jnp.repeat(~jnp.asarray(valid, bool), W))
+    state = (rep(start, jnp.int32),                       # cur
+             jnp.zeros((N,), jnp.float32),                # total
+             done0,
+             gi, app, stream, lane,
+             rep(executed, jnp.float32))
+
+    compact = (0 < compact_after < max_steps
+               and compact_shrink > 1 and N // compact_shrink >= 128)
+    phase1_steps = compact_after if compact else max_steps
+    cur, total, done = _phase(flat_tables, ov_tables, state,
+                              step0=0, n_steps=phase1_steps,
+                              lanes_per_app=W, impl=impl, interpret=interpret)
+    if not compact:
+        return total.reshape(A, W), jnp.zeros((), jnp.int32)
+
+    C = N // compact_shrink
+    order = jnp.argsort(done.astype(jnp.int32))           # stable: alive first
+    keep = order[:C]
+    alive = jnp.sum(~done)
+    spill = jnp.maximum(alive - C, 0).astype(jnp.int32)
+    sub = (cur[keep], total[keep], done[keep],
+           gi[keep], app[keep], stream[keep], lane[keep],
+           None)                                          # executed: step 0 only
+    _, total2, _ = _phase(flat_tables, ov_tables, sub,
+                          step0=compact_after,
+                          n_steps=max_steps - compact_after,
+                          lanes_per_app=W, impl=impl, interpret=interpret)
+    total = total.at[keep].set(total2)
+    return total.reshape(A, W), spill
+
+
+@partial(jax.jit, static_argnames=("n_walkers", "max_steps", "impl",
+                                   "interpret", "compact_after",
+                                   "compact_shrink"))
+def pdgraph_walk_jit(samples, counts, cum_trans, graph_idx, start, executed,
+                     streams, ov_samples=None, ov_counts=None, *,
+                     n_walkers: int = 512, max_steps: int = 64,
+                     impl: Optional[str] = None,
+                     interpret: Optional[bool] = None,
+                     compact_after: int = 16, compact_shrink: int = 4):
+    """Jitted standalone entry point (tests / direct benchmarking)."""
+    return pdgraph_walk(samples, counts, cum_trans, graph_idx, start,
+                        executed, streams, ov_samples, ov_counts,
+                        n_walkers=n_walkers, max_steps=max_steps, impl=impl,
+                        interpret=interpret, compact_after=compact_after,
+                        compact_shrink=compact_shrink)

@@ -47,6 +47,11 @@ class SimConfig:
     mc_walkers: int = 256
     n_buckets: int = 10
     seed: int = 0
+    # priority-refresh pipeline: "composed" (PR 1 batched path, default),
+    # "fused" (device-resident walk->bucketize->rank single dispatch),
+    # "looped" (seed baseline); `walker` picks the fused MC backend
+    refresh_mode: str = "composed"
+    walker: str = "pallas"
 
 
 @dataclass
@@ -112,7 +117,8 @@ class ClusterSim:
             kb, policy=cfg.policy, t_in=cfg.t_in, t_out=cfg.t_out, K=cfg.K,
             n_buckets=cfg.n_buckets, refine=cfg.refine,
             prewarm=(cfg.prewarm_mode == "hermes"),
-            mc_walkers=cfg.mc_walkers, seed=cfg.seed)
+            mc_walkers=cfg.mc_walkers, seed=cfg.seed,
+            mode=cfg.refresh_mode, walker=cfg.walker)
         self.let = HermesLet(kv_capacity=cfg.kv_capacity,
                              lora_capacity=cfg.lora_capacity,
                              docker_capacity=cfg.docker_capacity,
@@ -148,21 +154,41 @@ class ClusterSim:
         remaining_apps = len(instances)
 
         while self.events and remaining_apps > 0:
+            # micro-batch: drain EVERY event with this timestamp, then run
+            # one rank refresh + one reschedule for the whole batch instead
+            # of one per popped event (same-t arrivals/completions are the
+            # norm under bursty traces and slot-width unit fan-out)
             t, _, kind, payload = heapq.heappop(self.events)
             self.now = max(self.now, t)
-            if kind == "arrival":
-                self._on_arrival(payload)
-            elif kind == "task_done":
-                task, epoch = payload
-                if task.epoch == epoch and task.running:
-                    done = self._on_task_done(task)
-                    remaining_apps -= int(done)
-            elif kind == "prewarm":
-                self.let.prewarm(payload, self.now)
-            elif kind == "tick":
-                self._on_tick()
-                if remaining_apps > 0:
-                    self._push(self.now + self.cfg.bucket_s, "tick", None)
+            batch = [(kind, payload)]
+            while self.events and self.events[0][0] == t:
+                _, _, k2, p2 = heapq.heappop(self.events)
+                batch.append((k2, p2))
+            touched: List[str] = []
+            full_refresh = False
+            spawns: List[AppSim] = []
+            for kind, payload in batch:
+                if kind == "arrival":
+                    self._on_arrival(payload, touched, spawns)
+                elif kind == "task_done":
+                    task, epoch = payload
+                    if task.epoch == epoch and task.running:
+                        done = self._on_task_done(task, touched, spawns)
+                        remaining_apps -= int(done)
+                elif kind == "prewarm":
+                    self.let.prewarm(payload, self.now)
+                elif kind == "tick":
+                    self._on_tick()
+                    full_refresh = True
+                    if remaining_apps > 0:
+                        self._push(self.now + self.cfg.bucket_s, "tick", None)
+            if full_refresh:
+                self._refresh_ranks()
+            elif touched:
+                self._refresh_ranks(list(dict.fromkeys(touched)))
+            for sim in spawns:          # enqueue with freshly-computed ranks
+                if sim.finished is None:
+                    self._spawn_unit(sim)
             self._reschedule()
 
         self.let.finalize(self.now)
@@ -180,7 +206,8 @@ class ClusterSim:
             makespan=self.now)
 
     # --------------------------------------------------------------- events
-    def _on_arrival(self, inst: AppInstance):
+    def _on_arrival(self, inst: AppInstance, touched: List[str],
+                    spawns: List[AppSim]):
         sim = AppSim(inst=inst)
         # true demand incl. expected cold starts (what the oracle of a real
         # system would know about wall cost)
@@ -203,8 +230,8 @@ class ClusterSim:
             g = self.kb[inst.app_name]
             for key in g.units[g.entry].backend.resource_keys():
                 self.let.prewarm(self._qualify(key, inst.app_id), self.now)
-        self._refresh_ranks([inst.app_id])
-        self._spawn_unit(sim)
+        touched.append(inst.app_id)
+        spawns.append(sim)
 
     def _qualify(self, key: str, app_id: str) -> str:
         """Docker containers are per-application-run (the paper's code-exec
@@ -262,7 +289,8 @@ class ClusterSim:
             self.sched.set_oracle(task.app_id, sim.true_remaining)
         task.last_credit = self.now
 
-    def _on_task_done(self, task: SimTask) -> bool:
+    def _on_task_done(self, task: SimTask, touched: List[str],
+                      spawns: List[AppSim]) -> bool:
         """Returns True when the whole application finished."""
         self._credit(task)
         task.running = False
@@ -281,15 +309,14 @@ class ClusterSim:
             sim.finished = self.now
             self._ranks.pop(task.app_id, None)
             return True
-        self._refresh_ranks([task.app_id])
-        self._spawn_unit(sim)
+        touched.append(task.app_id)
+        spawns.append(sim)
         return False
 
     def _on_tick(self):
         for pool in self.running.values():
             for task in pool:
                 self._credit(task)
-        self._refresh_ranks()
 
     def _refresh_ranks(self, app_ids=None):
         """Full queue refresh on bucket ticks (stale heap keys rebuilt).

@@ -1,0 +1,202 @@
+"""Fused (device-resident) refresh pipeline vs the composed batched path.
+
+With ``walker="threefry"`` the fused pipeline draws bit-identical demand
+samples to the composed path (same fold_in chain through the same
+`_walk_core`); the only divergence is float32-on-device vs float64-on-host
+bucketization, so ranks must agree to float32 tolerance — including under
+refinement overrides, nonzero attained service, and mixed graphs.  The
+``walker="pallas"`` counter-RNG path is distributionally equivalent and is
+covered by ordering-consistency and the KS tests in test_pdgraph_walk.py.
+"""
+import numpy as np
+import pytest
+
+from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
+from repro.core.refresh import build_queue_state
+from repro.core.scheduler import HermesScheduler
+
+
+@pytest.fixture(scope="module")
+def kb():
+    return build_knowledge_base(n_trials=60, seed=3)
+
+
+def _filled(kb, mode, walker="pallas", n_apps=24, **kw):
+    s = HermesScheduler(kb, policy="gittins", t_in=T_IN, t_out=T_OUT,
+                        mc_walkers=32, seed=11, mode=mode, walker=walker,
+                        **kw)
+    names = sorted(kb)
+    for i in range(n_apps):
+        aid = f"a{i:03d}"
+        s.on_arrival(aid, names[i % len(names)], now=0.25 * i,
+                     tenant=f"t{i % 4}", deadline=200.0 + 3.0 * i)
+        s.on_progress(aid, 0.05 * i)       # nonzero attained service
+    return s
+
+
+def _vals(ranks):
+    ids = sorted(ranks)
+    return ids, np.asarray([ranks[i] for i in ids])
+
+
+def test_fused_threefry_matches_composed_mixed_graphs(kb):
+    """Acceptance: fused ranks == composed ranks to float32 tolerance on a
+    mixed-graph queue with attained service, same priority ordering."""
+    r_comp = _filled(kb, "composed").priorities(10.0)
+    r_fus = _filled(kb, "fused", walker="threefry").priorities(10.0)
+    ids_c, vc = _vals(r_comp)
+    ids_f, vf = _vals(r_fus)
+    assert ids_c == ids_f
+    np.testing.assert_allclose(vc, vf, rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.argsort(vc, kind="stable"),
+                          np.argsort(vf, kind="stable"))
+
+
+def test_fused_threefry_matches_composed_with_overrides(kb):
+    """Refinement overrides flow through the QueueState override tables
+    identically to the composed per-tick table rebuild."""
+    out = {}
+    for mode, walker in (("composed", "pallas"), ("fused", "threefry")):
+        s = HermesScheduler(kb, t_in=T_IN, t_out=T_OUT, mc_walkers=32,
+                            seed=7, mode=mode, walker=walker, refine=True)
+        for i in range(8):
+            s.on_arrival(f"b{i}", "CG", now=float(i))
+            s.on_progress(f"b{i}", 0.1 * i)
+        s.priorities(8.0)
+        for i in range(4):
+            s.on_unit_finish(f"b{i}", "plan",
+                             {"in": 500, "out": 280, "par": 1},
+                             9.0, "generate")
+        out[mode] = s.priorities(10.0)
+    _, vc = _vals(out["composed"])
+    _, vf = _vals(out["fused"])
+    np.testing.assert_allclose(vc, vf, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_subset_uses_cached_ranks(kb):
+    """A subset priorities() call with no stale views returns the cached
+    device ranks from the last full refresh."""
+    s = _filled(kb, "fused")
+    full = s.priorities(10.0)
+    some = sorted(full)[:5]
+    sub = s.priorities(10.0, app_ids=some)
+    assert sorted(sub) == sorted(some)
+    for i in some:
+        assert sub[i] == pytest.approx(full[i])
+
+
+def test_fused_subset_dispatch_matches_composed(kb):
+    """A GENUINE subset fused dispatch (stale views -> slots gather path)
+    must rank like the composed path refreshing the same stale subset
+    (same fold_in chain via walker='threefry')."""
+    out = {}
+    for mode, walker in (("composed", "pallas"), ("fused", "threefry")):
+        s = _filled(kb, mode, walker=walker)
+        s.priorities(10.0)
+        some = sorted(s._live)[:5]
+        for i in some:
+            s.apps[i].view = None          # force re-estimation
+        out[mode] = s.priorities(10.0, app_ids=some)
+    ids_c, vc = _vals(out["composed"])
+    ids_f, vf = _vals(out["fused"])
+    assert ids_c == ids_f
+    np.testing.assert_allclose(vc, vf, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_rank_only_reuse_between_ticks(kb):
+    """Progress invalidates the cached device rank but NOT the cached
+    histogram: the next priorities() re-ranks from the hist rows without
+    re-walking anything."""
+    s = _filled(kb, "fused")
+    full = s.priorities(10.0)
+    before = {a.app_id: a.refreshes for a in s.apps.values()}
+    s.on_progress("a000", 1.0)
+    r2 = s.priorities(11.0)
+    assert all(a.refreshes == before[a.app_id] for a in s.apps.values())
+    assert r2["a000"] != full["a000"]
+
+
+def test_fused_resample_redraws_and_never_ships_samples(kb):
+    s = _filled(kb, "fused", n_apps=8)
+    s.refresh_tick(5.0)
+    refreshes = {a.app_id: a.refreshes for a in s.apps.values()}
+    ranks1 = s.refresh_tick(6.0, resample=True)
+    for a in s.apps.values():
+        assert a.refreshes == refreshes[a.app_id] + 1
+        assert a.view.total_samples is None        # device-resident
+        assert a.view.hist[0].shape == (s.n_buckets,)
+    ranks2 = s.refresh_tick(7.0, resample=True)
+    _, v1 = _vals(ranks1)
+    _, v2 = _vals(ranks2)
+    assert not np.array_equal(v1, v2)              # fresh MC draws
+
+
+def test_fused_pallas_orders_like_composed(kb):
+    """The counter-RNG fused path is a different (equally valid) MC draw;
+    with shared seeds the two orderings must still agree strongly — a rank
+    correlation collapse means a walker defect, not MC noise."""
+    r_comp = _filled(kb, "composed", n_apps=32).priorities(10.0)
+    r_fus = _filled(kb, "fused", walker="pallas", n_apps=32).priorities(10.0)
+    _, vc = _vals(r_comp)
+    _, vf = _vals(r_fus)
+    rc = np.argsort(np.argsort(vc))
+    rf = np.argsort(np.argsort(vf))
+    rho = np.corrcoef(rc, rf)[0, 1]                # Spearman
+    assert rho > 0.9, rho
+
+
+def test_queue_state_incremental_matches_rebuild(kb):
+    """The incrementally-maintained QueueState (arrivals, progress, unit
+    advance, overrides, retirement) must equal a from-scratch rebuild."""
+    s = _filled(kb, "fused", n_apps=12)
+    s.priorities(5.0)                              # forces qstate creation
+    s.on_unit_finish("a003", s.apps["a003"].current_unit,
+                     {"in": 100, "out": 50, "par": 1, "dur": 1.0}, 6.0, None)
+    s.on_progress("a001", 2.0)
+    s.priorities(7.0)
+    qs = s._qstate
+    packed = s._packed_kb()
+    qs2 = build_queue_state(packed, list(s._live.values()),
+                            kb_token=s._packed[0])
+    assert set(qs.ids) == set(qs2.ids)
+    perm = np.asarray([qs.slot[i] for i in qs2.ids])
+    n = len(qs2)
+    for name in ("graph_idx", "start", "executed", "attained",
+                 "key_id", "refresh_id", "ov_counts"):
+        np.testing.assert_array_equal(getattr(qs, name)[perm],
+                                      getattr(qs2, name)[:n], err_msg=name)
+    so = qs2.ov_samples.shape[2]
+    np.testing.assert_array_equal(qs.ov_samples[perm][:, :, :so],
+                                  qs2.ov_samples[:n])
+
+
+def test_fused_ranks_stay_aligned_after_retirement(kb):
+    """Retiring an app swap-compacts QueueState slots, diverging slot order
+    from _live insertion order; the full-queue fused refresh must keep each
+    rank attached to ITS app (regression: ranks were zipped across orders)."""
+    out = {}
+    for mode, walker in (("composed", "pallas"), ("fused", "threefry")):
+        s = _filled(kb, mode, walker=walker, n_apps=12)
+        s.priorities(10.0)
+        s.on_app_complete("a001")          # swap-with-last compaction
+        s.on_app_complete("a004")
+        out[mode] = s.refresh_tick(12.0, resample=True)
+    ids_c, vc = _vals(out["composed"])
+    ids_f, vf = _vals(out["fused"])
+    assert ids_c == ids_f and "a001" not in ids_c
+    np.testing.assert_allclose(vc, vf, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_spill_counter_starts_clean(kb):
+    s = _filled(kb, "fused", n_apps=16)
+    s.refresh_tick(5.0, resample=True)
+    assert s.fused_spill == 0
+
+
+def test_fused_no_phantom_spill_from_queue_padding(kb):
+    """Padding rows (20 apps pad to 32) walk as garbage-but-valid apps;
+    their walkers must start absorbed so they neither occupy compaction
+    capacity nor surface as phantom spill."""
+    s = _filled(kb, "fused", n_apps=20, compact_after=4, compact_shrink=4)
+    s.refresh_tick(5.0, resample=True)
+    assert s.fused_spill == 0

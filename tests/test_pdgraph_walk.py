@@ -1,0 +1,171 @@
+"""pdgraph_walk kernel package: interpret-mode Pallas vs jnp twin (bitwise),
+counter RNG vs the threefry oracle (distributional / KS), compaction
+exactness, and spill accounting."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
+from repro.core.pdgraph import (BackendSpec, PDGraph, UnitNode,
+                                mc_service_samples_batch, pack_graphs)
+from repro.kernels.pdgraph_walk import pdgraph_walk_jit, walker_streams
+from repro.kernels.pdgraph_walk.ref import counter_uniforms
+
+W, STEPS = 32, 24
+
+
+@pytest.fixture(scope="module")
+def packed():
+    return pack_graphs(build_knowledge_base(n_trials=40, seed=3),
+                       T_IN, T_OUT)
+
+
+def _queue(packed, n, seed=0):
+    rng = np.random.default_rng(seed)
+    gi = rng.integers(0, packed.samples.shape[0], n).astype(np.int32)
+    start = np.asarray(packed.entry)[gi].astype(np.int32)
+    ex = rng.uniform(0.0, 0.5, n).astype(np.float32)
+    streams = walker_streams(7, np.arange(n), np.zeros(n, np.int32))
+    return (jnp.asarray(gi), jnp.asarray(start), jnp.asarray(ex), streams)
+
+
+def ks_2samp_stat(x, y):
+    """Two-sample Kolmogorov-Smirnov statistic (no scipy dependency)."""
+    x, y = np.sort(x), np.sort(y)
+    grid = np.concatenate([x, y])
+    cx = np.searchsorted(x, grid, side="right") / len(x)
+    cy = np.searchsorted(y, grid, side="right") / len(y)
+    return float(np.max(np.abs(cx - cy)))
+
+
+def test_interpret_kernel_matches_twin_bitwise(packed):
+    """The Pallas kernel (interpret mode) and the flat-gather jnp twin are
+    the same program: every total must match to the bit."""
+    gi, start, ex, streams = _queue(packed, 8)
+    kw = dict(n_walkers=W, max_steps=STEPS, compact_after=4,
+              compact_shrink=2)
+    ref, _ = pdgraph_walk_jit(packed.samples, packed.counts,
+                              packed.cum_trans, gi, start, ex, streams,
+                              impl="ref", **kw)
+    pal, _ = pdgraph_walk_jit(packed.samples, packed.counts,
+                              packed.cum_trans, gi, start, ex, streams,
+                              impl="pallas", interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+def test_interpret_kernel_matches_twin_with_overrides(packed):
+    """Refinement override tables flow through the kernel's one-hot path
+    and the twin's flat gathers identically, and only touch their app."""
+    gi, start, ex, streams = _queue(packed, 4)
+    U = packed.n_units
+    ovs = np.zeros((4, U, 4), np.float32)
+    ovc = np.zeros((4, U), np.int32)
+    ovs[0, int(start[0]), :3] = [5.0, 6.0, 7.0]
+    ovc[0, int(start[0])] = 3
+    kw = dict(n_walkers=W, max_steps=STEPS, compact_after=4,
+              compact_shrink=2)
+    args = (packed.samples, packed.counts, packed.cum_trans,
+            gi, start, ex, streams, jnp.asarray(ovs), jnp.asarray(ovc))
+    ref, _ = pdgraph_walk_jit(*args, impl="ref", **kw)
+    pal, _ = pdgraph_walk_jit(*args, impl="pallas", interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+    base, _ = pdgraph_walk_jit(*args[:7], impl="ref", **kw)
+    assert not np.array_equal(np.asarray(ref)[0], np.asarray(base)[0])
+    np.testing.assert_array_equal(np.asarray(ref)[1:], np.asarray(base)[1:])
+
+
+def test_compaction_is_exact(packed):
+    """Phase compaction must not change any walker's total: the counter RNG
+    is indexed by (stream, original lane, global step), so packing survivors
+    into fewer slots is a pure re-layout."""
+    gi, start, ex, streams = _queue(packed, 8)
+    one, sp1 = pdgraph_walk_jit(packed.samples, packed.counts,
+                                packed.cum_trans, gi, start, ex, streams,
+                                n_walkers=W, max_steps=STEPS,
+                                impl="ref", compact_after=0)
+    two, sp2 = pdgraph_walk_jit(packed.samples, packed.counts,
+                                packed.cum_trans, gi, start, ex, streams,
+                                n_walkers=W, max_steps=STEPS, impl="ref",
+                                compact_after=4, compact_shrink=2)
+    assert int(sp1) == 0 and int(sp2) == 0
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(two))
+
+
+def test_spill_is_surfaced_not_silent():
+    """A graph that almost never absorbs overflows the phase-2 capacity;
+    the walk must report the overflow instead of silently truncating."""
+    u = UnitNode(name="loop", backend=BackendSpec(kind="dnn", model="t"),
+                 duration=[1.0, 2.0],
+                 next_counts={"loop": 999, "$end": 1})
+    g = PDGraph("loopy", "loop", {"loop": u})
+    packed = pack_graphs({"loopy": g}, T_IN, T_OUT)
+    n = 16
+    gi = jnp.zeros(n, jnp.int32)
+    start = jnp.asarray(np.asarray(packed.entry)[np.zeros(n, int)],
+                        jnp.int32)
+    out, spill = pdgraph_walk_jit(
+        packed.samples, packed.counts, packed.cum_trans, gi, start,
+        jnp.zeros(n, jnp.float32),
+        walker_streams(3, np.arange(n), np.zeros(n, np.int32)),
+        n_walkers=W, max_steps=STEPS, impl="ref",
+        compact_after=2, compact_shrink=4)
+    assert int(spill) > 0
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_kernel_accepts_non_pow2_walker_counts(packed):
+    """Odd n_walkers (N not a multiple of the preferred block) must pick a
+    dividing block size, not assert."""
+    gi, start, ex, streams = _queue(packed, 8)
+    kw = dict(n_walkers=24, max_steps=8, compact_after=0)
+    ref, _ = pdgraph_walk_jit(packed.samples, packed.counts,
+                              packed.cum_trans, gi, start, ex, streams,
+                              impl="ref", **kw)
+    pal, _ = pdgraph_walk_jit(packed.samples, packed.counts,
+                              packed.cum_trans, gi, start, ex, streams,
+                              impl="pallas", interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+def test_counter_walker_ks_vs_threefry_oracle(packed):
+    """Acceptance: counter-RNG remaining-service distributions match the
+    threefry oracle (same packed tables, same start units) under a
+    two-sample KS test."""
+    n = 16
+    gi = np.zeros(n, np.int32)          # ALFWI: the loopiest suite graph
+    start = np.asarray(packed.entry)[gi].astype(np.int32)
+    tf = mc_service_samples_batch(
+        packed, jax.random.PRNGKey(7), graph_idx=gi, start=start,
+        executed=np.zeros(n), key_ids=np.arange(n, dtype=np.int32),
+        refresh_ids=np.zeros(n, np.int32), n_walkers=256, max_steps=STEPS)
+    ctr, spill = pdgraph_walk_jit(
+        packed.samples, packed.counts, packed.cum_trans,
+        jnp.asarray(gi), jnp.asarray(start), jnp.zeros(n, jnp.float32),
+        walker_streams(7, np.arange(n), np.zeros(n, np.int32)),
+        n_walkers=256, max_steps=STEPS, impl="ref")
+    assert int(spill) == 0
+    a = np.asarray(tf).ravel()
+    b = np.asarray(ctr).ravel()
+    d = ks_2samp_stat(a, b)
+    n_eff = len(a) * len(b) / (len(a) + len(b))
+    # alpha = 0.005 two-sample critical value; identical distributions, so
+    # rejection would mean a real RNG/walker defect, not noise
+    assert d < 1.73 / np.sqrt(n_eff), (d, 1.73 / np.sqrt(n_eff))
+
+
+def test_counter_uniforms_are_uniform():
+    """One-sample KS of the hash-RNG uniforms against U(0,1)."""
+    n = 1 << 16
+    stream = jnp.full((n,), np.uint32(0xDEADBEEF), jnp.uint32)
+    ctr = jnp.arange(n, dtype=jnp.uint32)
+    r, r2 = counter_uniforms(stream, ctr)
+    for u in (np.asarray(r), np.asarray(r2)):
+        assert 0.0 <= u.min() and u.max() < 1.0
+        ecdf = (np.arange(1, n + 1)) / n
+        d = float(np.max(np.abs(np.sort(u) - ecdf)))
+        assert d < 1.63 / np.sqrt(n), d          # alpha = 0.01
+        # moments while we're here (catches sign/scale slips KS can miss)
+        assert abs(u.mean() - 0.5) < 0.01
+        assert abs(u.std() - np.sqrt(1 / 12)) < 0.01

@@ -80,6 +80,44 @@ def test_prewarm_improves_act_and_kv_hits(kb, workload):
     assert kv_hit(hermes) >= kv_hit(lru) - 0.05
 
 
+def test_same_timestamp_events_coalesced(kb):
+    """k arrivals sharing one timestamp must cost ONE rank refresh, not k
+    (the micro-batch drain in ClusterSim.run)."""
+    from repro.apps.workload import AppInstance
+    from repro.apps.spec import sample_trajectory
+    from repro.apps.suite import SUITE
+    rng = np.random.default_rng(0)
+    names = sorted(SUITE)
+    insts = [AppInstance(app_id=f"c{i:03d}", app_name=names[i % len(names)],
+                         tenant="t0", arrival=float(5 * (i // 8)),
+                         trajectory=sample_trajectory(
+                             SUITE[names[i % len(names)]], rng))
+             for i in range(32)]                   # 8 arrivals per timestamp
+    # bucket_s huge: every policy call below is event-driven, not a tick
+    sim = ClusterSim(kb, SimConfig(seed=5, prewarm_mode="lru",
+                                   n_llm_slots=8, mc_walkers=32,
+                                   bucket_s=1e9))
+    res = sim.run(list(insts))
+    assert len(res.acts) == len(insts)
+    completions = sum(len(i.trajectory) for i in insts)
+    # per-event baseline: >= 32 arrival refreshes + one per unit completion;
+    # coalesced: 4 arrival batches + <= completions batches
+    assert res.policy_calls <= completions + 4
+    assert res.policy_calls >= 4
+
+
+def test_fused_refresh_mode_runs_sim(kb, workload):
+    """End-to-end simulation on the fused device-resident refresh pipeline:
+    every app completes and the schedule quality matches the composed path
+    (same policy, different-but-equivalent MC draws)."""
+    composed = _run(kb, list(workload)[:60], policy="gittins")
+    fused = _run(kb, list(workload)[:60], policy="gittins",
+                 refresh_mode="fused")
+    assert len(fused.acts) == 60
+    assert fused.mean_act() <= 1.25 * composed.mean_act()
+    assert composed.mean_act() <= 1.25 * fused.mean_act()
+
+
 def test_bursty_arrivals_shape():
     rng = np.random.default_rng(0)
     t = bursty_arrivals(500, 600.0, rng)
