@@ -45,11 +45,15 @@ from repro.core.scheduler import HermesScheduler  # noqa: E402
 MC_WALKERS = 128
 JSON_PATH = "BENCH_refresh_tick.json"
 
+# prewarm=False isolates the rank-refresh cost (comparable across PRs);
+# fused_prewarm measures the increment of computing the batched prewarm
+# trigger matrix inside the same dispatch (arrival tracking + reduction)
 ARMS = {
-    "looped": dict(mode="looped"),
-    "composed": dict(mode="composed"),
-    "fused": dict(mode="fused", walker="threefry"),
-    "fused_pallas": dict(mode="fused", walker="pallas"),
+    "looped": dict(mode="looped", prewarm=False),
+    "composed": dict(mode="composed", prewarm=False),
+    "fused": dict(mode="fused", walker="threefry", prewarm=False),
+    "fused_pallas": dict(mode="fused", walker="pallas", prewarm=False),
+    "fused_prewarm": dict(mode="fused", walker="pallas", prewarm=True),
 }
 # the per-app looped baseline is O(queue) dispatches per tick; past 1k apps
 # it would dominate the whole benchmark wall time for a known-linear curve
@@ -74,10 +78,14 @@ def build_queue(knowledge, n_apps: int, arm: str,
 def time_refresh(sched: HermesScheduler, iters: int,
                  resample: bool) -> float:
     sched.refresh_tick(100.0, resample=resample)       # warmup / compile
+    sched.take_prewarm_plan()
     sched.fused_spill = 0          # count spill over the timed ticks only
     t0 = time.perf_counter()
     for _ in range(iters):
         sched.refresh_tick(100.0, resample=resample)
+        # consume the batched plan like a real host would: an untaken stash
+        # would otherwise make later ticks pay a growing merge cost
+        sched.take_prewarm_plan()
     return (time.perf_counter() - t0) / iters
 
 

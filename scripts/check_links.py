@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs CI job (stdlib only).
+
+Validates every inline markdown link/image ``[text](target)`` in the given
+files/directories:
+
+* relative paths must exist in the repository (anchors are stripped;
+  ``#section`` anchors within a file are not resolved — heading drift is a
+  review concern, dead files are a CI concern);
+* bare in-repo anchors (``#section``), external schemes (``http://``,
+  ``https://``, ``mailto:``), and forge-relative paths that escape the
+  repository root (GitHub badge URLs like ``../../actions/...``) are
+  accepted without network access.
+
+Exit code 1 lists every dead link.  Usage:
+
+    python scripts/check_links.py README.md ROADMAP.md docs/
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links/images; skips reference-style and autolinks on purpose —
+# the repo's docs use inline style throughout
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+
+
+def iter_md_files(args):
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        elif p.suffix == ".md":
+            yield p
+
+
+def check_file(md: Path) -> list:
+    dead = []
+    in_fence = False
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        if _CODE_FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                       # same-file anchor
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.is_relative_to(Path.cwd().resolve()):
+                continue               # forge-relative (badge) — not a file
+            if not resolved.exists():
+                dead.append(f"{md}:{lineno}: dead link -> {target}")
+    return dead
+
+
+def main(argv):
+    if not argv:
+        print(__doc__)
+        return 2
+    dead = []
+    n = 0
+    for md in iter_md_files(argv):
+        n += 1
+        dead.extend(check_file(md))
+    for d in dead:
+        print(d)
+    print(f"# checked {n} markdown file(s): "
+          f"{'FAIL' if dead else 'ok'} ({len(dead)} dead link(s))")
+    return 1 if dead else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -75,26 +75,32 @@ def sample_trajectory(app: AppSpec, rng: np.random.Generator
     return traj
 
 
-def coldstart_overhead(app: AppSpec, traj) -> float:
-    """Expected warm-up time on the critical path of one trajectory."""
+def coldstart_overhead(app: AppSpec, traj,
+                       warmup_table: Optional[Dict[str, float]] = None
+                       ) -> float:
+    """Expected warm-up time on the critical path of one trajectory.
+    ``warmup_table`` overrides the Fig. 2 per-key defaults (the simulator's
+    configurable backend pool passes its own)."""
     from repro.core.hermeslet import warmup_time_for
     tot = 0.0
     for unit, _obs in traj:
         b = app.units[unit].backend
         if b.kind == "docker":
-            tot += warmup_time_for(b.resource_keys()[0])
+            tot += warmup_time_for(b.resource_keys()[0], warmup_table)
         elif b.kind == "dnn":
-            tot += 0.3 * warmup_time_for(b.resource_keys()[0])
+            tot += 0.3 * warmup_time_for(b.resource_keys()[0], warmup_table)
     return tot
 
 
 def profile_app(app: AppSpec, n_trials: int, seed: int = 0,
-                include_coldstart: bool = True) -> PDGraph:
+                include_coldstart: bool = True,
+                warmup_table: Optional[Dict[str, float]] = None) -> PDGraph:
     """Offline profiling (§3.2): run the generator n times, record each trial.
 
     Profiling runs measure wall durations, which on a fresh backend INCLUDE
     the cold start (the paper profiles on the real testbed) — so recorded
-    non-LLM durations carry the container-start / tool-load cost.
+    non-LLM durations carry the container-start / tool-load cost
+    (``warmup_table`` overrides the Fig. 2 per-key costs).
     """
     from repro.core.hermeslet import warmup_time_for
     g = app.empty_pdgraph()
@@ -107,10 +113,12 @@ def profile_app(app: AppSpec, n_trials: int, seed: int = 0,
                 b = app.units[unit].backend
                 if b.kind == "docker" and "dur" in obs:
                     obs = dict(obs)
-                    obs["dur"] += warmup_time_for(b.resource_keys()[0])
+                    obs["dur"] += warmup_time_for(b.resource_keys()[0],
+                                                  warmup_table)
                 elif b.kind == "dnn" and "dur" in obs:
                     obs = dict(obs)
-                    obs["dur"] += 0.3 * warmup_time_for(b.resource_keys()[0])
+                    obs["dur"] += 0.3 * warmup_time_for(
+                        b.resource_keys()[0], warmup_table)
                 adj.append((unit, obs))
             traj = adj
         g.record_trial(traj)

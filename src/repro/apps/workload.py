@@ -54,7 +54,9 @@ def make_workload(n_apps: int, window_s: float, *, seed: int = 0,
                   with_deadlines: bool = False,
                   t_in: float, t_out: float,
                   n_tenants: int = 8,
-                  apps: Optional[Dict[str, AppSpec]] = None) -> List[AppInstance]:
+                  apps: Optional[Dict[str, AppSpec]] = None,
+                  warmup_table: Optional[Dict[str, float]] = None
+                  ) -> List[AppInstance]:
     rng = np.random.default_rng(seed)
     suite = apps or SUITE
     names = sample_app_names(n_apps, rng)
@@ -69,18 +71,20 @@ def make_workload(n_apps: int, window_s: float, *, seed: int = 0,
         if with_deadlines:
             scale, cls = ddl_scales[int(rng.integers(len(ddl_scales)))]
             base = trajectory_service(traj, t_in, t_out) \
-                + _coldstart_overhead(suite[name], traj)
+                + _coldstart_overhead(suite[name], traj, warmup_table)
             inst.deadline = float(t + scale * base)
             inst.ddl_class = cls
         out.append(inst)
     return out
 
 
-def _coldstart_overhead(app, traj) -> float:
+def _coldstart_overhead(app, traj, warmup_table=None) -> float:
     """Expected warm-up time on the critical path (the paper scales measured
-    execution times, which include container starts / tool loads)."""
+    execution times, which include container starts / tool loads).
+    ``warmup_table`` keeps deadline tightness consistent with a simulator
+    running a non-default backend-pool warm-up table."""
     from repro.apps.spec import coldstart_overhead
-    return coldstart_overhead(app, traj)
+    return coldstart_overhead(app, traj, warmup_table)
 
 
 # ---------------------------------------------------------------------------
@@ -135,7 +139,9 @@ def open_arrivals(rate_per_s: float, duration_s: float,
 
 def mean_service_demand(suite: Optional[Dict[str, AppSpec]] = None, *,
                         t_in: float, t_out: float, n_probe: int = 200,
-                        seed: int = 0) -> float:
+                        seed: int = 0,
+                        warmup_table: Optional[Dict[str, float]] = None
+                        ) -> float:
     """Monte-Carlo estimate of E[service seconds] per application under the
     §5.1 mix (cold starts included) — the λ·E[S] side of the load equation."""
     rng = np.random.default_rng(seed)
@@ -145,7 +151,7 @@ def mean_service_demand(suite: Optional[Dict[str, AppSpec]] = None, *,
     for name in names:
         traj = sample_trajectory(suite[name], rng)
         tot += trajectory_service(traj, t_in, t_out) \
-            + _coldstart_overhead(suite[name], traj)
+            + _coldstart_overhead(suite[name], traj, warmup_table)
     return tot / max(n_probe, 1)
 
 
@@ -159,7 +165,8 @@ def make_open_workload(duration_s: float, *,
                        with_deadlines: bool = False,
                        seed: int = 0,
                        max_apps: Optional[int] = None,
-                       apps: Optional[Dict[str, AppSpec]] = None
+                       apps: Optional[Dict[str, AppSpec]] = None,
+                       warmup_table: Optional[Dict[str, float]] = None
                        ) -> List[AppInstance]:
     """Open-arrival workload: applications arrive by a renewal process for
     ``duration_s`` seconds.
@@ -177,7 +184,8 @@ def make_open_workload(duration_s: float, *,
     rng = np.random.default_rng(seed)
     suite = apps or SUITE
     if rate_per_s is None:
-        e_s = mean_service_demand(suite, t_in=t_in, t_out=t_out, seed=seed)
+        e_s = mean_service_demand(suite, t_in=t_in, t_out=t_out, seed=seed,
+                                  warmup_table=warmup_table)
         rate_per_s = target_load * n_service_slots / max(e_s, 1e-9)
     times = open_arrivals(rate_per_s, duration_s, rng,
                           process=process, cv=cv)
@@ -211,7 +219,7 @@ def make_open_workload(duration_s: float, *,
         if with_deadlines and rng.uniform() < prof.deadline_frac:
             scale, cls = ddl_scales[int(rng.integers(len(ddl_scales)))]
             base = trajectory_service(traj, t_in, t_out) \
-                + _coldstart_overhead(suite[name], traj)
+                + _coldstart_overhead(suite[name], traj, warmup_table)
             inst.deadline = float(t + scale * base)
             inst.ddl_class = cls
         out.append(inst)

@@ -40,6 +40,32 @@ def warmup_time_for(key: str, table: Optional[Dict[str, float]] = None) -> float
     return t.get(kind, 10.0)
 
 
+def warmup_table_from_model(model: str,
+                            reference: str = "llama3-8b") -> Dict[str, float]:
+    """Derive LLM-side warm-up costs from the model-config zoo.
+
+    The Fig. 2 defaults are calibrated to an A100-class llama3-8b engine;
+    serving a different architecture from ``repro.configs`` rescales the two
+    LLM warmables against that reference:
+
+    * ``kv``   — prefix-cache load moves KV bytes, which scale with
+                 layers x kv-heads x head-dim;
+    * ``lora`` — adapter load/merge touches every adapted projection, which
+                 scales with total parameter count.
+
+    Merge the result into ``SimConfig.warmup_table`` (explicit entries win).
+    """
+    from repro.config import get_config
+    cfg, ref = get_config(model), get_config(reference)
+    kv_bytes = lambda c: c.num_layers * c.num_kv_heads * c.resolved_head_dim()  # noqa: E731
+    kv_scale = kv_bytes(cfg) / max(kv_bytes(ref), 1)
+    lora_scale = cfg.param_counts()["total"] / max(ref.param_counts()["total"], 1)
+    out = {"lora": DEFAULT_WARMUP_S["lora"] * lora_scale}
+    if kv_scale > 0:       # attention-free archs (kv_heads=0): a zero scale
+        out["kv"] = DEFAULT_WARMUP_S["kv"] * kv_scale
+    return out             # would make KV cold starts free — keep the default
+
+
 @dataclass
 class WarmEntry:
     key: str
@@ -53,7 +79,10 @@ class WarmEntry:
 class WarmCache:
     """One capacity-bounded warm store (per backend kind)."""
 
-    def __init__(self, capacity: int, name: str = ""):
+    spec_evict_idle_s = 45.0   # keep-alive: default speculative-evict idle
+
+    def __init__(self, capacity: int, name: str = "",
+                 keep_alive_s: Optional[float] = None):
         self.capacity = capacity
         self.name = name
         self.entries: Dict[str, WarmEntry] = {}
@@ -61,6 +90,10 @@ class WarmCache:
         self.misses = 0
         self.wasted_warm_s = 0.0   # speculative entries evicted unused
         self.loads = 0
+        self.spec_loads = 0        # speculative (prewarm) loads started
+        self.spec_used = 0         # of those, later consumed by a task
+        if keep_alive_s is not None:
+            self.spec_evict_idle_s = keep_alive_s
 
     def is_warm(self, key: str, now: float) -> bool:
         e = self.entries.get(key)
@@ -75,6 +108,8 @@ class WarmCache:
         if e is not None and e.warm_at <= now:
             self.hits += 1
             e.last_used = now
+            if e.speculative and not e.used_after_warm:
+                self.spec_used += 1     # first use of a prewarmed entry
             e.used_after_warm = True
             return True
         self.misses += 1
@@ -92,11 +127,24 @@ class WarmCache:
         if not self._evict_if_needed(now, speculative):
             return None
         self.loads += 1
+        if speculative:
+            self.spec_loads += 1
         self.entries[key] = WarmEntry(key=key, warm_at=now + t_warm,
                                       last_used=now, speculative=speculative)
         return now + t_warm
 
-    spec_evict_idle_s = 45.0
+    def consume_inflight(self, key: str, now: float) -> Optional[float]:
+        """A task joins a load still in flight: the entry is consumed (a
+        prewarm that overlapped even partially is NOT wasted), the task
+        waits only the remainder.  Returns warm_at, or None if absent."""
+        e = self.entries.get(key)
+        if e is None:
+            return None
+        if e.speculative and not e.used_after_warm:
+            self.spec_used += 1
+        e.used_after_warm = True
+        e.last_used = max(e.warm_at, now)
+        return e.warm_at
 
     def _account_waste(self, e: WarmEntry, now: float) -> None:
         if e.speculative and not e.used_after_warm:
@@ -144,12 +192,13 @@ class HermesLet:
 
     def __init__(self, *, kv_capacity: int = 16, lora_capacity: int = 10,
                  docker_capacity: int = 32, dnn_capacity: int = 2,
-                 warmup_table: Optional[Dict[str, float]] = None):
+                 warmup_table: Optional[Dict[str, float]] = None,
+                 keep_alive_s: Optional[float] = None):
         self.caches: Dict[str, WarmCache] = {
-            "kv": WarmCache(kv_capacity, "kv"),
-            "lora": WarmCache(lora_capacity, "lora"),
-            "docker": WarmCache(docker_capacity, "docker"),
-            "dnn": WarmCache(dnn_capacity, "dnn"),
+            "kv": WarmCache(kv_capacity, "kv", keep_alive_s),
+            "lora": WarmCache(lora_capacity, "lora", keep_alive_s),
+            "docker": WarmCache(docker_capacity, "docker", keep_alive_s),
+            "dnn": WarmCache(dnn_capacity, "dnn", keep_alive_s),
         }
         self.warmup_table = warmup_table
 
@@ -174,7 +223,7 @@ class HermesLet:
         if cache.lookup(key, now):
             return True, now
         if cache.is_present(key):  # loading in progress: partial credit
-            return False, cache.entries[key].warm_at
+            return False, cache.consume_inflight(key, now)
         t = self.warmup_time_of_key(key)
         ready = cache.begin_load(key, now, t)
         return False, ready if ready is not None else now + t
@@ -200,5 +249,6 @@ class HermesLet:
     def stats(self) -> Dict[str, Dict[str, float]]:
         return {name: {"hit_ratio": c.hit_ratio(), "hits": c.hits,
                        "misses": c.misses, "loads": c.loads,
+                       "spec_loads": c.spec_loads, "spec_used": c.spec_used,
                        "wasted_warm_s": c.wasted_warm_s}
                 for name, c in self.caches.items()}

@@ -247,17 +247,29 @@ def _as_typed_key(key):
     return jax.random.wrap_key_data(jnp.asarray(key, jnp.uint32))
 
 
+ARRIVAL_NEVER = 1e30   # first-arrival sentinel: unit never reached
+
+
 def _walk_core(samples, counts, cum_trans, ov_samples, ov_counts,
-               start, executed, key, n_walkers: int, max_steps: int):
+               start, executed, key, n_walkers: int, max_steps: int,
+               track_arrivals: bool = False):
     """Single-application random walk over (U,S) unit tables.
 
     ``ov_samples (U,So)`` / ``ov_counts (U,)`` carry online-refinement sample
     overrides: a unit with ov_counts > 0 draws from its override row instead
-    of the base table.  Absorbing state is U (= cum_trans.shape[1] - 1)."""
+    of the base table.  Absorbing state is U (= cum_trans.shape[1] - 1).
+
+    With ``track_arrivals`` the walk also records, per walker and unit, the
+    cumulative service at the walker's FIRST entry into that unit
+    (``ARRIVAL_NEVER`` where never entered) and returns ``(total, arrivals)``.
+    The uniform stream is drawn identically either way, so the returned
+    totals are bit-identical with tracking on or off — the prewarm planner
+    rides the rank walk for free."""
     U = cum_trans.shape[1] - 1
+    unit_ids = jnp.arange(U, dtype=jnp.int32)
 
     def step(carry, k):
-        cur, total, done, first = carry
+        cur, total, done, first, arr = carry
         # one key per step: demand and transition uniforms come from a
         # single threefry call (halves the RNG work on the tick hot path)
         u = jax.random.uniform(k, (2, n_walkers))
@@ -274,18 +286,27 @@ def _walk_core(samples, counts, cum_trans, ov_samples, ov_counts,
         nxt = jnp.sum(r2[:, None] > cum_trans[cur], axis=-1).astype(jnp.int32)
         nxt = jnp.minimum(nxt, U)
         new_done = done | (nxt >= U)
+        if track_arrivals:
+            # walker enters `nxt` when the current unit's service completes,
+            # i.e. at the just-updated total; min keeps the first entry
+            enter = (~done) & (nxt < U)
+            onehot = enter[:, None] & (nxt[:, None] == unit_ids[None, :])
+            arr = jnp.where(onehot, jnp.minimum(arr, total[:, None]), arr)
         cur = jnp.where(new_done, cur, nxt)
-        return (cur, total, new_done, jnp.zeros_like(first)), None
+        return (cur, total, new_done, jnp.zeros_like(first), arr), None
 
     keys = jax.random.split(key, max_steps)
+    arr0 = (jnp.full((n_walkers, U), ARRIVAL_NEVER, jnp.float32)
+            if track_arrivals else jnp.zeros((n_walkers, 0), jnp.float32))
     init = (jnp.full((n_walkers,), start, jnp.int32),
             jnp.zeros((n_walkers,), jnp.float32),
             jnp.zeros((n_walkers,), bool),
-            jnp.ones((n_walkers,), bool))
+            jnp.ones((n_walkers,), bool),
+            arr0)
     # unroll: XLA-CPU scan pays per-iteration overhead comparable to this
     # small step body; 4x unrolling is ~40% faster at cluster-scale batches
-    (cur, total, done, _), _ = jax.lax.scan(step, init, keys, unroll=4)
-    return total
+    (cur, total, done, _, arr), _ = jax.lax.scan(step, init, keys, unroll=4)
+    return (total, arr) if track_arrivals else total
 
 
 @partial(jax.jit, static_argnames=("n_walkers", "max_steps"))
@@ -364,21 +385,25 @@ def pack_graphs(graphs: Dict[str, PDGraph], t_in: float, t_out: float
                     cum_trans=jnp.asarray(cum))
 
 
-@partial(jax.jit, static_argnames=("n_walkers", "max_steps"))
+@partial(jax.jit, static_argnames=("n_walkers", "max_steps",
+                                   "track_arrivals"))
 def _mc_walk_batch(samples, counts, cum_trans,          # (G,U,S),(G,U),(G,U,U+1)
                    graph_idx, start, executed,          # (A,) each
                    base_key, key_ids, refresh_ids,      # key, (A,), (A,)
                    ov_samples, ov_counts,               # (A,U,So), (A,U)
-                   n_walkers: int, max_steps: int) -> jnp.ndarray:
+                   n_walkers: int, max_steps: int,
+                   track_arrivals: bool = False) -> jnp.ndarray:
     """One dispatch for the whole queue: vmap of `_walk_core` with per-app
     graph gather and per-app fold_in keys (identical bits to the looped
-    per-app path, which derives the same fold_in chain)."""
+    per-app path, which derives the same fold_in chain).  With
+    ``track_arrivals`` returns ``(totals (A,W), arrivals (A,W,U))``."""
     base_key = _as_typed_key(base_key)
 
     def one(g, st, ex, kid, rid, ovs, ovc):
         key = jax.random.fold_in(jax.random.fold_in(base_key, kid), rid)
         return _walk_core(samples[g], counts[g], cum_trans[g], ovs, ovc,
-                          st, ex, key, n_walkers, max_steps)
+                          st, ex, key, n_walkers, max_steps,
+                          track_arrivals=track_arrivals)
 
     return jax.vmap(one)(graph_idx, start, executed,
                          key_ids, refresh_ids, ov_samples, ov_counts)

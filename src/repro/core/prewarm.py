@@ -11,15 +11,30 @@ backend with branch probability p_s and warm-up duration t_p, and the
       t_s = start + Quantile_{T_unit}(1 - K/p_s) - t_p
   (clipped at `now`; a smaller K = more aggressive = earlier trigger and more
   potential waste — the Fig. 14 trade-off.)
+
+Two planning paths:
+
+* **Batched device plan** (fused refresh mode) — the fused refresh walk also
+  records per-walker first-arrival times into every unit; the pipeline
+  reduces them on device into per-(app, backend-class) arrival histograms
+  and trigger quantiles, generalizing the one-hop branch probability p_s to
+  the full reach probability over ALL downstream units.  ``PrewarmTable``
+  packs the unit -> warmable-backend-class mapping and per-class warm-up
+  durations into device constants; ``plan_from_triggers`` turns the
+  ``(A, B)`` device trigger matrix into one :class:`PrewarmPlan` per tick —
+  no per-application host loop anywhere on the tick path.
+* **Legacy one-hop host plan** (``plan_prewarms``) — the original per-app
+  immediate-successor planner, retained for the looped/composed refresh
+  modes and as the closed-form oracle the batched plan is tested against.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.pdgraph import PDGraph
+from repro.core.pdgraph import ARRIVAL_NEVER, PDGraph, PackedKB
 
 
 def quantile(samples: Sequence[float], q: float) -> float:
@@ -86,3 +101,100 @@ def plan_prewarms(graph: PDGraph, app_id: str, current_unit: str,
                                          backend_kind=unit.backend.kind,
                                          app_id=app_id, unit=nxt, p_s=p_s))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Batched device-resident planning (rides the fused refresh dispatch)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PrewarmTable:
+    """Unit -> warmable-backend-class mapping packed as device constants.
+
+    A *backend class* is one distinct warmable resource key across the whole
+    knowledge base (``kv:CG.plan``, ``lora:coder``, ``docker:python:...``).
+    ``unit_class`` aligns with the PackedKB unit tables, so the fused
+    pipeline can scatter per-(app, unit) arrival quantiles into
+    per-(app, class) triggers without any host mapping step.  Docker keys
+    stay unqualified here; the host qualifies them per application when
+    executing the plan (container identity is (image, app))."""
+    classes: Tuple[str, ...]     # (B,) resource keys
+    kinds: Tuple[str, ...]       # (B,) backend kind per class
+    unit_class: np.ndarray       # (G, U, Kc) int32 class ids, -1 = none
+    warmup: np.ndarray           # (B,) float32 warm-up seconds per class
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.classes)
+
+
+def build_prewarm_table(kb: Dict[str, PDGraph], packed: PackedKB,
+                        warmup_time_of) -> PrewarmTable:
+    """Pack every warmable resource key in the KB into a PrewarmTable
+    aligned with ``packed``'s (G, U) unit tables."""
+    per_unit: Dict[Tuple[int, int], Tuple[str, ...]] = {}
+    kind_of: Dict[str, str] = {}
+    for name in packed.names:
+        g = packed.graph_index[name]
+        uidx = packed.unit_index[g]
+        for uname, node in kb[name].units.items():
+            keys = node.backend.resource_keys()
+            per_unit[(g, uidx[uname])] = keys
+            for k in keys:
+                kind_of[k] = node.backend.kind
+    classes = tuple(sorted(kind_of))
+    cid = {k: i for i, k in enumerate(classes)}
+    G = len(packed.names)
+    U = packed.n_units
+    Kc = max((len(v) for v in per_unit.values()), default=1) or 1
+    unit_class = np.full((G, U, Kc), -1, np.int32)
+    for (g, u), keys in per_unit.items():
+        for j, k in enumerate(keys):
+            unit_class[g, u, j] = cid[k]
+    warmup = np.asarray([warmup_time_of(k) for k in classes], np.float32)
+    return PrewarmTable(classes=classes, kinds=tuple(kind_of[k] for k in classes),
+                        unit_class=unit_class, warmup=warmup)
+
+
+@dataclass
+class PrewarmPlan:
+    """One tick's batched prewarm decisions: M (application, backend-class)
+    triggers, produced from the fused dispatch's ``(A, B)`` trigger matrix.
+    ``fire_at`` is absolute; ``p_reach`` is the MC probability that the app
+    ever needs the class (the batched generalization of one-hop p_s)."""
+    app_ids: List[str]           # (M,)
+    resource_keys: List[str]     # (M,) unqualified class keys
+    kinds: List[str]             # (M,)
+    fire_at: np.ndarray          # (M,) float64 absolute seconds
+    p_reach: np.ndarray          # (M,) float32
+
+    def __len__(self) -> int:
+        return len(self.app_ids)
+
+    def signals(self):
+        for i in range(len(self.app_ids)):
+            yield PrewarmSignal(fire_at=float(self.fire_at[i]),
+                                resource_key=self.resource_keys[i],
+                                backend_kind=self.kinds[i],
+                                app_id=self.app_ids[i], unit="*",
+                                p_s=float(self.p_reach[i]))
+
+
+def plan_from_triggers(app_ids: Sequence[str], trigger: np.ndarray,
+                       p_reach: np.ndarray, now: float,
+                       table: PrewarmTable) -> PrewarmPlan:
+    """Vectorized (A, B) trigger matrix -> PrewarmPlan.
+
+    ``trigger`` holds device-computed fire times relative to ``now``
+    (>= ``ARRIVAL_NEVER/2`` meaning "do not prewarm"); negative relative
+    triggers clip to `now` (warm-up can no longer finish in time but partial
+    overlap still helps — same clip as the legacy planner)."""
+    trigger = np.asarray(trigger)
+    a_idx, b_idx = np.nonzero(trigger < ARRIVAL_NEVER / 2)
+    fire = now + np.maximum(trigger[a_idx, b_idx], 0.0)
+    return PrewarmPlan(
+        app_ids=[app_ids[a] for a in a_idx],
+        resource_keys=[table.classes[b] for b in b_idx],
+        kinds=[table.kinds[b] for b in b_idx],
+        fire_at=np.asarray(fire, np.float64),
+        p_reach=np.asarray(p_reach)[a_idx, b_idx].astype(np.float32))

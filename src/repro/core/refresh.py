@@ -42,47 +42,132 @@ import jax.numpy as jnp
 
 from repro.core.gittins import (N_BUCKETS, gittins_rank_core,
                                 to_histogram_rows_jnp)
-from repro.core.pdgraph import PackedKB, _mc_walk_batch, _pow2_ceil
+from repro.core.pdgraph import (ARRIVAL_NEVER, PackedKB, _mc_walk_batch,
+                                _pow2_ceil)
 from repro.kernels.pdgraph_walk.ops import pdgraph_walk, walker_streams
+
+
+def _prewarm_triggers(arr, graph_idx, unit_class, class_warmup, K, n_buckets):
+    """Per-walker first-arrival times -> per-(app, backend-class) prewarm
+    triggers, entirely on device (§3.4 generalized to all downstream units).
+
+    arr:         (A, W, U) cumulative service at each walker's first entry
+                 into each unit (ARRIVAL_NEVER where never entered)
+    unit_class:  (G, U, Kc) int32 backend-class ids per unit (-1 = none)
+    class_warmup:(B,) float32 warm-up seconds per class
+    K:           effectiveness knob (traced scalar — one compile serves the
+                 whole Fig. 14 K sweep)
+
+    Per (app, unit): p_reach = P[walker ever enters u]; where p_reach >= K
+    the trigger quantile is Quantile_{first-arrival | reached}(1 - K/p_reach)
+    from an n_buckets arrival histogram (linear interpolation inside the
+    crossing bucket).  Per (app, class): the earliest (quantile - warm-up)
+    over contributing units.  Returns ``(trigger (A, B), reach (A, B))``
+    with ARRIVAL_NEVER marking "do not prewarm"."""
+    A, W, U = arr.shape
+    B = class_warmup.shape[0]
+    reached = arr < ARRIVAL_NEVER / 2                       # (A, W, U)
+    n_reach = reached.sum(axis=1).astype(jnp.float32)       # (A, U)
+    p_reach = n_reach / W
+    ok = p_reach >= K                                       # coverage gate
+    q = jnp.clip(1.0 - K / jnp.maximum(p_reach, 1e-9), 0.0, 1.0)
+
+    # arrival histogram over reached walkers, same floor binning as the
+    # rank pipeline's to_histogram_rows_jnp
+    t_lo = jnp.where(reached, arr, ARRIVAL_NEVER)
+    lo = t_lo.min(axis=1)                                   # (A, U)
+    hi = jnp.where(reached, arr, -ARRIVAL_NEVER).max(axis=1)
+    span = jnp.maximum(hi - lo, 1e-6)
+    idx = ((arr - lo[:, None, :]) * (n_buckets / span)[:, None, :])
+    idx = jnp.clip(idx.astype(jnp.int32), 0, n_buckets - 1)
+    # one-hot reduce per unit (U is static and small): peak intermediate is
+    # (A, W, nb) — same as the rank histogram — instead of the full
+    # (A, W, U, nb) cross product, which at benchmark scale (4096 apps x
+    # 512 walkers) would be a few-hundred-MB device allocation
+    buckets = jnp.arange(n_buckets)
+    hist = jnp.stack(
+        [((idx[:, :, u, None] == buckets) & reached[:, :, u, None])
+         .sum(axis=1) for u in range(U)], axis=1).astype(jnp.float32)
+    denom = jnp.maximum(n_reach, 1.0)
+    cdf = jnp.cumsum(hist, axis=-1) / denom[..., None]
+
+    # quantile: first bucket whose CDF reaches q, linearly interpolated
+    k = jnp.argmax(cdf >= q[..., None] - 1e-7, axis=-1)     # (A, U)
+    kk = k[..., None]
+    cdf_prev = jnp.where(
+        kk > 0, jnp.take_along_axis(cdf, jnp.maximum(kk - 1, 0), -1), 0.0)[..., 0]
+    p_k = jnp.take_along_axis(hist, kk, -1)[..., 0] / denom
+    frac = jnp.clip((q - cdf_prev) / jnp.maximum(p_k, 1e-9), 0.0, 1.0)
+    width = span / n_buckets
+    qtile = lo + (k.astype(jnp.float32) + frac) * width     # (A, U)
+
+    # scatter-min into backend classes:  trigger(a,b) = min over units of
+    # (quantile - warm-up) where unit u needs class b and passes the gate
+    uc = unit_class[graph_idx]                              # (A, U, Kc)
+    cand = qtile[..., None] - class_warmup[jnp.maximum(uc, 0)]
+    gate = ok[..., None] & (uc >= 0)
+    cls = uc[..., None] == jnp.arange(B)                    # (A, U, Kc, B)
+    hit = cls & gate[..., None]
+    trigger = jnp.min(jnp.where(hit, cand[..., None], ARRIVAL_NEVER),
+                      axis=(1, 2))                          # (A, B)
+    reach = jnp.max(jnp.where(hit, p_reach[..., None, None], 0.0),
+                    axis=(1, 2))                            # (A, B)
+    return trigger, reach
 
 
 @partial(jax.jit, static_argnames=("n_walkers", "max_steps", "n_buckets",
                                    "walker", "impl", "with_overrides",
-                                   "compact_after", "compact_shrink"))
+                                   "compact_after", "compact_shrink",
+                                   "with_prewarm"))
 def _fused_pipeline(samples, counts, cum_trans,        # KB: (G,U,S),(G,U),(G,U,U+1)
                     graph_idx, start, executed, attained,   # (A,) queue state
                     key_ids, refresh_ids,                   # (A,) RNG stream ids
                     base_key, seed,                         # threefry / counter seeds
                     ov_samples, ov_counts,                  # (A,U,So), (A,U)
                     valid,                                  # (A,) bool queue rows
+                    unit_class, class_warmup, prewarm_k,    # prewarm tables + K
                     *, n_walkers: int, max_steps: int, n_buckets: int,
                     walker: str, impl: Optional[str], with_overrides: bool,
-                    compact_after: int, compact_shrink: int):
-    """walk → bucketize → rank, one dispatch.  Returns (ranks, probs, edges,
-    spill) — all shaped (A, ...), A padded to a power of two by the caller."""
+                    compact_after: int, compact_shrink: int,
+                    with_prewarm: bool):
+    """walk → bucketize → rank (→ prewarm triggers), one dispatch.  Returns
+    (ranks, probs, edges, spill, trigger, reach) — all shaped (A, ...), A
+    padded to a power of two by the caller; trigger/reach are ``None`` when
+    ``with_prewarm`` is off.  With it on, the SAME walk that feeds the ranks
+    also emits per-unit first-arrival times, reduced on device to
+    per-(app, backend-class) trigger quantiles — the host never sees the
+    (A, W, U) arrival tensor."""
+    arr = None
     if walker == "threefry":
         # the composed path's walker verbatim — ONE implementation carries
         # the fold_in chain, so fused/composed bit-identity cannot drift
-        rem = _mc_walk_batch(samples, counts, cum_trans,
+        out = _mc_walk_batch(samples, counts, cum_trans,
                              graph_idx, start, executed,
                              base_key, key_ids, refresh_ids,
-                             ov_samples, ov_counts, n_walkers, max_steps)
+                             ov_samples, ov_counts, n_walkers, max_steps,
+                             track_arrivals=with_prewarm)
+        rem, arr = out if with_prewarm else (out, None)
         spill = jnp.zeros((), jnp.int32)
     elif walker == "pallas":
         streams = walker_streams(seed, key_ids, refresh_ids)
-        rem, spill = pdgraph_walk(
+        out = pdgraph_walk(
             samples, counts, cum_trans, graph_idx, start, executed, streams,
             ov_samples if with_overrides else None,
             ov_counts if with_overrides else None,
             valid=valid, n_walkers=n_walkers, max_steps=max_steps,
             impl=impl, compact_after=compact_after,
-            compact_shrink=compact_shrink)
+            compact_shrink=compact_shrink, track_arrivals=with_prewarm)
+        (rem, arr, spill) = out if with_prewarm else (out[0], None, out[1])
     else:
         raise ValueError(f"unknown walker {walker!r}")
     total = attained[:, None] + jnp.maximum(rem, 0.0)
     probs, edges = to_histogram_rows_jnp(total, n_buckets)
     ranks = gittins_rank_core(probs, edges, attained)
-    return ranks, probs, edges, spill
+    trigger = reach = None
+    if with_prewarm:
+        trigger, reach = _prewarm_triggers(arr, graph_idx, unit_class,
+                                           class_warmup, prewarm_k, n_buckets)
+    return ranks, probs, edges, spill, trigger, reach
 
 
 class QueueState:
@@ -237,30 +322,49 @@ def refresh_ranks_fused(packed: PackedKB, qs: QueueState, base_key, seed,
                         n_walkers: int = 512, max_steps: int = 64,
                         n_buckets: int = N_BUCKETS, walker: str = "pallas",
                         impl: Optional[str] = None,
-                        compact_after: int = 16, compact_shrink: int = 4
-                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+                        compact_after: int = 16, compact_shrink: int = 4,
+                        prewarm_table=None, prewarm_k: float = 0.5
+                        ) -> Tuple[np.ndarray, ...]:
     """One fused refresh over the queue (or a slot subset).
 
     Returns ``(ranks (A,), probs (A, n_buckets), edges (A, n_buckets),
-    spill)`` as host arrays — the (A, n_walkers) sample matrix stays on
-    device.  Does NOT bump refresh ids; callers bump after consuming."""
+    spill, trigger, reach)`` as host arrays — the (A, n_walkers) sample
+    matrix stays on device.  With a :class:`~repro.core.prewarm.PrewarmTable`
+    the same dispatch also returns the ``(A, B)`` prewarm trigger matrix
+    (relative seconds; ``ARRIVAL_NEVER`` = don't) and reach probabilities;
+    otherwise both are None.  Does NOT bump refresh ids; callers bump after
+    consuming."""
     gi, start, executed, attained, kid, rid, ovs, ovc = qs.gather(slots)
     A = len(slots) if slots is not None else len(qs)
     if A == 0:
         z = np.zeros((0, n_buckets), np.float32)
-        return np.zeros(0, np.float32), z, z, 0
+        zt = (np.zeros((0, prewarm_table.n_classes), np.float32)
+              if prewarm_table is not None else None)
+        return np.zeros(0, np.float32), z, z, 0, zt, zt
     with_ov = qs.override_apps > 0
     if not with_ov and ovs.shape[2] > 1:
         ovs = ovs[:, :, :1]                  # keep the no-override jit cache
-    ranks, probs, edges, spill = _fused_pipeline(
+    with_pw = prewarm_table is not None
+    if with_pw:
+        uc = jnp.asarray(prewarm_table.unit_class)
+        wt = jnp.asarray(prewarm_table.warmup)
+    else:  # 1-class placeholders keep the arg list static-shape friendly
+        uc = jnp.full((packed.samples.shape[0], packed.n_units, 1), -1,
+                      jnp.int32)
+        wt = jnp.zeros((1,), jnp.float32)
+    ranks, probs, edges, spill, trigger, reach = _fused_pipeline(
         packed.samples, packed.counts, packed.cum_trans,
         jnp.asarray(gi), jnp.asarray(start), jnp.asarray(executed),
         jnp.asarray(attained), jnp.asarray(kid), jnp.asarray(rid),
         base_key, np.uint32(int(seed) & 0xFFFFFFFF),
         jnp.asarray(ovs), jnp.asarray(ovc),
         jnp.asarray(np.arange(len(gi)) < A),
+        uc, wt, jnp.float32(prewarm_k),
         n_walkers=n_walkers, max_steps=max_steps, n_buckets=n_buckets,
         walker=walker, impl=impl, with_overrides=with_ov,
-        compact_after=compact_after, compact_shrink=compact_shrink)
+        compact_after=compact_after, compact_shrink=compact_shrink,
+        with_prewarm=with_pw)
     return (np.asarray(ranks)[:A], np.asarray(probs)[:A],
-            np.asarray(edges)[:A], int(spill))
+            np.asarray(edges)[:A], int(spill),
+            np.asarray(trigger)[:A] if with_pw else None,
+            np.asarray(reach)[:A] if with_pw else None)

@@ -25,7 +25,9 @@ from repro.core.pdgraph import (PDGraph, mc_service_samples_batch,
                                 pack_graphs)
 from repro.core.policies import (AppView, GittinsPolicy, Policy, VTCPolicy,
                                  make_policy)
-from repro.core.prewarm import PrewarmSignal, plan_prewarms
+from repro.core.prewarm import (PrewarmPlan, PrewarmSignal,
+                                build_prewarm_table, plan_from_triggers,
+                                plan_prewarms)
 from repro.core.refresh import build_queue_state, refresh_ranks_fused
 
 
@@ -57,7 +59,8 @@ class HermesScheduler:
                  mc_walkers: int = 512, seed: int = 0,
                  batched: bool = True, mode: Optional[str] = None,
                  walker: str = "pallas",
-                 compact_after: int = 16, compact_shrink: int = 4):
+                 compact_after: int = 16, compact_shrink: int = 4,
+                 warmup_table: Optional[Dict[str, float]] = None):
         self.kb = knowledge_base
         self.policy: Policy = make_policy(policy) if policy != "gittins" \
             else make_policy(policy, n_buckets=n_buckets)
@@ -100,6 +103,9 @@ class HermesScheduler:
         self._packed = None               # (kb versions, PackedKB) cache
         self._qstate = None               # fused-mode queue buffers (lazy)
         self.fused_spill = 0              # walkers truncated by compaction
+        self.warmup_table = warmup_table  # per-key warm-up cost overrides
+        self._prewarm_tab = None          # (kb token, PrewarmTable) cache
+        self.prewarm_plan: Optional[PrewarmPlan] = None   # last fused plan
         for g in self.kb.values():
             C.apply_masks(g)
 
@@ -123,6 +129,33 @@ class HermesScheduler:
         triage etc.) still need host-side demand stats and fall back to the
         composed path."""
         return self.mode == "fused" and type(self.policy) is GittinsPolicy
+
+    @property
+    def prewarm_batched(self) -> bool:
+        """True when prewarm planning rides the fused refresh dispatch (one
+        batched PrewarmPlan per tick) instead of the legacy per-app
+        ``prewarm_signals`` calls."""
+        return self.prewarm_enabled and self._fused_active()
+
+    def _prewarm_table(self):
+        """PrewarmTable aligned with the current packed KB (rebuilt whenever
+        record_trial bumps a graph version and the KB is repacked)."""
+        from repro.core.hermeslet import warmup_time_for
+        packed = self._packed_kb()
+        token = self._packed[0]
+        if self._prewarm_tab is None or self._prewarm_tab[0] != token:
+            tab = build_prewarm_table(
+                self.kb, packed,
+                lambda k: warmup_time_for(k, self.warmup_table))
+            self._prewarm_tab = (token, tab)
+        return self._prewarm_tab[1]
+
+    def take_prewarm_plan(self) -> Optional[PrewarmPlan]:
+        """Hand the last fused-dispatch PrewarmPlan to the host (simulator /
+        engine) exactly once; None when nothing was planned since the last
+        take."""
+        plan, self.prewarm_plan = self.prewarm_plan, None
+        return plan
 
     def _ensure_qstate(self):
         """Queue buffers are maintained incrementally by the on_* events;
@@ -201,10 +234,14 @@ class HermesScheduler:
             a.refreshes += 1
             self._make_view(a, row)
 
-    def _refresh_views_fused(self, apps: List[AppRuntime]) -> None:
+    def _refresh_views_fused(self, apps: List[AppRuntime],
+                             now: float) -> None:
         """Fused refresh: one device dispatch re-estimates, bucketizes and
         ranks the stale set; views carry the (n_buckets,) histogram rows and
-        the device rank — never the (A, n_walkers) sample matrix."""
+        the device rank — never the (A, n_walkers) sample matrix.  With
+        prewarming enabled the SAME dispatch returns the batched per-(app,
+        backend-class) trigger matrix, stashed as a PrewarmPlan for the host
+        to take (no per-app planning loop anywhere)."""
         if not apps:
             return
         qs = self._ensure_qstate()
@@ -216,13 +253,18 @@ class HermesScheduler:
             apps = [self.apps[i] for i in qs.ids]
         slots = None if full else \
             np.asarray([qs.slot[a.app_id] for a in apps], np.int64)
-        ranks, probs, edges, spill = refresh_ranks_fused(
+        tab = self._prewarm_table() if self.prewarm_batched else None
+        ranks, probs, edges, spill, trigger, reach = refresh_ranks_fused(
             self._packed[1], qs, self._base_key, self._seed,
             slots=slots, n_walkers=self.mc_walkers,
             n_buckets=self.n_buckets, walker=self.walker,
             compact_after=self.compact_after,
-            compact_shrink=self.compact_shrink)
+            compact_shrink=self.compact_shrink,
+            prewarm_table=tab, prewarm_k=self.K)
         self.fused_spill += spill
+        if tab is not None:
+            self._stash_plan(plan_from_triggers(
+                [a.app_id for a in apps], trigger, reach, now, tab))
         for i, a in enumerate(apps):
             a.refreshes += 1
             a.view = AppView(app_id=a.app_id, tenant=a.tenant,
@@ -233,6 +275,32 @@ class HermesScheduler:
                              fused_rank=float(ranks[i]))
         qs.bump_refresh(slots if slots is not None
                         else np.arange(len(qs)))
+
+    def _stash_plan(self, plan: PrewarmPlan) -> None:
+        """Accumulate plans until the host takes them (several subset
+        refreshes may land between two take_prewarm_plan calls).  Merging
+        dedups on (app, class) with the NEWEST trigger winning — later
+        refreshes have fresher arrival estimates — so the stash is bounded
+        by live-apps x classes even if no host ever takes it."""
+        if len(plan) == 0:
+            return
+        prev = self.prewarm_plan
+        if prev is None or len(prev) == 0:
+            self.prewarm_plan = plan
+            return
+        merged: Dict[tuple, tuple] = {}
+        for p in (prev, plan):
+            for i in range(len(p)):
+                if p.app_ids[i] in self._live:     # prune retired apps
+                    merged[(p.app_ids[i], p.resource_keys[i])] = \
+                        (p.kinds[i], p.fire_at[i], p.p_reach[i])
+        keys = list(merged)
+        self.prewarm_plan = PrewarmPlan(
+            app_ids=[a for a, _ in keys],
+            resource_keys=[k for _, k in keys],
+            kinds=[merged[k][0] for k in keys],
+            fire_at=np.asarray([merged[k][1] for k in keys], np.float64),
+            p_reach=np.asarray([merged[k][2] for k in keys], np.float32))
 
     # -------------------------------------------------------------- events
     def on_arrival(self, app_id: str, app_name: str, now: float, *,
@@ -358,7 +426,7 @@ class HermesScheduler:
                     if i in self.apps and not self.apps[i].done]
         stale = [a for a in live if a.view is None]
         if self._fused_active():
-            self._refresh_views_fused(stale)
+            self._refresh_views_fused(stale, now)
         else:
             self._refresh_views(stale)
         views = [a.view for a in live]

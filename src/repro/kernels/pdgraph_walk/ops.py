@@ -29,16 +29,26 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.pdgraph import ARRIVAL_NEVER  # single sentinel definition
 from repro.kernels.pdgraph_walk.kernel import pdgraph_walk_kernel
 from repro.kernels.pdgraph_walk.ref import walk_phase_ref, walker_streams  # noqa: F401  (re-export)
 
 
 def _phase(flat_tables, ov_tables, state, *, step0, n_steps, lanes_per_app,
-           impl, interpret):
-    """One walk phase via the kernel or its jnp twin (identical bits)."""
+           impl, interpret, arrivals=None):
+    """One walk phase via the kernel or its jnp twin (identical bits).
+
+    ``arrivals`` (N, U) switches on first-arrival tracking, which only the
+    jnp twin implements (kernel support is an open item — see
+    docs/KERNELS.md); callers requesting it must dispatch impl="ref"."""
     fsamples, fcounts, fcum = flat_tables
     fov_s, fov_c = ov_tables
     cur, total, done, gi, app, stream, lane, executed = state
+    if arrivals is not None:
+        return walk_phase_ref(fsamples, fcounts, fcum, fov_s, fov_c,
+                              cur, total, done, gi, app, stream, lane,
+                              executed, step0=step0, n_steps=n_steps,
+                              lanes_per_app=lanes_per_app, arrivals=arrivals)
     if impl == "pallas":
         ex = executed if executed is not None \
             else jnp.zeros_like(total)
@@ -70,19 +80,28 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
                  *, valid: Optional[jnp.ndarray] = None,     # (A,) bool
                  n_walkers: int = 512, max_steps: int = 64,
                  impl: Optional[str] = None, interpret: Optional[bool] = None,
-                 compact_after: int = 16, compact_shrink: int = 4
-                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                 compact_after: int = 16, compact_shrink: int = 4,
+                 track_arrivals: bool = False
+                 ) -> Tuple[jnp.ndarray, ...]:
     """Remaining-service totals for A apps: ``((A, n_walkers), spill)``.
 
     Pure jnp — safe to call inside an outer jit.  ``streams`` come from
     ``walker_streams(seed, key_ids, refresh_ids)``.  ``valid`` marks real
     queue rows: padding rows start their walkers absorbed, so they neither
     occupy phase-2 compaction capacity nor inflate the spill count.
+
+    ``track_arrivals`` additionally returns per-walker first-arrival times
+    into every unit — ``((A, W), (A, W, U), spill)`` — feeding the fused
+    prewarm planner.  Tracking routes the walk through the jnp twin (the
+    Pallas kernel does not carry the arrival state yet); the twin draws
+    bit-identical counter-RNG samples, so totals are unchanged.
     """
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if track_arrivals:
+        impl = "ref"                 # kernel arrival state: open item
     A = graph_idx.shape[0]
     G, U, S = samples.shape
     N = A * n_walkers
@@ -111,10 +130,20 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
     compact = (0 < compact_after < max_steps
                and compact_shrink > 1 and N // compact_shrink >= 128)
     phase1_steps = compact_after if compact else max_steps
-    cur, total, done = _phase(flat_tables, ov_tables, state,
-                              step0=0, n_steps=phase1_steps,
-                              lanes_per_app=W, impl=impl, interpret=interpret)
+    arr = (jnp.full((N, U), ARRIVAL_NEVER, jnp.float32)
+           if track_arrivals else None)
+    out1 = _phase(flat_tables, ov_tables, state,
+                  step0=0, n_steps=phase1_steps,
+                  lanes_per_app=W, impl=impl, interpret=interpret,
+                  arrivals=arr)
+    if track_arrivals:
+        cur, total, done, arr = out1
+    else:
+        cur, total, done = out1
     if not compact:
+        if track_arrivals:
+            return (total.reshape(A, W), arr.reshape(A, W, U),
+                    jnp.zeros((), jnp.int32))
         return total.reshape(A, W), jnp.zeros((), jnp.int32)
 
     C = N // compact_shrink
@@ -125,10 +154,17 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
     sub = (cur[keep], total[keep], done[keep],
            gi[keep], app[keep], stream[keep], lane[keep],
            None)                                          # executed: step 0 only
-    _, total2, _ = _phase(flat_tables, ov_tables, sub,
-                          step0=compact_after,
-                          n_steps=max_steps - compact_after,
-                          lanes_per_app=W, impl=impl, interpret=interpret)
+    out2 = _phase(flat_tables, ov_tables, sub,
+                  step0=compact_after,
+                  n_steps=max_steps - compact_after,
+                  lanes_per_app=W, impl=impl, interpret=interpret,
+                  arrivals=arr[keep] if track_arrivals else None)
+    if track_arrivals:
+        _, total2, _, arr2 = out2
+        total = total.at[keep].set(total2)
+        arr = arr.at[keep].set(arr2)   # spilled walkers keep phase-1 arrivals
+        return total.reshape(A, W), arr.reshape(A, W, U), spill
+    _, total2, _ = out2
     total = total.at[keep].set(total2)
     return total.reshape(A, W), spill
 

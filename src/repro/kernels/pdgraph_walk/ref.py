@@ -77,13 +77,21 @@ def walk_phase_ref(fsamples: jnp.ndarray,     # (G*U, S) float32
                    stream: jnp.ndarray, lane: jnp.ndarray,
                    executed: Optional[jnp.ndarray],
                    *, step0: int, n_steps: int, lanes_per_app: int,
-                   unroll: int = 4):
+                   unroll: int = 4,
+                   arrivals: Optional[jnp.ndarray] = None):
     """One phase of the counter walk over flat walker state (N,).
 
     Tables are flattened row-major over (graph, unit) so one 1-D gather per
     lookup serves the whole mixed-graph queue; ``executed`` is only consumed
     at global step 0 (phase-2 calls pass None).  Returns updated
     ``(cur, total, done)``.
+
+    ``arrivals`` (N, U) enables first-arrival tracking: each walker records
+    its cumulative service at its FIRST entry into each unit
+    (``ARRIVAL_NEVER`` where never entered) — the prewarm planner's input.
+    The counter-RNG draws are indexed by (stream, lane, step) and do not
+    depend on the extra carry, so totals are bit-identical either way.
+    Returns ``(cur, total, done, arrivals)`` when tracking.
     """
     U = fcum.shape[1] - 1                    # absorbing state == unit stride
     S = fsamples.shape[1]
@@ -92,9 +100,11 @@ def walk_phase_ref(fsamples: jnp.ndarray,     # (G*U, S) float32
     if with_ov:
         So = fov_samples.shape[1]
         fov = fov_samples.reshape(-1)
+    track = arrivals is not None
+    unit_ids = jnp.arange(U, dtype=jnp.int32)
 
     def step(carry, s):
-        cur, total, done = carry
+        cur, total, done, arr = carry
         ctr = s.astype(jnp.uint32) * np.uint32(lanes_per_app) + lane
         r, r2 = counter_uniforms(stream, ctr)
         row = gi * U + cur
@@ -114,10 +124,18 @@ def walk_phase_ref(fsamples: jnp.ndarray,     # (G*U, S) float32
         nxt = jnp.sum(r2[:, None] > fcum[row], axis=-1).astype(jnp.int32)
         nxt = jnp.minimum(nxt, U)
         new_done = done | (nxt >= U)
+        if track:
+            # entry into `nxt` happens when the current unit completes — at
+            # the just-updated total; min keeps the first entry (loops)
+            enter = (~done) & (nxt < U)
+            onehot = enter[:, None] & (nxt[:, None] == unit_ids[None, :])
+            arr = jnp.where(onehot, jnp.minimum(arr, total[:, None]), arr)
         cur = jnp.where(new_done, cur, nxt)
-        return (cur, total, new_done), None
+        return (cur, total, new_done, arr), None
 
+    arr0 = arrivals if track else jnp.zeros((cur.shape[0], 0), jnp.float32)
     steps = jnp.arange(step0, step0 + n_steps, dtype=jnp.int32)
-    (cur, total, done), _ = jax.lax.scan(step, (cur, total, done), steps,
-                                         unroll=min(unroll, n_steps))
-    return cur, total, done
+    (cur, total, done, arr), _ = jax.lax.scan(
+        step, (cur, total, done, arr0), steps,
+        unroll=min(unroll, n_steps))
+    return (cur, total, done, arr) if track else (cur, total, done)

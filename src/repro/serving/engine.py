@@ -97,6 +97,34 @@ class InferenceEngine:
     def prewarm_lora(self, lora_id: str) -> None:
         self.lora.load(lora_id, speculative=True)
 
+    def apply_prewarm_plan(self, plan, now: Optional[float] = None) -> int:
+        """Execute the LLM-side signals of a scheduler PrewarmPlan (the
+        batched per-tick plan from ``HermesScheduler.take_prewarm_plan``):
+        ``kv:<prefix>`` loads the prefix KV into the arena, ``lora:<id>``
+        merges the adapter into the pool.  Non-LLM classes (docker/dnn) have
+        no backend here and are skipped.
+
+        ``now`` enforces the §3.4 trigger timing: only signals with
+        ``fire_at <= now`` are executed — re-apply the plan on later engine
+        steps to pick up the rest (firing early would occupy arena/pool
+        capacity exactly as the trigger quantile exists to avoid).  ``None``
+        applies everything (caller owns the timing).  Returns the number of
+        signals acted on."""
+        if plan is None:
+            return 0
+        acted = 0
+        for key, fire_at in zip(plan.resource_keys, plan.fire_at):
+            if now is not None and fire_at > now:
+                continue
+            kind, _, name = key.partition(":")
+            if kind == "kv" and name in self.prefix_prompts:
+                self.prewarm_prefix(name)
+                acted += 1
+            elif kind == "lora" and name in self.lora.adapters:
+                self.prewarm_lora(name)
+                acted += 1
+        return acted
+
     def submit(self, req: Request) -> None:
         req.submitted = req.submitted or time.monotonic()
         self.queue.append(req)

@@ -15,7 +15,7 @@ import heapq
 import itertools
 import time as _time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -47,11 +47,19 @@ class SimConfig:
     mc_walkers: int = 256
     n_buckets: int = 10
     seed: int = 0
-    # priority-refresh pipeline: "composed" (PR 1 batched path, default),
-    # "fused" (device-resident walk->bucketize->rank single dispatch),
-    # "looped" (seed baseline); `walker` picks the fused MC backend
-    refresh_mode: str = "composed"
+    # priority-refresh pipeline: "fused" (device-resident walk->bucketize->
+    # rank->prewarm single dispatch, the default since the PR-2 soak),
+    # "composed" (PR 1 batched path), "looped" (seed baseline); `walker`
+    # picks the fused MC backend
+    refresh_mode: str = "fused"
     walker: str = "pallas"
+    # backend-pool cold/warm model: per-key warm-up seconds override the
+    # Fig. 2 defaults; `warmup_model` derives the LLM-side (kv/lora) costs
+    # from the repro.configs model zoo (explicit warmup_table entries win);
+    # `keep_alive_s` is the speculative keep-alive eviction idle threshold
+    warmup_table: Optional[Dict[str, float]] = None
+    warmup_model: Optional[str] = None
+    keep_alive_s: Optional[float] = None
 
 
 @dataclass
@@ -92,6 +100,20 @@ class SimResult:
     policy_time_s: float
     policy_calls: int
     makespan: float
+    # cold-start consequences the caches can't see: stall seconds charged
+    # to task starts, cold-hit counts, prewarm signals scheduled
+    stall_stats: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def prewarm_stats(self) -> Dict[str, float]:
+        """Stall accounting + warm-cache aggregates in one view.  The cache
+        sums are DERIVED from ``cache_stats`` here (single source) so the
+        two can never disagree."""
+        agg = {k: float(sum(c[k] for c in self.cache_stats.values()))
+               for k in ("hits", "misses", "spec_loads", "spec_used",
+                         "wasted_warm_s")}
+        agg.update(self.stall_stats)
+        return agg
 
     def act_values(self) -> np.ndarray:
         return np.asarray(sorted(self.acts.values()))
@@ -113,16 +135,26 @@ class ClusterSim:
     def __init__(self, kb: Dict[str, PDGraph], cfg: SimConfig):
         self.kb = kb
         self.cfg = cfg
+        warmup = {}
+        if cfg.warmup_model:
+            from repro.core.hermeslet import warmup_table_from_model
+            warmup.update(warmup_table_from_model(cfg.warmup_model))
+        if cfg.warmup_table:
+            warmup.update(cfg.warmup_table)
+        self.warmup_table = warmup or None
         self.sched = HermesScheduler(
             kb, policy=cfg.policy, t_in=cfg.t_in, t_out=cfg.t_out, K=cfg.K,
             n_buckets=cfg.n_buckets, refine=cfg.refine,
             prewarm=(cfg.prewarm_mode == "hermes"),
             mc_walkers=cfg.mc_walkers, seed=cfg.seed,
-            mode=cfg.refresh_mode, walker=cfg.walker)
+            mode=cfg.refresh_mode, walker=cfg.walker,
+            warmup_table=self.warmup_table)
         self.let = HermesLet(kv_capacity=cfg.kv_capacity,
                              lora_capacity=cfg.lora_capacity,
                              docker_capacity=cfg.docker_capacity,
-                             dnn_capacity=cfg.dnn_capacity)
+                             dnn_capacity=cfg.dnn_capacity,
+                             warmup_table=self.warmup_table,
+                             keep_alive_s=cfg.keep_alive_s)
         self.slots = {"llm": cfg.n_llm_slots, "docker": cfg.n_docker_slots,
                       "dnn": cfg.n_dnn_slots}
         self.running: Dict[str, List[SimTask]] = {k: [] for k in self.slots}
@@ -140,7 +172,11 @@ class ClusterSim:
         self.policy_time = 0.0
         self.policy_calls = 0
         self._ranks: Dict[str, float] = {}
-        self._prewarm_fired: Set[Tuple[str, str, str]] = set()
+        self._prewarm_fired: Dict[Tuple[str, str, str], float] = {}
+        # backend cold/warm consequences (surfaced in SimResult.prewarm_stats)
+        self.coldstart_stall_s = 0.0   # task wall time spent waiting on loads
+        self.coldstart_events = 0      # task starts that hit a cold backend
+        self.prewarm_pushed = 0        # prewarm signals scheduled
 
     # ----------------------------------------------------------- event glue
     def _push(self, t: float, kind: str, payload=None):
@@ -192,6 +228,11 @@ class ClusterSim:
             self._reschedule()
 
         self.let.finalize(self.now)
+        stall_stats = {
+            "coldstart_stall_s": self.coldstart_stall_s,
+            "coldstart_events": float(self.coldstart_events),
+            "prewarm_pushed": float(self.prewarm_pushed),
+        }
         return SimResult(
             acts={a: s.finished - s.inst.arrival
                   for a, s in self.apps.items() if s.finished is not None},
@@ -203,7 +244,8 @@ class ClusterSim:
             cache_stats=self.let.stats(),
             policy_time_s=self.policy_time,
             policy_calls=self.policy_calls,
-            makespan=self.now)
+            makespan=self.now,
+            stall_stats=stall_stats)
 
     # --------------------------------------------------------------- events
     def _on_arrival(self, inst: AppInstance, touched: List[str],
@@ -218,7 +260,8 @@ class ClusterSim:
         base_name = inst.app_name.split("#")[0]
         if base_name in SUITE:
             sim.true_remaining += coldstart_overhead(SUITE[base_name],
-                                                     inst.trajectory)
+                                                     inst.trajectory,
+                                                     self.warmup_table)
         self.apps[inst.app_id] = sim
         self.sched.on_arrival(inst.app_id, inst.app_name, self.now,
                               tenant=inst.tenant, deadline=inst.deadline)
@@ -263,18 +306,43 @@ class ClusterSim:
         self._plan_prewarms(sim.inst.app_id)
 
     def _plan_prewarms(self, app_id: str):
-        if self.cfg.prewarm_mode != "hermes":
+        """Legacy per-app one-hop planning — only for the non-fused refresh
+        modes; in fused mode the batched PrewarmPlan from the refresh
+        dispatch covers every downstream unit (``_apply_prewarm_plan``)."""
+        if self.cfg.prewarm_mode != "hermes" or self.sched.prewarm_batched:
             return
         sigs = self.sched.prewarm_signals(
             app_id, self.now, self.let.warmup_time,
             lambda k: self.let.is_present(self._qualify(k, app_id)))
+        self._push_signals(sigs)
+
+    def _apply_prewarm_plan(self):
+        """Consume the batched PrewarmPlan computed inside the last fused
+        refresh dispatch (one plan per tick, all apps at once)."""
+        plan = self.sched.take_prewarm_plan()
+        if plan is not None:
+            self._push_signals(plan.signals())
+
+    def _push_signals(self, sigs):
+        # dedupe per (app, unit, key) so each tick's recomputed triggers
+        # don't flood the event heap, with two escape hatches: the tag
+        # expires one keep-alive after the recorded fire time (a key evicted
+        # after long idle can be re-prewarmed on unit revisits), and a
+        # CORRECTED earlier trigger always goes through (fresher estimates
+        # pull the fire time in; the stale later event becomes a join no-op)
+        keep_alive = self.let.caches["kv"].spec_evict_idle_s
         for s in sigs:
             key = self._qualify(s.resource_key, s.app_id)
             tag = (s.app_id, s.unit, key)
-            if tag in self._prewarm_fired:
+            fire = max(s.fire_at, self.now)
+            last = self._prewarm_fired.get(tag)
+            if last is not None and fire >= last - 1e-9 \
+                    and self.now <= last + keep_alive:
                 continue
-            self._prewarm_fired.add(tag)
-            self._push(max(s.fire_at, self.now), "prewarm", key)
+            self._prewarm_fired[tag] = fire if last is None \
+                else min(last, fire)
+            self.prewarm_pushed += 1
+            self._push(fire, "prewarm", key)
 
     def _credit(self, task: SimTask):
         if not task.running:
@@ -334,6 +402,8 @@ class ClusterSim:
             self._rebuild_waiting()
         self.policy_time += _time.perf_counter() - t0
         self.policy_calls += 1
+        if self.sched.prewarm_batched:
+            self._apply_prewarm_plan()
 
     # ------------------------------------------------------------ scheduling
     def _task_rank(self, task: SimTask) -> Tuple[float, float, int]:
@@ -357,6 +427,9 @@ class ClusterSim:
         for key in task.keys:
             hit, key_ready = self.let.access(key, self.now)
             ready = max(ready, key_ready)
+        if ready > self.now:           # cold (or still-loading) backend stall
+            self.coldstart_stall_s += ready - self.now
+            self.coldstart_events += 1
         task.running = True
         task.ready_at = ready
         task.last_credit = self.now
