@@ -7,7 +7,11 @@ same workload through the cluster simulator with cold-start latencies
 enabled under three backend policies:
 
   lru      reactive baseline: load on demand, evict least-recently-used
-  epwq     CachedAttention-style: prefetch only for queued requests
+  epwq     CachedAttention-style: prefetch only for queued requests; the
+           non-smoke run sweeps its prefetch window (how many upcoming
+           trajectory units get prefetched: ``epwq_w2``/``epwq_w4`` arms)
+           to probe whether the flat default window is the reason it barely
+           helps at this scale
   hermes   the batched device-resident PrewarmPlan riding the fused refresh
            dispatch (per-(app, backend-class) arrival-quantile triggers)
 
@@ -34,12 +38,18 @@ from repro.serving.simulator import ClusterSim, SimConfig  # noqa: E402
 JSON_PATH = "BENCH_prewarm.json"
 
 ARMS = ("lru", "epwq", "hermes")
+# prefetch-window sweep for the flat epwq baseline (non-smoke runs): w=1 is
+# the plain `epwq` arm (current-unit-only, CachedAttention-style)
+EPWQ_WINDOWS = (2, 4)
 
 
-def run_arm(knowledge, insts, arm: str, *, seed: int, K: float = 0.5):
-    cfg = SimConfig(policy="gittins", seed=seed, prewarm_mode=arm, K=K,
+def run_arm(knowledge, insts, arm: str, *, seed: int, K: float = 0.5,
+            epwq_window: int = 1):
+    mode = "epwq" if arm.startswith("epwq") else arm
+    cfg = SimConfig(policy="gittins", seed=seed, prewarm_mode=mode, K=K,
                     n_llm_slots=8, mc_walkers=128,
-                    kv_capacity=8, lora_capacity=4, dnn_capacity=2)
+                    kv_capacity=8, lora_capacity=4, dnn_capacity=2,
+                    epwq_window=epwq_window)
     t0 = time.perf_counter()
     res = ClusterSim(knowledge, cfg).run(list(insts))
     return res, time.perf_counter() - t0
@@ -52,16 +62,20 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
         n, win = 10, 120.0
     knowledge = kb()
     insts = workload(n, win, seed=seed)
+    arms = [(a, 1) for a in ARMS]
+    if not smoke:   # 3 window values total: epwq (w=1) + the sweep arms
+        arms[2:2] = [(f"epwq_w{w}", w) for w in EPWQ_WINDOWS]
     records = []
     base = None
-    for arm in ARMS:
-        res, wall = run_arm(knowledge, insts, arm, seed=seed)
+    for arm, w in arms:
+        res, wall = run_arm(knowledge, insts, arm, seed=seed, epwq_window=w)
         if arm == "lru":
             base = res
         p = res.prewarm_stats
         red = 100 * (1 - res.mean_act() / base.mean_act())
         row = {
             "arm": arm, "apps": n, "mean_act_s": res.mean_act(),
+            "epwq_window": w if arm.startswith("epwq") else None,
             "p95_act_s": res.p95_act(),
             "act_reduction_vs_lru_pct": red,
             "coldstart_stall_s": p["coldstart_stall_s"],

@@ -2,4 +2,5 @@
 queue management, and PDGraph-driven backend prewarming (Hermes)."""
 from repro.core.pdgraph import PDGraph, UnitNode, BackendSpec  # noqa: F401
 from repro.core.gittins import gittins_rank_hist, gittins_rank_samples  # noqa: F401
-from repro.core.refresh import QueueState, refresh_ranks_fused  # noqa: F401
+from repro.core.refresh import (QueueState, refresh_ranks_delta,  # noqa: F401
+                                refresh_ranks_fused)

@@ -23,6 +23,13 @@ import numpy as np
 from repro.core.gittins import (gittins_rank_hist_np, to_histogram,
                                 to_histogram_batch)
 
+# The fused pipeline computes the composite policies' triage quantiles on
+# device at THESE fixed probabilities (repro.core.refresh._triage_stats);
+# a policy instance re-tuned away from them loses fused eligibility and
+# falls back to the host-quantile path (see Policy.fused_capable).
+SUP_Q = 0.9           # worst-case demand quantile (eq. 2 "sup X")
+HOPELESS_Q = 0.1      # optimistic quantile for the hopeless-class gate
+
 
 @dataclass
 class AppView:
@@ -31,7 +38,10 @@ class AppView:
     In the scheduler's fused refresh mode ``total_samples`` is None — the
     sample matrix never reaches the host; the view instead carries the
     device-computed histogram rows (``hist``) and, until invalidated by
-    further progress, the device-computed Gittins rank (``fused_rank``)."""
+    further progress, the device-computed Gittins rank (``fused_rank``).
+    For the composite (deadline) policies it additionally carries the
+    device-computed triage scalars: the SUP_Q/HOPELESS_Q quantiles and the
+    mean of the TOTAL demand distribution."""
     app_id: str
     tenant: str
     arrival: float
@@ -41,6 +51,9 @@ class AppView:
     oracle_remaining: Optional[float] = None
     hist: Optional[tuple] = None         # cached (probs, edges)
     fused_rank: Optional[float] = None   # device-computed rank (fused mode)
+    demand_sup: Optional[float] = None   # device P_{SUP_Q}(total demand)
+    demand_opt: Optional[float] = None   # device P_{HOPELESS_Q}(total demand)
+    demand_mean: Optional[float] = None  # device mean(total demand)
 
 
 class Policy:
@@ -51,6 +64,10 @@ class Policy:
     # other apps, shared counters, or wall time) — hosts may then re-rank
     # just the apps an event touched between full bucket-tick refreshes
     independent_ranks = True
+    # True when this policy can consume the fused dispatch's device-computed
+    # outputs (ranks / hists / triage scalars) instead of raw sample arrays;
+    # the scheduler only engages the fused pipeline for such policies
+    fused_capable = False
 
     def ranks(self, apps: List[AppView], now: float) -> np.ndarray:
         raise NotImplementedError
@@ -58,6 +75,7 @@ class Policy:
 
 class GittinsPolicy(Policy):
     name = "gittins"
+    fused_capable = True
 
     def __init__(self, n_buckets: int = 10, vectorized: bool = True):
         self.n_buckets = n_buckets
@@ -144,9 +162,18 @@ class EDFPolicy(Policy):
 
 def _demand_stats(apps: List[AppView], sup_q: float, hopeless_q: float
                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """(P_sup, P_hopeless, mean) of every app's demand samples — one
-    vectorized pass when the queue's sample arrays share a length (the
-    batched-refresh common case), per-app otherwise."""
+    """(P_sup, P_hopeless, mean) of every app's demand samples — read off
+    the fused dispatch's device-computed view scalars when present (no
+    per-app host quantile pulls on the tick path), one vectorized pass when
+    the queue's sample arrays share a length (the batched-refresh common
+    case), per-app otherwise."""
+    if all(a.total_samples is None for a in apps):
+        # fused refresh: the sample matrix never reached the host; the
+        # dispatch computed these at (SUP_Q, HOPELESS_Q) — the scheduler
+        # guarantees the policy's quantiles match before engaging fused mode
+        return (np.asarray([a.demand_sup for a in apps], np.float64),
+                np.asarray([a.demand_opt for a in apps], np.float64),
+                np.asarray([a.demand_mean for a in apps], np.float64))
     lens = {len(a.total_samples) for a in apps}
     if len(apps) > 1 and len(lens) == 1:
         M = np.stack([a.total_samples for a in apps])
@@ -172,10 +199,16 @@ class LSTFPolicy(Policy):
     name = "lstf"
     needs_deadline = True
     independent_ranks = False    # slack is a function of `now`
-    sup_q = 0.9
-    hopeless_q = 0.1
+    sup_q = SUP_Q
+    hopeless_q = HOPELESS_Q
     slack_bucket_s = 20.0
     hopeless_penalty = 1e9
+
+    @property
+    def fused_capable(self) -> bool:
+        # the device triage runs at the module quantiles; a re-tuned
+        # instance must keep pulling host quantiles from raw samples
+        return (self.sup_q, self.hopeless_q) == (SUP_Q, HOPELESS_Q)
 
     def ranks(self, apps, now):
         """Triage: (1) hopeless apps (even the optimistic-quantile demand
@@ -215,13 +248,17 @@ class HermesDDLPolicy(Policy):
     name = "hermes_ddl"
     needs_deadline = True
     independent_ranks = False    # triage class is a function of `now`
-    sup_q = 0.9
-    hopeless_q = 0.1
+    sup_q = SUP_Q
+    hopeless_q = HOPELESS_Q
     risk_window_s = 30.0
     cls_span = 1e6
 
     def __init__(self, n_buckets: int = 10):
         self.gittins = GittinsPolicy(n_buckets)
+
+    @property
+    def fused_capable(self) -> bool:
+        return (self.sup_q, self.hopeless_q) == (SUP_Q, HOPELESS_Q)
 
     @property
     def vectorized(self) -> bool:

@@ -180,6 +180,21 @@ class PrewarmPlan:
                                 p_s=float(self.p_reach[i]))
 
 
+def plan_from_store(store, slots: np.ndarray, now: float,
+                    table: PrewarmTable) -> PrewarmPlan:
+    """Build one tick's plan from the slot store's persisted arrival rows.
+
+    ``store`` is a :class:`repro.core.refresh.QueueState`; ``slots`` names
+    the rows the last dispatch re-walked (their ``trig``/``reach`` mirrors
+    are fresh).  This is the delta-tick planner entry: the fused dispatch
+    scatters trigger rows in place and the host reads exactly the walked
+    rows back — no fresh (A, B) reduction, no per-application loop."""
+    slots = np.asarray(slots, np.int64)
+    app_ids = [store.ids[int(s)] for s in slots]
+    return plan_from_triggers(app_ids, store.trig[slots],
+                              store.reach[slots], now, table)
+
+
 def plan_from_triggers(app_ids: Sequence[str], trigger: np.ndarray,
                        p_reach: np.ndarray, now: float,
                        table: PrewarmTable) -> PrewarmPlan:

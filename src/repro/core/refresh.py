@@ -2,15 +2,13 @@
 
 One jitted dispatch chains the whole bucket-tick estimate refresh —
 
-    MC walk  →  row-wise bucketize  →  Gittins rank
+    MC walk  →  row-wise bucketize  →  Gittins rank  (→ triage quantiles,
+                                                      → prewarm triggers)
 
-— over packed PDGraph tables and incrementally-maintained queue-state
-buffers.  Only the ``(A,)`` rank vector (plus the tiny ``(A, n_buckets)``
-histogram rows, cached for rank-only re-ranks between ticks) ever crosses
-the host boundary; the ``(A, n_walkers)`` sample matrix lives and dies on
-device.  This replaces the composed three-hop path (jitted walk → host
-``np.asarray`` → numpy ``to_histogram_batch`` → second jitted rank
-dispatch) that PR 1 left as the scale ceiling.
+— over packed PDGraph tables and a **persistent slot store** of per-app
+rows.  Only small per-app results (ranks, histogram rows, triage scalars,
+prewarm triggers) ever cross the host boundary; the ``(A, n_walkers)``
+sample matrix lives and dies on device.
 
 Two walker backends:
 
@@ -23,15 +21,30 @@ Two walker backends:
   threefry bottleneck and adds phase compaction; distributionally
   equivalent (KS-tested), and the default for fused mode.
 
-``QueueState`` owns the queue-axis buffers (graph/start/executed/attained/
-key/refresh ids + refinement override tables).  ``HermesScheduler`` updates
-them in place as events arrive — O(1) per event, swap-with-last removal —
-instead of rebuilding Python lists into fresh arrays every tick.  Buffers
-are capacity-grown in powers of two and dispatched at ``_pow2_ceil(size)``
-rows so jit caches stay small while open-arrival queues grow and shrink.
+``QueueState`` is the slot store: a fixed-capacity power-of-two arena
+(growable by doubling) where every live application owns ONE slot for its
+whole lifetime.  ``admit`` pops a slot off the host free-list, ``retire``
+returns it (retired rows become masked holes — no swap compaction, so slot
+ids are stable and device-resident result rows stay aligned), and
+``mark_dirty`` records the slots whose PDGraph position changed since the
+last walk.  Host-side *input* rows (graph/start/executed/attained/keys/
+overrides/deadline/queue-stretch) are updated in place, O(1) per scheduler
+event; *result* rows are written only by the refresh dispatches — the
+``(cap, n_buckets)`` histogram rows live ON DEVICE (``d_probs``/``d_edges``)
+so ranks can be recomputed in place without re-walking, while the triage
+quantiles and prewarm trigger rows keep small host mirrors for the policies
+and the planner.
+
+**Delta refresh** (``refresh_ranks_delta``) is the scale path: each tick
+gathers only the dirty slots, walks just those rows, scatters their fresh
+histogram rows back into the device arena, and re-ranks EVERY occupied slot
+in place from the persisted histograms at the current attained service —
+one dispatch, sized by the dirty set, not the queue.  The scheduler falls
+back to a full re-walk when the dirty fraction crosses its threshold.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -41,13 +54,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gittins import (N_BUCKETS, gittins_rank_core,
-                                to_histogram_rows_jnp)
+                                gittins_rank_hist, to_histogram_rows_jnp)
 from repro.core.pdgraph import (ARRIVAL_NEVER, PackedKB, _mc_walk_batch,
                                 _pow2_ceil)
+from repro.core.policies import HOPELESS_Q, SUP_Q
 from repro.kernels.pdgraph_walk.ops import pdgraph_walk, walker_streams
 
 
-def _prewarm_triggers(arr, graph_idx, unit_class, class_warmup, K, n_buckets):
+def _prewarm_triggers(arr, graph_idx, unit_class, class_warmup, K, n_buckets,
+                      stretch):
     """Per-walker first-arrival times -> per-(app, backend-class) prewarm
     triggers, entirely on device (§3.4 generalized to all downstream units).
 
@@ -57,13 +72,16 @@ def _prewarm_triggers(arr, graph_idx, unit_class, class_warmup, K, n_buckets):
     class_warmup:(B,) float32 warm-up seconds per class
     K:           effectiveness knob (traced scalar — one compile serves the
                  whole Fig. 14 K sweep)
+    stretch:     (A,) queueing-delay correction: observed wall seconds per
+                 service second (EWMA from the host; 1.0 = assume the app
+                 executes continuously, the §3.4 default)
 
     Per (app, unit): p_reach = P[walker ever enters u]; where p_reach >= K
     the trigger quantile is Quantile_{first-arrival | reached}(1 - K/p_reach)
     from an n_buckets arrival histogram (linear interpolation inside the
-    crossing bucket).  Per (app, class): the earliest (quantile - warm-up)
-    over contributing units.  Returns ``(trigger (A, B), reach (A, B))``
-    with ARRIVAL_NEVER marking "do not prewarm"."""
+    crossing bucket).  Per (app, class): the earliest (stretch * quantile -
+    warm-up) over contributing units.  Returns ``(trigger (A, B), reach
+    (A, B))`` with ARRIVAL_NEVER marking "do not prewarm"."""
     A, W, U = arr.shape
     B = class_warmup.shape[0]
     reached = arr < ARRIVAL_NEVER / 2                       # (A, W, U)
@@ -100,6 +118,11 @@ def _prewarm_triggers(arr, graph_idx, unit_class, class_warmup, K, n_buckets):
     frac = jnp.clip((q - cdf_prev) / jnp.maximum(p_k, 1e-9), 0.0, 1.0)
     width = span / n_buckets
     qtile = lo + (k.astype(jnp.float32) + frac) * width     # (A, U)
+    # queueing-delay correction: arrival quantiles are in cumulative-service
+    # seconds; the observed wall/service stretch converts them to wall time
+    # (stretch == 1.0 multiplies bit-exactly — the correction-off path stays
+    # bit-identical to the uncorrected pipeline)
+    qtile = qtile * stretch[:, None]
 
     # scatter-min into backend classes:  trigger(a,b) = min over units of
     # (quantile - warm-up) where unit u needs class b and passes the gate
@@ -115,28 +138,13 @@ def _prewarm_triggers(arr, graph_idx, unit_class, class_warmup, K, n_buckets):
     return trigger, reach
 
 
-@partial(jax.jit, static_argnames=("n_walkers", "max_steps", "n_buckets",
-                                   "walker", "impl", "with_overrides",
-                                   "compact_after", "compact_shrink",
-                                   "with_prewarm"))
-def _fused_pipeline(samples, counts, cum_trans,        # KB: (G,U,S),(G,U),(G,U,U+1)
-                    graph_idx, start, executed, attained,   # (A,) queue state
-                    key_ids, refresh_ids,                   # (A,) RNG stream ids
-                    base_key, seed,                         # threefry / counter seeds
-                    ov_samples, ov_counts,                  # (A,U,So), (A,U)
-                    valid,                                  # (A,) bool queue rows
-                    unit_class, class_warmup, prewarm_k,    # prewarm tables + K
-                    *, n_walkers: int, max_steps: int, n_buckets: int,
-                    walker: str, impl: Optional[str], with_overrides: bool,
-                    compact_after: int, compact_shrink: int,
-                    with_prewarm: bool):
-    """walk → bucketize → rank (→ prewarm triggers), one dispatch.  Returns
-    (ranks, probs, edges, spill, trigger, reach) — all shaped (A, ...), A
-    padded to a power of two by the caller; trigger/reach are ``None`` when
-    ``with_prewarm`` is off.  With it on, the SAME walk that feeds the ranks
-    also emits per-unit first-arrival times, reduced on device to
-    per-(app, backend-class) trigger quantiles — the host never sees the
-    (A, W, U) arrival tensor."""
+def _walk_total(samples, counts, cum_trans, graph_idx, start, executed,
+                attained, key_ids, refresh_ids, base_key, seed,
+                ov_samples, ov_counts, valid, *,
+                n_walkers, max_steps, walker, impl, with_overrides,
+                compact_after, compact_shrink, with_prewarm):
+    """The shared walk section of both pipelines: (A,) queue rows -> TOTAL
+    demand samples ``(total (A, W), arr (A, W, U) | None, spill)``."""
     arr = None
     if walker == "threefry":
         # the composed path's walker verbatim — ONE implementation carries
@@ -161,22 +169,124 @@ def _fused_pipeline(samples, counts, cum_trans,        # KB: (G,U,S),(G,U),(G,U,
     else:
         raise ValueError(f"unknown walker {walker!r}")
     total = attained[:, None] + jnp.maximum(rem, 0.0)
+    return total, arr, spill
+
+
+def _triage_stats(total):
+    """On-device §3.3 triage scalars for the composite policies: the same
+    (P_sup, P_hopeless, mean) the host ``_demand_stats`` pulls from raw
+    samples — computed here before the sample matrix dies on device."""
+    sup = jnp.quantile(total, SUP_Q, axis=1)
+    opt = jnp.quantile(total, HOPELESS_Q, axis=1)
+    return sup, opt, total.mean(axis=1)
+
+
+@partial(jax.jit, static_argnames=("n_walkers", "max_steps", "n_buckets",
+                                   "walker", "impl", "with_overrides",
+                                   "compact_after", "compact_shrink",
+                                   "with_prewarm", "with_triage"))
+def _fused_pipeline(samples, counts, cum_trans,        # KB: (G,U,S),(G,U),(G,U,U+1)
+                    graph_idx, start, executed, attained,   # (A,) queue state
+                    key_ids, refresh_ids,                   # (A,) RNG stream ids
+                    base_key, seed,                         # threefry / counter seeds
+                    ov_samples, ov_counts,                  # (A,U,So), (A,U)
+                    valid,                                  # (A,) bool queue rows
+                    stretch,                                # (A,) wall/service EWMA
+                    unit_class, class_warmup, prewarm_k,    # prewarm tables + K
+                    *, n_walkers: int, max_steps: int, n_buckets: int,
+                    walker: str, impl: Optional[str], with_overrides: bool,
+                    compact_after: int, compact_shrink: int,
+                    with_prewarm: bool, with_triage: bool):
+    """walk → bucketize → rank (→ triage quantiles → prewarm triggers), one
+    dispatch.  Returns (ranks, probs, edges, spill, trigger, reach, sup,
+    opt, mean) — all shaped (A, ...), A padded to a power of two by the
+    caller; trigger/reach are ``None`` without ``with_prewarm``, the triage
+    scalars ``None`` without ``with_triage``.  The (A, W) sample matrix and
+    the (A, W, U) arrival tensor never reach the host."""
+    total, arr, spill = _walk_total(
+        samples, counts, cum_trans, graph_idx, start, executed, attained,
+        key_ids, refresh_ids, base_key, seed, ov_samples, ov_counts, valid,
+        n_walkers=n_walkers, max_steps=max_steps, walker=walker, impl=impl,
+        with_overrides=with_overrides, compact_after=compact_after,
+        compact_shrink=compact_shrink, with_prewarm=with_prewarm)
     probs, edges = to_histogram_rows_jnp(total, n_buckets)
     ranks = gittins_rank_core(probs, edges, attained)
+    sup = opt = mean = None
+    if with_triage:
+        sup, opt, mean = _triage_stats(total)
     trigger = reach = None
     if with_prewarm:
         trigger, reach = _prewarm_triggers(arr, graph_idx, unit_class,
-                                           class_warmup, prewarm_k, n_buckets)
-    return ranks, probs, edges, spill, trigger, reach
+                                           class_warmup, prewarm_k,
+                                           n_buckets, stretch)
+    return ranks, probs, edges, spill, trigger, reach, sup, opt, mean
+
+
+@partial(jax.jit, static_argnames=("n_walkers", "max_steps", "n_buckets",
+                                   "walker", "impl", "with_overrides",
+                                   "compact_after", "compact_shrink",
+                                   "with_prewarm", "with_triage"))
+def _delta_pipeline(samples, counts, cum_trans,        # packed KB tables
+                    graph_idx, start, executed, attained,   # (D,) dirty rows
+                    key_ids, refresh_ids, base_key, seed,
+                    ov_samples, ov_counts, valid, stretch,  # (D, ...) rows
+                    slot_idx,                               # (D,) arena slots
+                    d_probs, d_edges,                       # (cap, nb) arena
+                    attained_all,                           # (cap,)
+                    unit_class, class_warmup, prewarm_k,
+                    *, n_walkers: int, max_steps: int, n_buckets: int,
+                    walker: str, impl: Optional[str], with_overrides: bool,
+                    compact_after: int, compact_shrink: int,
+                    with_prewarm: bool, with_triage: bool):
+    """The delta tick: walk ONLY the gathered dirty rows, scatter their
+    fresh histogram rows back into the persistent device arena, and re-rank
+    every slot in place from the persisted histograms at the current
+    attained service.  ``slot_idx`` padding rows carry an out-of-bounds
+    index and are dropped by the scatter.  Returns ``(d_probs', d_edges',
+    ranks (cap,), spill, sup, opt, mean, trigger, reach)`` — the last five
+    sized by the dirty set, not the arena."""
+    total, arr, spill = _walk_total(
+        samples, counts, cum_trans, graph_idx, start, executed, attained,
+        key_ids, refresh_ids, base_key, seed, ov_samples, ov_counts, valid,
+        n_walkers=n_walkers, max_steps=max_steps, walker=walker, impl=impl,
+        with_overrides=with_overrides, compact_after=compact_after,
+        compact_shrink=compact_shrink, with_prewarm=with_prewarm)
+    probs, edges = to_histogram_rows_jnp(total, n_buckets)
+    d_probs = d_probs.at[slot_idx].set(probs, mode="drop")
+    d_edges = d_edges.at[slot_idx].set(edges, mode="drop")
+    # rank-in-place: per-row math over the whole arena — bit-identical per
+    # row to ranking the (D, nb) rows alone, so delta == full re-walk for
+    # the dirty set; holes produce garbage ranks the host never reads
+    ranks = gittins_rank_core(d_probs, d_edges, attained_all)
+    sup = opt = mean = None
+    if with_triage:
+        sup, opt, mean = _triage_stats(total)
+    trigger = reach = None
+    if with_prewarm:
+        trigger, reach = _prewarm_triggers(arr, graph_idx, unit_class,
+                                           class_warmup, prewarm_k,
+                                           n_buckets, stretch)
+    return d_probs, d_edges, ranks, spill, sup, opt, mean, trigger, reach
 
 
 class QueueState:
-    """Queue-axis device-feed buffers, updated in place per scheduler event.
+    """Persistent per-application slot store (the fused-mode data backbone).
 
-    Slots are dense [0, size); removal swaps the last slot in (O(1)), so the
-    first ``_pow2_ceil(size)`` rows are always a valid dispatch view.  Rows
-    beyond ``size`` keep stale-but-in-bounds values (their walk output is
-    discarded), so padding costs no masking."""
+    A fixed-capacity power-of-two arena of per-app rows; capacity grows by
+    doubling and every live application keeps ONE slot id for its whole
+    lifetime (``admit`` pops the host free-list, ``retire`` pushes back —
+    holes are masked, never compacted away, so device-resident result rows
+    stay slot-aligned across membership churn).  Host input rows are
+    mutated in place O(1) per scheduler event; ``mark_dirty`` accumulates
+    the slots whose PDGraph position changed (admission, unit transition,
+    refinement override) for the next delta walk.  Result rows:
+
+    * ``d_probs`` / ``d_edges`` — (cap, n_buckets) histogram rows, DEVICE
+      resident; written only by dispatch scatters, read by rank-in-place.
+    * ``sup`` / ``opt`` / ``mean`` — (cap,) triage scalars, host mirrors for
+      the composite policies (written from the dirty rows each dispatch).
+    * ``trig`` / ``reach`` — (cap, B) prewarm rows, host mirrors the
+      batched planner reads (`plan_from_store`)."""
 
     def __init__(self, packed: PackedKB, capacity: int = 64):
         self.n_units = packed.n_units
@@ -188,24 +298,63 @@ class QueueState:
         self.attained = np.zeros(cap, np.float32)
         self.key_id = np.zeros(cap, np.int32)
         self.refresh_id = np.zeros(cap, np.int32)
+        self.deadline = np.full(cap, np.inf, np.float32)
+        self.stretch = np.ones(cap, np.float32)
         self.ov_samples = np.zeros((cap, self.n_units, 1), np.float32)
         self.ov_counts = np.zeros((cap, self.n_units), np.int32)
+        self.ids: List[Optional[str]] = [None] * cap
         self.slot: Dict[str, int] = {}
-        self.ids: List[str] = []
+        self._occ = np.zeros(cap, bool)
+        self._free: List[int] = list(range(cap - 1, -1, -1))
+        self.live = 0
+        self.dirty: set = set()
         self.override_apps = 0       # apps with >= 1 active override row
         self.kb_token = None         # packed-KB version tag (rebuild guard)
+        # result rows (allocated lazily, once n_buckets / n_classes known)
+        self._nb: Optional[int] = None
+        self.d_probs = None          # (cap, nb) jnp — device resident
+        self.d_edges = None
+        self.sup = np.zeros(cap, np.float32)
+        self.opt = np.zeros(cap, np.float32)
+        self.mean = np.zeros(cap, np.float32)
+        self.trig: Optional[np.ndarray] = None    # (cap, B)
+        self.reach: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
-        return len(self.ids)
+        return self.live
+
+    @property
+    def capacity(self) -> int:
+        return self.graph_idx.shape[0]
+
+    def occupied(self) -> np.ndarray:
+        """Slot ids of all live applications, ascending."""
+        return np.nonzero(self._occ)[0]
 
     # ------------------------------------------------------------- capacity
+    _ROWS = ("graph_idx", "start", "executed", "attained", "key_id",
+             "refresh_id", "deadline", "stretch", "ov_samples", "ov_counts",
+             "sup", "opt", "mean")
+
     def _grow(self) -> None:
-        for name in ("graph_idx", "start", "executed", "attained",
-                     "key_id", "refresh_id", "ov_samples", "ov_counts"):
+        old = self.capacity
+        for name in self._ROWS + (("trig", "reach")
+                                  if self.trig is not None else ()):
             a = getattr(self, name)
-            b = np.zeros((a.shape[0] * 2,) + a.shape[1:], a.dtype)
-            b[:a.shape[0]] = a
+            b = np.zeros((old * 2,) + a.shape[1:], a.dtype)
+            b[:old] = a
             setattr(self, name, b)
+        self.deadline[old:] = np.inf
+        self.stretch[old:] = 1.0
+        if self.trig is not None:
+            self.trig[old:] = ARRIVAL_NEVER
+        self.ids.extend([None] * old)
+        self._occ = np.concatenate([self._occ, np.zeros(old, bool)])
+        self._free.extend(range(old * 2 - 1, old - 1, -1))
+        if self.d_probs is not None:
+            pad = jnp.zeros((old, self._nb), jnp.float32)
+            self.d_probs = jnp.concatenate([self.d_probs, pad])
+            self.d_edges = jnp.concatenate([self.d_edges, pad])
 
     def _grow_override_width(self, width: int) -> None:
         width = min(_pow2_ceil(width), self.max_samples)
@@ -215,47 +364,85 @@ class QueueState:
         b[:, :, :self.ov_samples.shape[2]] = self.ov_samples
         self.ov_samples = b
 
-    # --------------------------------------------------------------- events
-    def add(self, app_id: str, graph_idx: int, start: int, key_id: int,
-            refresh_id: int = 0) -> int:
-        if len(self.ids) == self.graph_idx.shape[0]:
+    def ensure_result_rows(self, n_buckets: int,
+                           n_classes: Optional[int] = None) -> None:
+        """Allocate (or re-shape) the persisted result rows."""
+        cap = self.capacity
+        if self._nb != n_buckets or self.d_probs is None:
+            self._nb = n_buckets
+            self.d_probs = jnp.zeros((cap, n_buckets), jnp.float32)
+            self.d_edges = jnp.zeros((cap, n_buckets), jnp.float32)
+        if n_classes is not None and (
+                self.trig is None or self.trig.shape[1] != n_classes):
+            self.trig = np.full((cap, n_classes), ARRIVAL_NEVER, np.float32)
+            self.reach = np.zeros((cap, n_classes), np.float32)
+
+    # ------------------------------------------------------------ lifecycle
+    def admit(self, app_id: str, graph_idx: int, start: int, key_id: int,
+              refresh_id: int = 0, deadline: Optional[float] = None,
+              stretch: float = 1.0) -> int:
+        """Take a free slot for a new application (grow by doubling when the
+        arena is full).  The slot is marked dirty — it must be walked before
+        its first rank is consumed (its result rows are a previous tenant's
+        or zeros)."""
+        if not self._free:
             self._grow()
-        i = len(self.ids)
-        self.ids.append(app_id)
+        i = self._free.pop()
+        self.ids[i] = app_id
         self.slot[app_id] = i
+        self._occ[i] = True
+        self.live += 1
         self.graph_idx[i] = graph_idx
         self.start[i] = start
         self.executed[i] = 0.0
         self.attained[i] = 0.0
         self.key_id[i] = key_id
         self.refresh_id[i] = refresh_id
+        self.deadline[i] = np.inf if deadline is None else deadline
+        self.stretch[i] = stretch
         self.ov_counts[i] = 0
+        self.dirty.add(i)
         return i
 
-    def remove(self, app_id: str) -> None:
+    def retire(self, app_id: str) -> None:
+        """Release an application's slot back to the free-list.  The row's
+        values stay in place (stale-but-in-bounds — dispatches mask holes),
+        ready to be overwritten by the next admit."""
         i = self.slot.pop(app_id, None)
         if i is None:
             return
         if self.ov_counts[i].any():
             self.override_apps -= 1
-        last = len(self.ids) - 1
-        if i != last:
-            moved = self.ids[last]
-            self.ids[i] = moved
-            self.slot[moved] = i
-            for a in (self.graph_idx, self.start, self.executed,
-                      self.attained, self.key_id, self.refresh_id,
-                      self.ov_samples, self.ov_counts):
-                a[i] = a[last]
-        self.ids.pop()
-        self.ov_counts[last] = 0
+        self.ids[i] = None
+        self._occ[i] = False
+        self.live -= 1
+        self.ov_counts[i] = 0
+        self.dirty.discard(i)
+        self._free.append(i)
 
+    def mark_dirty(self, app_id: str) -> None:
+        i = self.slot.get(app_id)
+        if i is not None:
+            self.dirty.add(i)
+
+    def take_dirty(self) -> np.ndarray:
+        """Drain the dirty set (ascending slot ids).  The caller decides
+        whether to walk exactly these or fall back to the full occupied
+        set when the dirty fraction makes gather/scatter a bad trade."""
+        d = np.asarray(sorted(self.dirty), np.int64)
+        self.dirty.clear()
+        return d
+
+    # --------------------------------------------------------------- events
     def set_unit(self, app_id: str, unit_idx: int) -> None:
         i = self.slot[app_id]
         self.start[i] = unit_idx
         self.executed[i] = 0.0
+        self.dirty.add(i)
 
     def add_progress(self, app_id: str, delta: float) -> None:
+        # progress does NOT dirty the slot: the TOTAL-demand histogram stays
+        # valid and rank-in-place re-ranks at the new attained each tick
         i = self.slot[app_id]
         self.executed[i] += delta
         self.attained[i] += delta
@@ -272,42 +459,50 @@ class QueueState:
             self.override_apps += 1
         self.ov_samples[i, unit_idx, :len(arr)] = arr
         self.ov_counts[i, unit_idx] = len(arr)
+        self.dirty.add(i)
+
+    def get_deadline(self, slot: int) -> Optional[float]:
+        """Slot's deadline row (None when the app has no deadline) — the
+        store is the view-refresh source for per-slot scalars in delta
+        mode."""
+        d = self.deadline[slot]
+        return None if np.isinf(d) else float(d)
+
+    def set_stretch(self, app_id: str, stretch: float) -> None:
+        self.stretch[self.slot[app_id]] = stretch
 
     def bump_refresh(self, slots: np.ndarray) -> None:
         self.refresh_id[slots] += 1
 
     # ------------------------------------------------------------- dispatch
-    def gather(self, slots: Optional[np.ndarray] = None
-               ) -> Tuple[np.ndarray, ...]:
-        """Padded dispatch view: the full queue (zero-copy slices) or a
-        slot subset (fancy-index copies), padded to a power of two."""
-        if slots is None:
-            n = len(self.ids)
-            ap = max(_pow2_ceil(n), 1)
-            return (self.graph_idx[:ap], self.start[:ap], self.executed[:ap],
-                    self.attained[:ap], self.key_id[:ap],
-                    self.refresh_id[:ap], self.ov_samples[:ap],
-                    self.ov_counts[:ap])
+    def gather(self, slots: np.ndarray) -> Tuple[np.ndarray, ...]:
+        """Padded dispatch view of a slot subset, padded to a power of two
+        by repeating the first row (padding rows are valid-but-discarded)."""
         n = len(slots)
         ap = max(_pow2_ceil(n), 1)
-        pad = np.zeros(ap - n, np.int32)      # slot 0 rows: valid, discarded
-        idx = np.concatenate([np.asarray(slots, np.int64), pad])
+        pad_slot = int(slots[0]) if n else 0
+        idx = np.concatenate([np.asarray(slots, np.int64),
+                              np.full(ap - n, pad_slot, np.int64)])
         return (self.graph_idx[idx], self.start[idx], self.executed[idx],
                 self.attained[idx], self.key_id[idx], self.refresh_id[idx],
-                self.ov_samples[idx], self.ov_counts[idx])
+                self.stretch[idx], self.ov_samples[idx], self.ov_counts[idx])
 
 
 def build_queue_state(packed: PackedKB, apps: Sequence, kb_token=None
                       ) -> QueueState:
     """Rebuild a QueueState from live AppRuntime records (used on first
-    fused refresh and whenever the packed KB tables change shape/content)."""
+    fused refresh and whenever the packed KB tables change shape/content).
+    Every admitted slot starts dirty, so the first delta tick after a
+    rebuild re-walks the whole queue."""
     qs = QueueState(packed, capacity=max(len(apps), 64))
     qs.kb_token = kb_token
     for a in apps:
         g = packed.graph_index[a.app_name]
         start = (packed.unit_index[g][a.current_unit] if a.current_unit
                  else int(packed.entry[g]))
-        i = qs.add(a.app_id, g, start, a.key_id, a.refreshes)
+        i = qs.admit(a.app_id, g, start, a.key_id, a.refreshes,
+                     deadline=a.deadline,
+                     stretch=getattr(a, "queue_stretch", 1.0))
         qs.executed[i] = a.attained_in_unit
         qs.attained[i] = a.attained
         for name, arr in (a.overrides or {}).items():
@@ -317,54 +512,173 @@ def build_queue_state(packed: PackedKB, apps: Sequence, kb_token=None
     return qs
 
 
+@dataclass
+class FusedRefresh:
+    """Host-side results of one fused refresh over a slot subset (all
+    row-aligned with the ``slots`` argument)."""
+    ranks: np.ndarray                  # (A,)
+    probs: np.ndarray                  # (A, n_buckets)
+    edges: np.ndarray                  # (A, n_buckets)
+    spill: int
+    trigger: Optional[np.ndarray]      # (A, B) | None
+    reach: Optional[np.ndarray]        # (A, B) | None
+    sup: Optional[np.ndarray]          # (A,) | None  (with_triage)
+    opt: Optional[np.ndarray]
+    mean: Optional[np.ndarray]
+
+
+def _prewarm_args(packed, prewarm_table):
+    if prewarm_table is not None:
+        return (jnp.asarray(prewarm_table.unit_class),
+                jnp.asarray(prewarm_table.warmup))
+    # 1-class placeholders keep the arg list static-shape friendly
+    return (jnp.full((packed.samples.shape[0], packed.n_units, 1), -1,
+                     jnp.int32),
+            jnp.zeros((1,), jnp.float32))
+
+
+def _dispatch_rows(qs: QueueState, slots: np.ndarray, packed: PackedKB,
+                   prewarm_table):
+    """Shared host-side marshalling for both refresh entry points: padded
+    row gather, override-width trim, prewarm constants."""
+    gi, start, executed, attained, kid, rid, stretch, ovs, ovc = \
+        qs.gather(slots)
+    with_ov = qs.override_apps > 0
+    if not with_ov and ovs.shape[2] > 1:
+        ovs = ovs[:, :, :1]                  # keep the no-override jit cache
+    uc, wt = _prewarm_args(packed, prewarm_table)
+    return gi, start, executed, attained, kid, rid, stretch, ovs, ovc, \
+        with_ov, uc, wt
+
+
+def _store_results(qs: QueueState, slots: np.ndarray, n_buckets: int,
+                   n_classes, sup, opt, mean, trigger, reach) -> None:
+    """Write one dispatch's per-slot results into the store's host mirrors
+    (the single write-back path for both refresh entry points)."""
+    qs.ensure_result_rows(n_buckets, n_classes)
+    if sup is not None:
+        qs.sup[slots] = sup
+        qs.opt[slots] = opt
+        qs.mean[slots] = mean
+    if trigger is not None:
+        qs.trig[slots] = trigger
+        qs.reach[slots] = reach
+
+
 def refresh_ranks_fused(packed: PackedKB, qs: QueueState, base_key, seed,
                         *, slots: Optional[np.ndarray] = None,
                         n_walkers: int = 512, max_steps: int = 64,
                         n_buckets: int = N_BUCKETS, walker: str = "pallas",
                         impl: Optional[str] = None,
                         compact_after: int = 16, compact_shrink: int = 4,
-                        prewarm_table=None, prewarm_k: float = 0.5
-                        ) -> Tuple[np.ndarray, ...]:
-    """One fused refresh over the queue (or a slot subset).
+                        prewarm_table=None, prewarm_k: float = 0.5,
+                        with_triage: bool = False) -> FusedRefresh:
+    """One fused refresh over a slot subset (default: every occupied slot).
 
-    Returns ``(ranks (A,), probs (A, n_buckets), edges (A, n_buckets),
-    spill, trigger, reach)`` as host arrays — the (A, n_walkers) sample
-    matrix stays on device.  With a :class:`~repro.core.prewarm.PrewarmTable`
-    the same dispatch also returns the ``(A, B)`` prewarm trigger matrix
-    (relative seconds; ``ARRIVAL_NEVER`` = don't) and reach probabilities;
-    otherwise both are None.  Does NOT bump refresh ids; callers bump after
-    consuming."""
-    gi, start, executed, attained, kid, rid, ovs, ovc = qs.gather(slots)
-    A = len(slots) if slots is not None else len(qs)
+    Returns a :class:`FusedRefresh` of host arrays — the (A, n_walkers)
+    sample matrix stays on device.  Fresh triage scalars and prewarm
+    trigger/reach rows are also written into the store's host mirrors, so
+    the planner can read arrival rows without holding this return value.
+    Does NOT bump refresh ids; callers bump after consuming."""
+    if slots is None:
+        slots = qs.occupied()
+    A = len(slots)
     if A == 0:
+        # same field contract as the dispatch path: optional outputs are
+        # None exactly when their feature is off, zero-length otherwise
         z = np.zeros((0, n_buckets), np.float32)
+        zs = np.zeros(0, np.float32)
         zt = (np.zeros((0, prewarm_table.n_classes), np.float32)
               if prewarm_table is not None else None)
-        return np.zeros(0, np.float32), z, z, 0, zt, zt
-    with_ov = qs.override_apps > 0
-    if not with_ov and ovs.shape[2] > 1:
-        ovs = ovs[:, :, :1]                  # keep the no-override jit cache
+        tri = zs if with_triage else None
+        return FusedRefresh(zs, z, z, 0, zt, zt, tri, tri, tri)
+    gi, start, executed, attained, kid, rid, stretch, ovs, ovc, with_ov, \
+        uc, wt = _dispatch_rows(qs, slots, packed, prewarm_table)
     with_pw = prewarm_table is not None
-    if with_pw:
-        uc = jnp.asarray(prewarm_table.unit_class)
-        wt = jnp.asarray(prewarm_table.warmup)
-    else:  # 1-class placeholders keep the arg list static-shape friendly
-        uc = jnp.full((packed.samples.shape[0], packed.n_units, 1), -1,
-                      jnp.int32)
-        wt = jnp.zeros((1,), jnp.float32)
-    ranks, probs, edges, spill, trigger, reach = _fused_pipeline(
+    ranks, probs, edges, spill, trigger, reach, sup, opt, mean = \
+        _fused_pipeline(
+            packed.samples, packed.counts, packed.cum_trans,
+            jnp.asarray(gi), jnp.asarray(start), jnp.asarray(executed),
+            jnp.asarray(attained), jnp.asarray(kid), jnp.asarray(rid),
+            base_key, np.uint32(int(seed) & 0xFFFFFFFF),
+            jnp.asarray(ovs), jnp.asarray(ovc),
+            jnp.asarray(np.arange(len(gi)) < A), jnp.asarray(stretch),
+            uc, wt, jnp.float32(prewarm_k),
+            n_walkers=n_walkers, max_steps=max_steps, n_buckets=n_buckets,
+            walker=walker, impl=impl, with_overrides=with_ov,
+            compact_after=compact_after, compact_shrink=compact_shrink,
+            with_prewarm=with_pw, with_triage=with_triage)
+    out = FusedRefresh(
+        np.asarray(ranks)[:A], np.asarray(probs)[:A], np.asarray(edges)[:A],
+        int(spill),
+        np.asarray(trigger)[:A] if with_pw else None,
+        np.asarray(reach)[:A] if with_pw else None,
+        np.asarray(sup)[:A] if with_triage else None,
+        np.asarray(opt)[:A] if with_triage else None,
+        np.asarray(mean)[:A] if with_triage else None)
+    _store_results(qs, slots, n_buckets,
+                   prewarm_table.n_classes if with_pw else None,
+                   out.sup, out.opt, out.mean, out.trigger, out.reach)
+    return out
+
+
+@dataclass
+class DeltaTick:
+    """Results of one delta tick: arena-wide ranks plus the set of slots
+    whose estimates were actually re-walked."""
+    ranks: np.ndarray          # (capacity,) — index by slot id; holes garbage
+    spill: int
+    walked: np.ndarray         # slot ids re-walked (and scattered) this tick
+
+
+def refresh_ranks_delta(packed: PackedKB, qs: QueueState, base_key, seed,
+                        *, walked: np.ndarray,
+                        n_walkers: int = 512, max_steps: int = 64,
+                        n_buckets: int = N_BUCKETS, walker: str = "pallas",
+                        impl: Optional[str] = None,
+                        compact_after: int = 16, compact_shrink: int = 4,
+                        prewarm_table=None, prewarm_k: float = 0.5,
+                        with_triage: bool = False) -> DeltaTick:
+    """One delta tick over the slot store: walk ``walked`` (normally the
+    drained dirty set), scatter their histogram rows into the device arena,
+    re-rank every slot in place.  With an empty ``walked`` the tick is a
+    pure rank-in-place dispatch — no MC walk at all.  Fresh triage scalars
+    and trigger/reach rows land in the store's host mirrors for exactly the
+    walked slots.  Does NOT bump refresh ids; callers bump ``walked`` after
+    consuming."""
+    qs.ensure_result_rows(n_buckets,
+                          prewarm_table.n_classes if prewarm_table else None)
+    att_all = jnp.asarray(qs.attained)
+    D = len(walked)
+    if D == 0:
+        ranks = gittins_rank_hist(qs.d_probs, qs.d_edges, att_all)
+        return DeltaTick(np.asarray(ranks), 0, walked)
+    gi, start, executed, attained, kid, rid, stretch, ovs, ovc, with_ov, \
+        uc, wt = _dispatch_rows(qs, walked, packed, prewarm_table)
+    ap = len(gi)
+    with_pw = prewarm_table is not None
+    # padding rows scatter out of bounds -> dropped (never clobber a slot)
+    slot_idx = np.concatenate([np.asarray(walked, np.int64),
+                               np.full(ap - D, qs.capacity, np.int64)])
+    (qs.d_probs, qs.d_edges, ranks, spill, sup, opt, mean, trigger,
+     reach) = _delta_pipeline(
         packed.samples, packed.counts, packed.cum_trans,
         jnp.asarray(gi), jnp.asarray(start), jnp.asarray(executed),
         jnp.asarray(attained), jnp.asarray(kid), jnp.asarray(rid),
         base_key, np.uint32(int(seed) & 0xFFFFFFFF),
         jnp.asarray(ovs), jnp.asarray(ovc),
-        jnp.asarray(np.arange(len(gi)) < A),
+        jnp.asarray(np.arange(ap) < D), jnp.asarray(stretch),
+        jnp.asarray(slot_idx), qs.d_probs, qs.d_edges, att_all,
         uc, wt, jnp.float32(prewarm_k),
         n_walkers=n_walkers, max_steps=max_steps, n_buckets=n_buckets,
         walker=walker, impl=impl, with_overrides=with_ov,
         compact_after=compact_after, compact_shrink=compact_shrink,
-        with_prewarm=with_pw)
-    return (np.asarray(ranks)[:A], np.asarray(probs)[:A],
-            np.asarray(edges)[:A], int(spill),
-            np.asarray(trigger)[:A] if with_pw else None,
-            np.asarray(reach)[:A] if with_pw else None)
+        with_prewarm=with_pw, with_triage=with_triage)
+    _store_results(qs, walked, n_buckets,
+                   prewarm_table.n_classes if with_pw else None,
+                   np.asarray(sup)[:D] if with_triage else None,
+                   np.asarray(opt)[:D] if with_triage else None,
+                   np.asarray(mean)[:D] if with_triage else None,
+                   np.asarray(trigger)[:D] if with_pw else None,
+                   np.asarray(reach)[:D] if with_pw else None)
+    return DeltaTick(np.asarray(ranks), int(spill), walked)

@@ -26,9 +26,10 @@ from repro.core.pdgraph import (PDGraph, mc_service_samples_batch,
 from repro.core.policies import (AppView, GittinsPolicy, Policy, VTCPolicy,
                                  make_policy)
 from repro.core.prewarm import (PrewarmPlan, PrewarmSignal,
-                                build_prewarm_table, plan_from_triggers,
+                                build_prewarm_table, plan_from_store,
                                 plan_prewarms)
-from repro.core.refresh import build_queue_state, refresh_ranks_fused
+from repro.core.refresh import (build_queue_state, refresh_ranks_delta,
+                                refresh_ranks_fused)
 
 
 @dataclass
@@ -48,6 +49,7 @@ class AppRuntime:
     oracle_remaining: Optional[float] = None
     key_id: int = 0                       # stable per-app RNG stream id
     refreshes: int = 0                    # per-app view-refresh counter
+    queue_stretch: float = 1.0            # observed wall/service EWMA (§3.4)
 
 
 class HermesScheduler:
@@ -60,7 +62,9 @@ class HermesScheduler:
                  batched: bool = True, mode: Optional[str] = None,
                  walker: str = "pallas",
                  compact_after: int = 16, compact_shrink: int = 4,
-                 warmup_table: Optional[Dict[str, float]] = None):
+                 warmup_table: Optional[Dict[str, float]] = None,
+                 delta_full_threshold: float = 0.5,
+                 queue_delay_correction: bool = False):
         self.kb = knowledge_base
         self.policy: Policy = make_policy(policy) if policy != "gittins" \
             else make_policy(policy, n_buckets=n_buckets)
@@ -71,22 +75,31 @@ class HermesScheduler:
         self.prewarm_enabled = prewarm
         self.mc_walkers = mc_walkers
         # Refresh modes (``mode`` wins; ``batched`` kept for compatibility):
-        #   looped    the seed's per-application walk + histogram loop
-        #   composed  one batched jitted MC dispatch, host histogram, second
-        #             rank dispatch (PR 1; bit-identical streams to looped)
-        #   fused     the device-resident pipeline: walk -> bucketize -> rank
-        #             in ONE dispatch over incrementally-maintained queue
-        #             buffers; only (A,) ranks + (A, n_buckets) hists return
+        #   looped       the seed's per-application walk + histogram loop
+        #   composed     one batched jitted MC dispatch, host histogram,
+        #                second rank dispatch (PR 1; bit-identical streams
+        #                to looped)
+        #   fused        the device-resident pipeline: walk -> bucketize ->
+        #                rank in ONE dispatch over the slot store; only
+        #                small per-app results return
+        #   fused_delta  fused + dirty-set delta refresh: each tick walks
+        #                ONLY the slots whose PDGraph position changed and
+        #                re-ranks the whole arena in place from persisted
+        #                device histograms (full re-walk past
+        #                ``delta_full_threshold`` dirty fraction)
         # Fused walker: "pallas" = counter-RNG pdgraph_walk kernel package
         # (distributionally equivalent, fastest); "threefry" = the fold_in
         # chain (bit-identical samples to composed/looped).
         self.mode = mode if mode is not None else \
             ("composed" if batched else "looped")
-        if self.mode not in ("looped", "composed", "fused"):
+        if self.mode not in ("looped", "composed", "fused", "fused_delta"):
             raise ValueError(f"unknown refresh mode {self.mode!r}")
         if walker not in ("pallas", "threefry"):
             raise ValueError(f"unknown fused walker {walker!r}")
         self.batched = self.mode != "looped"
+        self.delta_full_threshold = delta_full_threshold
+        self.queue_delay_correction = queue_delay_correction
+        self._stretch_alpha = 0.3       # queue-wait EWMA smoothing
         self.walker = walker
         self.compact_after = compact_after
         self.compact_shrink = compact_shrink
@@ -124,11 +137,23 @@ class HermesScheduler:
         return self._packed[1]
 
     def _fused_active(self) -> bool:
-        """The fused pipeline computes Gittins ranks on device, so it only
-        engages for the plain Gittins policy; composite policies (deadline
-        triage etc.) still need host-side demand stats and fall back to the
-        composed path."""
-        return self.mode == "fused" and type(self.policy) is GittinsPolicy
+        """The fused pipeline computes Gittins ranks AND the composite
+        policies' triage quantiles on device, so it engages for every
+        fused-capable policy (gittins, hermes_ddl, lstf at the stock
+        quantiles); anything else still needs raw host-side demand samples
+        and falls back to the composed path."""
+        return self.mode in ("fused", "fused_delta") and \
+            bool(getattr(self.policy, "fused_capable", False))
+
+    def _delta_active(self) -> bool:
+        return self.mode == "fused_delta" and self._fused_active()
+
+    @property
+    def _with_triage(self) -> bool:
+        """Composite fused policies need the device triage scalars; plain
+        Gittins skips computing them (keeps the rank-only arm's cost and
+        jit cache unchanged)."""
+        return type(self.policy) is not GittinsPolicy
 
     @property
     def prewarm_batched(self) -> bool:
@@ -238,43 +263,111 @@ class HermesScheduler:
                              now: float) -> None:
         """Fused refresh: one device dispatch re-estimates, bucketizes and
         ranks the stale set; views carry the (n_buckets,) histogram rows and
-        the device rank — never the (A, n_walkers) sample matrix.  With
-        prewarming enabled the SAME dispatch returns the batched per-(app,
-        backend-class) trigger matrix, stashed as a PrewarmPlan for the host
-        to take (no per-app planning loop anywhere)."""
+        the device rank — never the (A, n_walkers) sample matrix.  For the
+        composite policies the dispatch also returns the triage quantiles.
+        With prewarming enabled the SAME dispatch scatters the per-(app,
+        backend-class) trigger rows into the slot store, read back as a
+        PrewarmPlan for the host to take (no per-app planning loop)."""
         if not apps:
             return
         qs = self._ensure_qstate()
-        full = len(apps) == len(qs)
-        if full:
-            # the zero-copy full-queue gather returns rows in SLOT order,
-            # which diverges from _live insertion order once any retirement
-            # has swap-compacted the slots — realign the app list to it
-            apps = [self.apps[i] for i in qs.ids]
-        slots = None if full else \
-            np.asarray([qs.slot[a.app_id] for a in apps], np.int64)
+        slots = np.asarray([qs.slot[a.app_id] for a in apps], np.int64)
         tab = self._prewarm_table() if self.prewarm_batched else None
-        ranks, probs, edges, spill, trigger, reach = refresh_ranks_fused(
+        out = refresh_ranks_fused(
             self._packed[1], qs, self._base_key, self._seed,
             slots=slots, n_walkers=self.mc_walkers,
             n_buckets=self.n_buckets, walker=self.walker,
             compact_after=self.compact_after,
             compact_shrink=self.compact_shrink,
-            prewarm_table=tab, prewarm_k=self.K)
-        self.fused_spill += spill
+            prewarm_table=tab, prewarm_k=self.K,
+            with_triage=self._with_triage)
+        self.fused_spill += out.spill
         if tab is not None:
-            self._stash_plan(plan_from_triggers(
-                [a.app_id for a in apps], trigger, reach, now, tab))
+            self._stash_plan(plan_from_store(qs, slots, now, tab))
+        triage = out.sup is not None
         for i, a in enumerate(apps):
             a.refreshes += 1
             a.view = AppView(app_id=a.app_id, tenant=a.tenant,
                              arrival=a.arrival, attained=a.attained,
                              total_samples=None, deadline=a.deadline,
                              oracle_remaining=a.oracle_remaining,
-                             hist=(probs[i], edges[i]),
-                             fused_rank=float(ranks[i]))
-        qs.bump_refresh(slots if slots is not None
-                        else np.arange(len(qs)))
+                             hist=(out.probs[i], out.edges[i]),
+                             fused_rank=float(out.ranks[i]),
+                             demand_sup=float(out.sup[i]) if triage else None,
+                             demand_opt=float(out.opt[i]) if triage else None,
+                             demand_mean=float(out.mean[i]) if triage
+                             else None)
+        qs.bump_refresh(slots)
+        # these slots' estimates are fresh now — clear their pending marks
+        # so a later delta tick doesn't re-walk covered work
+        qs.dirty.difference_update(int(s) for s in slots)
+
+    def _priorities_delta(self, now: float,
+                          app_ids: Optional[List[str]] = None
+                          ) -> Dict[str, float]:
+        """The delta tick: drain the dirty set, walk ONLY those slots (full
+        re-walk past the dirty-fraction threshold), re-rank the whole arena
+        in place from the persisted device histograms, and refresh every
+        live view from the store — rank, triage scalars, prewarm rows.
+
+        Event-path subset calls (``app_ids`` given) walk only the dirty
+        slots the event actually touched; other dirty slots keep their mark
+        and walk on the next full tick, so per-event cost stays sized by
+        the event (the arena-wide rank-in-place re-rank is (cap, n_buckets)
+        row math — cheap), not by unrelated queue churn."""
+        qs = self._ensure_qstate()
+        if len(qs) == 0:
+            return {}
+        if app_ids is None:
+            live = list(self._live.values())
+            walked = qs.take_dirty()
+            if len(walked) >= self.delta_full_threshold * len(qs):
+                # past the threshold the subset gather/scatter saves
+                # nothing: fall back to re-walking the whole occupied set
+                walked = qs.occupied()
+        else:
+            live = [self.apps[i] for i in app_ids
+                    if i in self.apps and not self.apps[i].done]
+            req = {qs.slot[a.app_id] for a in live}
+            walked = np.asarray(sorted(qs.dirty & req), np.int64)
+            qs.dirty.difference_update(req)
+        tab = self._prewarm_table() if self.prewarm_batched else None
+        tick = refresh_ranks_delta(
+            self._packed[1], qs, self._base_key, self._seed,
+            walked=walked, n_walkers=self.mc_walkers,
+            n_buckets=self.n_buckets, walker=self.walker,
+            compact_after=self.compact_after,
+            compact_shrink=self.compact_shrink,
+            prewarm_table=tab, prewarm_k=self.K,
+            with_triage=self._with_triage)
+        self.fused_spill += tick.spill
+        if tab is not None and len(walked):
+            self._stash_plan(plan_from_store(qs, walked, now, tab))
+        if len(walked):
+            qs.bump_refresh(walked)
+            for s in walked:
+                self.apps[qs.ids[int(s)]].refreshes += 1
+        triage = self._with_triage
+        for a in live:
+            s = qs.slot[a.app_id]
+            v = a.view
+            if v is None:
+                v = AppView(app_id=a.app_id, tenant=a.tenant,
+                            arrival=a.arrival, attained=a.attained,
+                            total_samples=None, deadline=qs.get_deadline(s),
+                            oracle_remaining=a.oracle_remaining)
+                a.view = v
+            v.attained = a.attained
+            v.fused_rank = float(tick.ranks[s])
+            if triage:
+                v.demand_sup = float(qs.sup[s])
+                v.demand_opt = float(qs.opt[s])
+                v.demand_mean = float(qs.mean[s])
+        views = [a.view for a in live]
+        if not views:
+            return {}
+        ranks = self.policy.ranks(views, now)
+        return {a.app_id: float(r) for a, r in zip(live, ranks)}
 
     def _stash_plan(self, plan: PrewarmPlan) -> None:
         """Accumulate plans until the host takes them (several subset
@@ -316,9 +409,11 @@ class HermesScheduler:
         packed = self._qstate_if_current()
         if packed is not None:
             gi = packed.graph_index[app_name]
-            self._qstate.add(app_id, gi, int(packed.entry[gi]), app.key_id)
+            self._qstate.admit(app_id, gi, int(packed.entry[gi]), app.key_id,
+                               deadline=deadline)
         # view stays stale until the next priorities() call, which refreshes
-        # every stale view in one batched dispatch
+        # every stale view in one batched dispatch (in delta mode the admit
+        # marked the slot dirty, so the next tick walks it)
 
     def _qstate_set_unit(self, app: AppRuntime, unit: Optional[str]) -> None:
         packed = self._qstate_if_current()
@@ -403,7 +498,7 @@ class HermesScheduler:
         app.overrides.clear()
         self._live.pop(app.app_id, None)
         if self._qstate is not None:
-            self._qstate.remove(app.app_id)
+            self._qstate.retire(app.app_id)
 
     def set_oracle(self, app_id: str, remaining: float) -> None:
         app = self.apps[app_id]
@@ -419,15 +514,24 @@ class HermesScheduler:
         ranking to a subset (ranks are per-app independent, so hosts can
         re-rank just the applications an event touched between full ticks).
         """
+        if self._delta_active():
+            return self._priorities_delta(now, app_ids)
         if app_ids is None:
             live = list(self._live.values())
         else:
             live = [self.apps[i] for i in app_ids
                     if i in self.apps and not self.apps[i].done]
-        stale = [a for a in live if a.view is None]
         if self._fused_active():
+            stale = [a for a in live if a.view is None]
             self._refresh_views_fused(stale, now)
         else:
+            # a view minted by an earlier fused dispatch carries device
+            # scalars but no sample array; if the policy has since lost
+            # fused eligibility (quantiles re-tuned mid-run), such views
+            # are both unusable by the host quantile path and pinned to
+            # the stock quantiles — re-estimate them host-side
+            stale = [a for a in live
+                     if a.view is None or a.view.total_samples is None]
             self._refresh_views(stale)
         views = [a.view for a in live]
         if not views:
@@ -440,11 +544,39 @@ class HermesScheduler:
         """The bucket-tick refresh: re-rank the whole queue.  With
         ``resample=True`` every live demand estimate is first re-drawn from
         the PDGraphs (one batched MC dispatch in batched mode, one walk per
-        app in looped mode) — the full Fig. 15 refresh cost."""
-        if resample:
+        app in looped mode) — the full Fig. 15 refresh cost.  In
+        ``fused_delta`` mode resampling is demand-driven instead: only the
+        slots whose PDGraph position changed since the last tick (the dirty
+        set) are re-walked, everyone else re-ranks in place from persisted
+        device histograms — the §3.3 observation that estimates only move
+        when the graph position does."""
+        if resample and not self._delta_active():
             for a in self._live.values():
                 a.view = None
         return self.priorities(now)
+
+    def observe_queue_wait(self, app_id: str, wait_s: float,
+                           service_s: float) -> None:
+        """Queueing-delay correction feed (§3.4 refinement): hosts report
+        each task's observed queue wait at start; the scheduler keeps a
+        per-app EWMA of the wall/service *stretch* factor, which the fused
+        prewarm reduction uses to convert arrival quantiles (cumulative
+        service seconds) into wall-clock trigger times.  No-op unless
+        ``queue_delay_correction`` is enabled (default off — the §3.4 paper
+        model assumes continuous execution)."""
+        if not self.queue_delay_correction:
+            return
+        app = self.apps.get(app_id)
+        if app is None or app.done:
+            return
+        if service_s <= 1e-3:
+            return      # degenerate task: wait/service ratio is meaningless
+        # clamp: one pathological observation must not blow the EWMA up and
+        # push every trigger past the horizon (recovery takes ~1/alpha obs)
+        obs = min((max(wait_s, 0.0) + service_s) / service_s, 100.0)
+        app.queue_stretch += self._stretch_alpha * (obs - app.queue_stretch)
+        if self._qstate is not None and app_id in self._qstate.slot:
+            self._qstate.set_stretch(app_id, app.queue_stretch)
 
     def prewarm_signals(self, app_id: str, now: float,
                         warmup_time_of, is_warm) -> List[PrewarmSignal]:

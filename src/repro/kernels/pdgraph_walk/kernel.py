@@ -34,12 +34,19 @@ from repro.kernels import tpu_compiler_params
 from repro.kernels.pdgraph_walk.ref import counter_uniforms
 
 
-def _kernel(samples_t_ref, counts_ref, cum_t_ref, ovs_t_ref, ovc_ref,
-            cur_ref, gi_ref, app_ref, stream_ref, lane_ref, ex_ref,
-            total_ref, done_ref,
-            cur_out_ref, total_out_ref, done_out_ref,
-            *, step0: int, n_steps: int, lanes_per_app: int,
-            with_overrides: bool, with_executed: bool):
+def _kernel(*refs, step0: int, n_steps: int, lanes_per_app: int,
+            with_overrides: bool, with_executed: bool, with_arrivals: bool):
+    if with_arrivals:
+        (samples_t_ref, counts_ref, cum_t_ref, ovs_t_ref, ovc_ref,
+         cur_ref, gi_ref, app_ref, stream_ref, lane_ref, ex_ref,
+         total_ref, done_ref, arr_ref,
+         cur_out_ref, total_out_ref, done_out_ref, arr_out_ref) = refs
+    else:
+        (samples_t_ref, counts_ref, cum_t_ref, ovs_t_ref, ovc_ref,
+         cur_ref, gi_ref, app_ref, stream_ref, lane_ref, ex_ref,
+         total_ref, done_ref,
+         cur_out_ref, total_out_ref, done_out_ref) = refs
+        arr_ref = arr_out_ref = None
     S = samples_t_ref.shape[0]
     GU = samples_t_ref.shape[1]
     U = cum_t_ref.shape[0] - 1               # absorbing state == unit stride
@@ -55,6 +62,8 @@ def _kernel(samples_t_ref, counts_ref, cum_t_ref, ovs_t_ref, ovc_ref,
     ex = ex_ref[...]
     iota_gu = jax.lax.broadcasted_iota(jnp.int32, (GU, BN), 0)
     iota_s = jax.lax.broadcasted_iota(jnp.int32, (S, BN), 0)
+    if with_arrivals:
+        iota_u = jax.lax.broadcasted_iota(jnp.int32, (U, BN), 0)
     if with_overrides:
         ovs_t = ovs_t_ref[...]               # (So, A*U)
         ovc = ovc_ref[...]                   # (1, A*U) float32
@@ -63,7 +72,7 @@ def _kernel(samples_t_ref, counts_ref, cum_t_ref, ovs_t_ref, ovc_ref,
         iota_so = jax.lax.broadcasted_iota(jnp.int32, (So, BN), 0)
 
     def step_fn(k, carry):
-        cur, total, done = carry             # (1,BN) i32 / f32 / bool
+        cur, total, done, arr = carry        # (1,BN) i32 / f32 / bool (+U,BN)
         s = step0 + k
         ctr = s.astype(jnp.uint32) * np.uint32(lanes_per_app) + lane
         r, r2 = counter_uniforms(stream, ctr)
@@ -91,30 +100,49 @@ def _kernel(samples_t_ref, counts_ref, cum_t_ref, ovs_t_ref, ovc_ref,
         nxt = jnp.sum((r2 > cumsel).astype(jnp.int32), axis=0, keepdims=True)
         nxt = jnp.minimum(nxt, U)
         new_done = done | (nxt >= U)
+        if with_arrivals:
+            # entry into `nxt` happens when the current unit completes — at
+            # the just-updated total; min keeps the first entry (loops).
+            # Same arithmetic as the twin's (N, U) onehot update, laid out
+            # (U, BN) so the select runs full-width on the VPU.
+            enter = (~done) & (nxt < U)                   # (1, BN)
+            hit = (iota_u == nxt) & enter                 # (U, BN)
+            arr = jnp.where(hit, jnp.minimum(arr, total), arr)
         cur = jnp.where(new_done, cur, nxt)
-        return cur, total, new_done
+        return cur, total, new_done, arr
 
-    init = (cur_ref[...], total_ref[...], done_ref[...] != 0)
-    cur, total, done = jax.lax.fori_loop(0, n_steps, step_fn, init)
+    arr0 = arr_ref[...] if with_arrivals \
+        else jnp.zeros((1, BN), jnp.float32)
+    init = (cur_ref[...], total_ref[...], done_ref[...] != 0, arr0)
+    cur, total, done, arr = jax.lax.fori_loop(0, n_steps, step_fn, init)
     cur_out_ref[...] = cur
     total_out_ref[...] = total
     done_out_ref[...] = done.astype(jnp.int32)
+    if with_arrivals:
+        arr_out_ref[...] = arr
 
 
 def pdgraph_walk_kernel(samples_t, counts_row, cum_t, ovs_t, ovc_row,
                         cur, gi, app, stream, lane, executed, total, done,
+                        arrivals_t=None,
                         *, step0: int, n_steps: int, lanes_per_app: int,
                         with_overrides: bool, with_executed: bool,
                         block_n: int = 512, interpret: bool = False):
     """Run one walk phase over flat walker state.
 
     State arrays are (N,) and are laid out as (1, N) lanes; tables come
-    pre-transposed (see module docstring).  Returns (cur, total, done).
+    pre-transposed (see module docstring).  ``arrivals_t`` (U, N) switches on
+    the first-arrival carry: per walker, the cumulative service at its first
+    entry into each unit rides the fori_loop as a (U, BN) block and is
+    written back as a fourth output.  Returns ``(cur, total, done)`` or
+    ``(cur, total, done, arrivals_t)``.
     """
     N = cur.shape[0]
+    with_arrivals = arrivals_t is not None
     # largest block dividing N (gcd keeps lane-multiple blocks whenever the
     # walker count allows; never asserts on odd n_walkers/compact configs)
     BN = math.gcd(N, block_n)
+    U = cum_t.shape[0] - 1
     as_row = lambda a, dt: a.astype(dt).reshape(1, N)  # noqa: E731
     state = [as_row(cur, jnp.int32), as_row(gi, jnp.int32),
              as_row(app, jnp.int32), as_row(stream, jnp.uint32),
@@ -124,19 +152,32 @@ def pdgraph_walk_kernel(samples_t, counts_row, cum_t, ovs_t, ovc_row,
               ovs_t, ovc_row.reshape(1, -1)]
     kernel = functools.partial(
         _kernel, step0=step0, n_steps=n_steps, lanes_per_app=lanes_per_app,
-        with_overrides=with_overrides, with_executed=with_executed)
+        with_overrides=with_overrides, with_executed=with_executed,
+        with_arrivals=with_arrivals)
     table_spec = lambda t: pl.BlockSpec(t.shape, lambda i: (0,) * t.ndim)  # noqa: E731
     lane_spec = pl.BlockSpec((1, BN), lambda i: (0, i))
-    cur_o, total_o, done_o = pl.pallas_call(
+    arr_spec = pl.BlockSpec((U, BN), lambda i: (0, i))
+    in_specs = [table_spec(t) for t in tables] + [lane_spec] * len(state)
+    out_specs = [lane_spec] * 3
+    out_shape = [jax.ShapeDtypeStruct((1, N), jnp.int32),
+                 jax.ShapeDtypeStruct((1, N), jnp.float32),
+                 jax.ShapeDtypeStruct((1, N), jnp.int32)]
+    operands = tables + state
+    if with_arrivals:
+        in_specs.append(arr_spec)
+        out_specs.append(arr_spec)
+        out_shape.append(jax.ShapeDtypeStruct((U, N), jnp.float32))
+        operands.append(arrivals_t.astype(jnp.float32))
+    out = pl.pallas_call(
         kernel,
         grid=(N // BN,),
-        in_specs=[table_spec(t) for t in tables] + [lane_spec] * len(state),
-        out_specs=[lane_spec] * 3,
-        out_shape=[jax.ShapeDtypeStruct((1, N), jnp.int32),
-                   jax.ShapeDtypeStruct((1, N), jnp.float32),
-                   jax.ShapeDtypeStruct((1, N), jnp.int32)],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(*tables, *state)
-    return (cur_o.reshape(N), total_o.reshape(N), done_o.reshape(N) != 0)
+    )(*operands)
+    cur_o, total_o, done_o = out[:3]
+    res = (cur_o.reshape(N), total_o.reshape(N), done_o.reshape(N) != 0)
+    return res + (out[3],) if with_arrivals else res

@@ -38,34 +38,32 @@ def _phase(flat_tables, ov_tables, state, *, step0, n_steps, lanes_per_app,
            impl, interpret, arrivals=None):
     """One walk phase via the kernel or its jnp twin (identical bits).
 
-    ``arrivals`` (N, U) switches on first-arrival tracking, which only the
-    jnp twin implements (kernel support is an open item — see
-    docs/KERNELS.md); callers requesting it must dispatch impl="ref"."""
+    ``arrivals`` (N, U) switches on first-arrival tracking; both backends
+    carry it (the kernel as a (U, N) lane-major block), bit-identically."""
     fsamples, fcounts, fcum = flat_tables
     fov_s, fov_c = ov_tables
     cur, total, done, gi, app, stream, lane, executed = state
-    if arrivals is not None:
-        return walk_phase_ref(fsamples, fcounts, fcum, fov_s, fov_c,
-                              cur, total, done, gi, app, stream, lane,
-                              executed, step0=step0, n_steps=n_steps,
-                              lanes_per_app=lanes_per_app, arrivals=arrivals)
     if impl == "pallas":
         ex = executed if executed is not None \
             else jnp.zeros_like(total)
         ovs_t = fov_s.T if fov_s is not None \
             else jnp.zeros((1, 1), jnp.float32)
         ovc = fov_c if fov_c is not None else jnp.zeros((1,), jnp.float32)
-        return pdgraph_walk_kernel(
+        out = pdgraph_walk_kernel(
             fsamples.T, fcounts, fcum.T, ovs_t, ovc,
             cur, gi, app, stream, lane, ex, total, done,
+            arrivals.T if arrivals is not None else None,
             step0=step0, n_steps=n_steps, lanes_per_app=lanes_per_app,
             with_overrides=fov_s is not None,
             with_executed=executed is not None,
             interpret=interpret)
+        if arrivals is not None:
+            return out[0], out[1], out[2], out[3].T
+        return out
     return walk_phase_ref(fsamples, fcounts, fcum, fov_s, fov_c,
                           cur, total, done, gi, app, stream, lane, executed,
                           step0=step0, n_steps=n_steps,
-                          lanes_per_app=lanes_per_app)
+                          lanes_per_app=lanes_per_app, arrivals=arrivals)
 
 
 def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
@@ -92,16 +90,15 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
 
     ``track_arrivals`` additionally returns per-walker first-arrival times
     into every unit — ``((A, W), (A, W, U), spill)`` — feeding the fused
-    prewarm planner.  Tracking routes the walk through the jnp twin (the
-    Pallas kernel does not carry the arrival state yet); the twin draws
-    bit-identical counter-RNG samples, so totals are unchanged.
+    prewarm planner.  Both backends carry the arrival state (the kernel as a
+    (U, N) lane-major block), so the TPU path keeps kernel speed with
+    prewarm tracking on; the counter-RNG draws don't depend on the extra
+    carry, so totals are bit-identical either way.
     """
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    if track_arrivals:
-        impl = "ref"                 # kernel arrival state: open item
     A = graph_idx.shape[0]
     G, U, S = samples.shape
     N = A * n_walkers
@@ -171,16 +168,18 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
 
 @partial(jax.jit, static_argnames=("n_walkers", "max_steps", "impl",
                                    "interpret", "compact_after",
-                                   "compact_shrink"))
+                                   "compact_shrink", "track_arrivals"))
 def pdgraph_walk_jit(samples, counts, cum_trans, graph_idx, start, executed,
                      streams, ov_samples=None, ov_counts=None, *,
                      n_walkers: int = 512, max_steps: int = 64,
                      impl: Optional[str] = None,
                      interpret: Optional[bool] = None,
-                     compact_after: int = 16, compact_shrink: int = 4):
+                     compact_after: int = 16, compact_shrink: int = 4,
+                     track_arrivals: bool = False):
     """Jitted standalone entry point (tests / direct benchmarking)."""
     return pdgraph_walk(samples, counts, cum_trans, graph_idx, start,
                         executed, streams, ov_samples, ov_counts,
                         n_walkers=n_walkers, max_steps=max_steps, impl=impl,
                         interpret=interpret, compact_after=compact_after,
-                        compact_shrink=compact_shrink)
+                        compact_shrink=compact_shrink,
+                        track_arrivals=track_arrivals)

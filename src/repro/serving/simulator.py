@@ -49,10 +49,20 @@ class SimConfig:
     seed: int = 0
     # priority-refresh pipeline: "fused" (device-resident walk->bucketize->
     # rank->prewarm single dispatch, the default since the PR-2 soak),
-    # "composed" (PR 1 batched path), "looped" (seed baseline); `walker`
-    # picks the fused MC backend
+    # "fused_delta" (fused + dirty-set delta refresh over the persistent
+    # slot store: event handlers mark dirty slots and each tick re-walks
+    # only those), "composed" (PR 1 batched path), "looped" (seed
+    # baseline); `walker` picks the fused MC backend
     refresh_mode: str = "fused"
     walker: str = "pallas"
+    # §3.4 queueing-delay correction: condition prewarm trigger times on the
+    # app's observed queue wait (per-app wall/service EWMA) instead of
+    # assuming continuous execution.  Off by default — the paper's model.
+    queue_delay_correction: bool = False
+    # epwq prefetch window: how many upcoming trajectory units (starting at
+    # the one being spawned) get their backend keys prefetched when tasks
+    # enqueue.  1 = the CachedAttention-style current-unit-only baseline.
+    epwq_window: int = 1
     # backend-pool cold/warm model: per-key warm-up seconds override the
     # Fig. 2 defaults; `warmup_model` derives the LLM-side (kv/lora) costs
     # from the repro.configs model zoo (explicit warmup_table entries win);
@@ -148,7 +158,8 @@ class ClusterSim:
             prewarm=(cfg.prewarm_mode == "hermes"),
             mc_walkers=cfg.mc_walkers, seed=cfg.seed,
             mode=cfg.refresh_mode, walker=cfg.walker,
-            warmup_table=self.warmup_table)
+            warmup_table=self.warmup_table,
+            queue_delay_correction=cfg.queue_delay_correction)
         self.let = HermesLet(kv_capacity=cfg.kv_capacity,
                              lora_capacity=cfg.lora_capacity,
                              docker_capacity=cfg.docker_capacity,
@@ -299,8 +310,16 @@ class ClusterSim:
                            unit=unit, kind=backend.kind, service=per_task,
                            keys=keys, submitted=self.now)
             self._enqueue(task)
-            if self.cfg.prewarm_mode == "epwq":
-                for key in task.keys:  # prefetch for queued requests only
+        if self.cfg.prewarm_mode == "epwq":
+            # prefetch for queued requests only, looking `epwq_window`
+            # trajectory units ahead (window=1: the spawned unit alone —
+            # the CachedAttention-style baseline)
+            stop = min(sim.unit_idx + max(self.cfg.epwq_window, 1),
+                       len(sim.inst.trajectory))
+            for j in range(sim.unit_idx, stop):
+                u_j = g.units[sim.inst.trajectory[j][0]]
+                for key in u_j.backend.resource_keys():
+                    key = self._qualify(key, sim.inst.app_id)
                     if not self.let.is_present(key):
                         self.let.prewarm(key, self.now)
         self._plan_prewarms(sim.inst.app_id)
@@ -423,6 +442,9 @@ class ClusterSim:
                 self.waiting[kind] = fresh
 
     def _start(self, task: SimTask):
+        if self.cfg.queue_delay_correction:
+            self.sched.observe_queue_wait(
+                task.app_id, self.now - task.submitted, task.service)
         ready = self.now
         for key in task.keys:
             hit, key_ready = self.let.access(key, self.now)

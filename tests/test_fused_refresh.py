@@ -158,16 +158,18 @@ def test_queue_state_incremental_matches_rebuild(kb):
     packed = s._packed_kb()
     qs2 = build_queue_state(packed, list(s._live.values()),
                             kb_token=s._packed[0])
-    assert set(qs.ids) == set(qs2.ids)
-    perm = np.asarray([qs.slot[i] for i in qs2.ids])
-    n = len(qs2)
+    live = sorted(i for i in qs.ids if i is not None)
+    assert live == sorted(i for i in qs2.ids if i is not None)
+    perm = np.asarray([qs.slot[i] for i in live])
+    perm2 = np.asarray([qs2.slot[i] for i in live])
     for name in ("graph_idx", "start", "executed", "attained",
-                 "key_id", "refresh_id", "ov_counts"):
+                 "key_id", "refresh_id", "deadline", "stretch", "ov_counts"):
         np.testing.assert_array_equal(getattr(qs, name)[perm],
-                                      getattr(qs2, name)[:n], err_msg=name)
+                                      getattr(qs2, name)[perm2],
+                                      err_msg=name)
     so = qs2.ov_samples.shape[2]
     np.testing.assert_array_equal(qs.ov_samples[perm][:, :, :so],
-                                  qs2.ov_samples[:n])
+                                  qs2.ov_samples[perm2])
 
 
 def test_fused_ranks_stay_aligned_after_retirement(kb):

@@ -115,6 +115,34 @@ def test_spill_is_surfaced_not_silent():
     assert np.all(np.isfinite(np.asarray(out)))
 
 
+def test_interpret_kernel_matches_twin_with_arrivals(packed):
+    """The (N, U) first-arrival carry runs through the kernel itself now
+    (PR 3 open item): totals AND arrival times must match the twin to the
+    bit, with compaction in the loop, and totals must equal the untracked
+    walk (the carry is free)."""
+    gi, start, ex, streams = _queue(packed, 8)
+    kw = dict(n_walkers=W, max_steps=STEPS, compact_after=4,
+              compact_shrink=2, track_arrivals=True)
+    ref, arr_ref, _ = pdgraph_walk_jit(packed.samples, packed.counts,
+                                       packed.cum_trans, gi, start, ex,
+                                       streams, impl="ref", **kw)
+    pal, arr_pal, _ = pdgraph_walk_jit(packed.samples, packed.counts,
+                                       packed.cum_trans, gi, start, ex,
+                                       streams, impl="pallas",
+                                       interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+    np.testing.assert_array_equal(np.asarray(arr_ref), np.asarray(arr_pal))
+    plain, _ = pdgraph_walk_jit(packed.samples, packed.counts,
+                                packed.cum_trans, gi, start, ex, streams,
+                                impl="pallas", interpret=True,
+                                n_walkers=W, max_steps=STEPS,
+                                compact_after=4, compact_shrink=2)
+    np.testing.assert_array_equal(np.asarray(pal), np.asarray(plain))
+    # some walker reached some downstream unit at a finite service time
+    finite = np.asarray(arr_pal) < 1e29
+    assert finite.any()
+
+
 def test_kernel_accepts_non_pow2_walker_counts(packed):
     """Odd n_walkers (N not a multiple of the preferred block) must pick a
     dividing block size, not assert."""

@@ -1,0 +1,317 @@
+"""Persistent slot store lifecycle + dirty-set delta refresh + fused triage.
+
+Pins the PR's three contracts:
+
+* the slot-store lifecycle (admit/retire/grow) keeps slot ids stable for an
+  app's whole lifetime, reuses freed slots, and partitions the arena into
+  occupied ∪ free under an arbitrary churn sequence (hypothesis);
+* a delta tick is **bit-identical** to a full re-walk of the same dirty set
+  (the acceptance claim behind the fused_delta benchmark arm), and the
+  dirty-set semantics walk exactly what changed;
+* the composite policies' on-device triage (`hermes_ddl`/`lstf` in
+  ``refresh_mode="fused"``) matches the host-quantile path on float32 with
+  no sample arrays ever reaching the host.
+"""
+import numpy as np
+import pytest
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
+from repro.core.pdgraph import (ARRIVAL_NEVER, BackendSpec, PDGraph,
+                                UnitNode, pack_graphs)
+from repro.core.refresh import (QueueState, refresh_ranks_delta,
+                                refresh_ranks_fused)
+from repro.core.scheduler import HermesScheduler
+
+MC = 32
+
+
+@pytest.fixture(scope="module")
+def kb():
+    return build_knowledge_base(n_trials=60, seed=3)
+
+
+@pytest.fixture(scope="module")
+def packed(kb):
+    return pack_graphs(kb, T_IN, T_OUT)
+
+
+def _filled(kb, mode, walker="threefry", n_apps=24, policy="gittins", **kw):
+    s = HermesScheduler(kb, policy=policy, t_in=T_IN, t_out=T_OUT,
+                        mc_walkers=MC, seed=11, mode=mode, walker=walker,
+                        **kw)
+    names = sorted(kb)
+    for i in range(n_apps):
+        aid = f"a{i:03d}"
+        s.on_arrival(aid, names[i % len(names)], now=0.25 * i,
+                     tenant=f"t{i % 4}", deadline=200.0 + 3.0 * i)
+        s.on_progress(aid, 0.05 * i)
+    return s
+
+
+def _vals(ranks):
+    ids = sorted(ranks)
+    return ids, np.asarray([ranks[i] for i in ids])
+
+
+# ------------------------------------------------------------ churn lifecycle
+_TINY = None
+
+
+def _tiny_packed():
+    """Module-lazy packed KB for the hypothesis churn test (fixtures can't
+    mix with @given under the hermetic stub)."""
+    global _TINY
+    if _TINY is None:
+        _TINY = pack_graphs(_chain_kb(), T_IN, T_OUT)
+    return _TINY
+
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 10 ** 6)),
+                min_size=1, max_size=120))
+@settings(max_examples=25, deadline=None)
+def test_slot_store_churn_invariants(ops):
+    """Arbitrary admit/retire/progress churn: slots stay pinned for an
+    app's lifetime, freed slots are reused (not leaked), occupied and free
+    partition a power-of-two arena, and host rows survive in place."""
+    packed = _tiny_packed()
+    qs = QueueState(packed, capacity=4)
+    mirror = {}
+    seq = 0
+    for kind, r in ops:
+        if kind == 0 or not mirror:                       # admit
+            aid = f"app{seq}"
+            start = r % packed.n_units
+            slot = qs.admit(aid, 0, start, key_id=seq)
+            mirror[aid] = [slot, start, seq, 0.0]
+            seq += 1
+            assert qs.ids[slot] == aid and slot in qs.dirty
+        elif kind == 1:                                   # retire
+            aid = sorted(mirror)[r % len(mirror)]
+            slot = mirror.pop(aid)[0]
+            qs.retire(aid)
+            assert qs.ids[slot] is None
+            assert not qs._occ[slot] and slot not in qs.dirty
+        else:                                             # progress
+            aid = sorted(mirror)[r % len(mirror)]
+            qs.add_progress(aid, 0.5)
+            mirror[aid][3] += 0.5
+    assert len(qs) == len(mirror) and sorted(qs.slot) == sorted(mirror)
+    cap = qs.capacity
+    assert cap & (cap - 1) == 0                           # pow2, grown 2x
+    occ, free = set(qs.occupied().tolist()), set(qs._free)
+    assert occ | free == set(range(cap)) and not (occ & free)
+    for aid, (slot, start, key, att) in mirror.items():
+        assert qs.slot[aid] == slot                       # never relocated
+        assert qs.start[slot] == start and qs.key_id[slot] == key
+        assert qs.attained[slot] == pytest.approx(att)
+    # every freed slot is reachable again: admits fill holes before growing
+    grown = cap
+    for i in range(len(free)):
+        qs.admit(f"fill{i}", 0, 0, key_id=1000 + i)
+    assert qs.capacity == grown
+
+
+def test_retired_slot_is_reused_before_growth(packed):
+    qs = QueueState(packed, capacity=2)
+    a = qs.admit("a", 0, 0, key_id=0)
+    qs.admit("b", 0, 0, key_id=1)
+    qs.retire("a")
+    c = qs.admit("c", 0, 0, key_id=2)
+    assert c == a and qs.capacity == 2                    # hole reused
+    qs.admit("d", 0, 0, key_id=3)
+    assert qs.capacity == 4                               # then doubled
+
+
+# --------------------------------------------------- delta-tick bit identity
+def test_delta_bit_identical_to_full_rewalk_of_dirty_set(kb):
+    """Acceptance: delta-refreshed ranks for the dirty apps equal a full
+    subset re-walk of the same slots to the BIT — gather → walk → scatter →
+    rank-in-place must not perturb a single float."""
+    for walker in ("threefry", "pallas"):
+        s = _filled(kb, "fused_delta", walker=walker)
+        s.priorities(10.0)                  # prime: all slots walked once
+        qs, packed = s._qstate, s._packed[1]
+        dirty = qs.occupied()[::3]          # any subset
+        kw = dict(n_walkers=MC, walker=walker)
+        full = refresh_ranks_fused(packed, qs, s._base_key, s._seed,
+                                   slots=dirty, **kw)
+        tick = refresh_ranks_delta(packed, qs, s._base_key, s._seed,
+                                   walked=dirty, **kw)
+        np.testing.assert_array_equal(tick.ranks[dirty], full.ranks,
+                                      err_msg=walker)
+
+
+def test_delta_scheduler_matches_fused_first_tick(kb):
+    """First tick (everything dirty -> full fallback) must rank exactly
+    like plain fused mode: same streams, same math, bitwise."""
+    rd = _filled(kb, "fused_delta").priorities(10.0)
+    rf = _filled(kb, "fused").priorities(10.0)
+    ids_d, vd = _vals(rd)
+    ids_f, vf = _vals(rf)
+    assert ids_d == ids_f
+    np.testing.assert_array_equal(vd, vf)
+
+
+# ------------------------------------------------------- dirty-set semantics
+def test_progress_only_tick_reranks_without_rewalk(kb):
+    """Progress doesn't dirty a slot: the next tick re-ranks in place from
+    the persisted device histograms (no MC walk), yet the rank moves with
+    the new attained service."""
+    s = _filled(kb, "fused_delta")
+    r1 = s.refresh_tick(10.0, resample=True)
+    before = {a.app_id: a.refreshes for a in s.apps.values()}
+    s.on_progress("a000", 2.0)
+    r2 = s.refresh_tick(11.0, resample=True)
+    assert all(a.refreshes == before[a.app_id] for a in s.apps.values())
+    assert r2["a000"] != r1["a000"]
+
+
+def test_transition_walks_exactly_the_dirty_app(kb):
+    s = _filled(kb, "fused_delta")
+    s.refresh_tick(10.0, resample=True)
+    before = {a.app_id: a.refreshes for a in s.apps.values()}
+    s.on_unit_start("a002", s.apps["a002"].current_unit, 11.0)
+    s.refresh_tick(11.0, resample=True)
+    walked = [a.app_id for a in s.apps.values()
+              if a.refreshes != before[a.app_id]]
+    assert walked == ["a002"]
+
+
+def test_dirty_fraction_fallback_walks_everything(kb):
+    """Past delta_full_threshold the tick re-walks the whole occupied set
+    (subset gather/scatter no longer pays)."""
+    s = _filled(kb, "fused_delta", n_apps=12, delta_full_threshold=0.25)
+    s.refresh_tick(10.0, resample=True)
+    before = {a.app_id: a.refreshes for a in s.apps.values()}
+    for aid in ("a001", "a004", "a007"):    # 3/12 = 25% >= threshold
+        s.on_unit_start(aid, s.apps[aid].current_unit, 11.0)
+    s.refresh_tick(11.0, resample=True)
+    assert all(a.refreshes == before[a.app_id] + 1
+               for a in s.apps.values() if not a.done)
+
+
+def test_delta_survives_retirement_churn(kb):
+    """Retire a few apps (holes in the arena), admit a new one into a hole,
+    keep ticking: ranks stay attached to the right apps and the new app is
+    walked before its first rank is consumed."""
+    s = _filled(kb, "fused_delta", n_apps=12)
+    s.priorities(10.0)
+    s.on_app_complete("a001")
+    s.on_app_complete("a004")
+    s.on_arrival("fresh", sorted(s.kb)[0], now=11.0)
+    r = s.priorities(11.0)
+    assert "a001" not in r and "a004" not in r and "fresh" in r
+    assert s.apps["fresh"].refreshes == 1          # walked on admission tick
+    assert np.isfinite(list(r.values())).all()
+
+
+# ---------------------------------------------------------- fused triage
+@pytest.mark.parametrize("policy", ["hermes_ddl", "lstf"])
+def test_composite_policy_fused_matches_host_path(kb, policy):
+    """hermes_ddl / lstf with refresh_mode='fused': triage quantiles come
+    from the device dispatch (no sample arrays on host) and the ranks match
+    the composed host-quantile path to float32 tolerance."""
+    r_host = _filled(kb, "composed", policy=policy).priorities(10.0)
+    s = _filled(kb, "fused", walker="threefry", policy=policy)
+    assert s._fused_active()
+    r_fused = s.priorities(10.0)
+    ids_h, vh = _vals(r_host)
+    ids_f, vf = _vals(r_fused)
+    assert ids_h == ids_f
+    np.testing.assert_allclose(vh, vf, rtol=1e-5, atol=1e-3)
+    assert np.array_equal(np.argsort(vh, kind="stable"),
+                          np.argsort(vf, kind="stable"))
+    for a in s.apps.values():       # no per-app host quantile pulls possible
+        assert a.view.total_samples is None
+        assert a.view.demand_sup is not None
+
+
+def test_composite_policy_fused_delta_runs_and_matches_fused(kb):
+    for policy in ("hermes_ddl", "lstf"):
+        rf = _filled(kb, "fused", policy=policy).priorities(10.0)
+        rd = _filled(kb, "fused_delta", policy=policy).priorities(10.0)
+        _, vf = _vals(rf)
+        _, vd = _vals(rd)
+        np.testing.assert_array_equal(vf, vd)
+
+
+def test_retuned_quantiles_fall_back_to_host_path(kb):
+    """A policy instance re-tuned away from the device quantiles loses
+    fused eligibility instead of silently ranking on the wrong quantile."""
+    s = _filled(kb, "fused", policy="lstf")
+    s.policy.sup_q = 0.95
+    assert not s._fused_active()
+    r = s.priorities(10.0)                  # composed fallback still ranks
+    assert len(r) == 24
+    assert any(a.view.total_samples is not None for a in s.apps.values())
+
+
+def test_retune_mid_run_reestimates_stale_fused_views(kb):
+    """Re-tuning AFTER fused views exist must re-estimate them on the host
+    path (device scalars are pinned to the stock quantiles and carry no
+    samples) — including with a mixed queue from a post-retune arrival."""
+    s = _filled(kb, "fused", policy="lstf")
+    s.priorities(10.0)                      # mint fused (sample-less) views
+    s.policy.sup_q = 0.95
+    s.on_arrival("late", sorted(s.kb)[0], now=11.0, deadline=300.0)
+    r = s.priorities(11.0)                  # mixed views must not crash
+    assert len(r) == 25 and np.isfinite(list(r.values())).all()
+    assert all(a.view.total_samples is not None
+               for a in s.apps.values() if not a.done)
+
+
+# ------------------------------------------------- queueing-delay correction
+def _chain_kb(dur_a=30.0, dur_b=5.0):
+    def unit(name, image, durs, nxt):
+        return UnitNode(name=name, backend=BackendSpec("docker", model=image),
+                        duration=list(durs), next_counts=dict(nxt))
+    units = {"a": unit("a", "img-a", [dur_a] * 20, {"b": 20}),
+             "b": unit("b", "img-b", [dur_b] * 20, {"$end": 20})}
+    return {"T": PDGraph("T", "a", units)}
+
+
+def test_queue_stretch_delays_prewarm_trigger():
+    """With queue_delay_correction on, an app observed to run at 2x wall
+    per service second fires its downstream prewarm ~2x later; with the
+    flag off the observation is ignored (bit-identical to the paper
+    model)."""
+    DOCKER_TP = 10.0
+    fires = {}
+    for corrected in (False, True):
+        s = HermesScheduler(_chain_kb(dur_a=30.0), policy="gittins",
+                            t_in=T_IN, t_out=T_OUT, mc_walkers=256, seed=3,
+                            mode="fused", walker="pallas", prewarm=True,
+                            queue_delay_correction=corrected)
+        s.on_arrival("x", "T", now=0.0)
+        # task waited as long as it ran -> stretch EWMA pulls toward 2.0
+        for _ in range(12):
+            s.observe_queue_wait("x", wait_s=30.0, service_s=30.0)
+        s.priorities(0.0)
+        plan = s.take_prewarm_plan()
+        by_key = dict(zip(plan.resource_keys, plan.fire_at))
+        fires[corrected] = by_key["docker:img-b"]
+    stretch = 2.0 - 0.7 ** 12                   # EWMA after 12 observations
+    assert fires[False] == pytest.approx(30.0 - DOCKER_TP, abs=0.5)
+    assert fires[True] == pytest.approx(stretch * 30.0 - DOCKER_TP, abs=1.0)
+    assert fires[True] > fires[False] + 25.0
+
+
+def test_store_arrival_rows_feed_the_plan(kb):
+    """The batched plan is built from the store's persisted trigger rows
+    (plan_from_store), not a side-channel: rows for walked slots are fresh
+    and finite exactly where a plan entry exists."""
+    s = HermesScheduler(_chain_kb(), policy="gittins", t_in=T_IN,
+                        t_out=T_OUT, mc_walkers=256, seed=3,
+                        mode="fused_delta", walker="pallas", prewarm=True)
+    s.on_arrival("x", "T", now=0.0)
+    s.priorities(0.0)
+    plan = s.take_prewarm_plan()
+    qs = s._qstate
+    slot = qs.slot["x"]
+    tab = s._prewarm_table()
+    b = tab.classes.index("docker:img-b")
+    assert qs.trig[slot, b] < ARRIVAL_NEVER / 2
+    assert any(k == "docker:img-b" for k in plan.resource_keys)
