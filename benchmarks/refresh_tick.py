@@ -24,6 +24,18 @@ re-rank) under:
                 event; the tick re-walks ONLY those slots and re-ranks the
                 whole arena in place from persisted device histograms —
                 the incremental-re-estimation claim, measured
+  fused_delta_mesh1    the PR-5 mesh-sharded pipeline on a degenerate
+                one-device mesh: same delta semantics, but stale-row-only
+                ranking, packed-carrier dispatch and multi-stage walk
+                compaction — the 1-shard scaling baseline of the mesh
+  fused_delta_sharded  the mesh pipeline with the slot arena partitioned
+                across min(8, device_count) devices via shard_map; one
+                dispatch per tick walks each shard's dirty rows locally.
+                Skipped on single-device runs — this module forces
+                XLA_FLAGS=--xla_force_host_platform_device_count=8 when run
+                directly (before jax loads), so the CPU arm exercises a
+                real 8-way mesh; bit-identical ranks to fused_delta for
+                the same placement
 
 plus the cheaper rank-only tick (demand estimates cached, re-rank only).
 
@@ -36,6 +48,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
 import time
@@ -45,12 +58,27 @@ import numpy as np
 
 sys.path.insert(0, "src")  # repo-root invocation without an installed package
 
+# a CPU mesh needs forced host devices BEFORE jax initializes; when another
+# harness (benchmarks.run) imported jax first this is a silent no-op and the
+# sharded arm simply skips
+if "jax" not in sys.modules and \
+        "force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", "") and \
+        not os.environ.get("REFRESH_TICK_NO_MESH"):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
 from benchmarks.common import Csv, kb  # noqa: E402
 from repro.apps.suite import T_IN, T_OUT  # noqa: E402
 from repro.core.scheduler import HermesScheduler  # noqa: E402
 
 MC_WALKERS = 128
 JSON_PATH = "BENCH_refresh_tick.json"
+# largest power of two <= device count (capped at 8): RefreshMesh requires a
+# pow2 shard count, and hosts can expose e.g. 6 accelerators
+MESH_SHARDS = 1 << (min(8, jax.device_count()).bit_length() - 1)
 
 # prewarm=False isolates the rank-refresh cost (comparable across PRs);
 # fused_prewarm measures the increment of computing the batched prewarm
@@ -64,14 +92,30 @@ ARMS = {
     "fused_delta": dict(mode="fused_delta", walker="pallas", prewarm=False),
     "fused_delta_prewarm": dict(mode="fused_delta", walker="pallas",
                                 prewarm=True),
+    "fused_delta_mesh1": dict(mode="fused_delta", walker="pallas",
+                              prewarm=False, mesh_shards=1),
+    "fused_delta_sharded": dict(mode="fused_delta", walker="pallas",
+                                prewarm=False, mesh_shards=MESH_SHARDS),
 }
-DELTA_ARMS = ("fused_delta", "fused_delta_prewarm")
+DELTA_ARMS = ("fused_delta", "fused_delta_prewarm", "fused_delta_mesh1",
+              "fused_delta_sharded")
 # per-tick fraction of the queue whose PDGraph position changes between two
 # delta ticks — ~5-10% is what open-arrival sims at 1 s buckets actually see
 DIRTY_FRAC = 0.08
 # the per-app looped baseline is O(queue) dispatches per tick; past 1k apps
-# it would dominate the whole benchmark wall time for a known-linear curve
-LOOPED_MAX_APPS = 1024
+# it would dominate the whole benchmark wall time for a known-linear curve.
+# The full-walk arms are O(queue) walk lanes per tick: at the 16k+ sizes
+# (which exist to scale the DELTA/mesh arms) they'd add minutes of wall per
+# size for known-linear curves, so only fused_pallas follows as the
+# full-walk reference
+ARM_MAX_APPS = {
+    "looped": 1024,
+    "composed": 4096,
+    "fused": 4096,
+    "fused_prewarm": 4096,
+    "fused_delta_prewarm": 16384,
+    "fused_pallas": 16384,
+}
 
 
 def build_queue(knowledge, n_apps: int, arm: str,
@@ -118,11 +162,14 @@ def time_refresh(sched: HermesScheduler, iters: int,
     sched.take_prewarm_plan()
     if mark is not None:
         # a delta arm's FIRST tick walks the whole (all-dirty-on-admit)
-        # queue; a second warmup tick compiles the delta-sized dispatch so
-        # the timed ticks measure steady state, not jit tracing
-        mark()
-        sched.refresh_tick(100.0, resample=resample)
-        sched.take_prewarm_plan()
+        # queue; extra warmup ticks compile the delta-sized dispatches so
+        # the timed ticks measure steady state, not jit tracing (the
+        # per-shard max dirty count straddles two padded shapes at small
+        # queues — several draws are needed to have seen both)
+        for _ in range(4):
+            mark()
+            sched.refresh_tick(100.0, resample=resample)
+            sched.take_prewarm_plan()
     sched.fused_spill = 0          # count spill over the timed ticks only
     times = []
     for _ in range(iters):
@@ -144,22 +191,32 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
         # millisecond ticks the min needs several draws to converge
         sizes, iters = (16,), 5
     elif paper_scale:
-        sizes, iters = (256, 1024, 4096, 8192), 3
+        sizes, iters = (256, 1024, 4096, 8192, 16384, 32768), 3
     else:
-        sizes, iters = (256, 1024, 4096), 3
+        sizes, iters = (256, 1024, 4096, 16384), 3
     knowledge = kb()
     records = []
     per_size = {}
+    mins = {}
     for n in sizes:
         ticks = {}
         for arm in ARMS:
-            if arm == "looped" and n > LOOPED_MAX_APPS:
+            if n > ARM_MAX_APPS.get(arm, 1 << 30):
                 continue
+            if arm == "fused_delta_sharded" and MESH_SHARDS < 2:
+                continue   # no real mesh (jax imported first / 1 device):
+                # the arm would duplicate fused_delta_mesh1 — skip it
             sched = build_queue(knowledge, n, arm, seed=seed)
             mark = (make_dirty_marker(sched, knowledge, n, seed)
                     if arm in DELTA_ARMS else None)
-            t, t_min = time_refresh(sched, iters, resample=True, mark=mark)
+            # delta ticks are tens of ms with compile-adjacent variance:
+            # the min-of-N estimator (what the trend gate and the sharded
+            # acceptance ratio compare) needs more draws to converge than
+            # the second-long full-walk ticks do
+            n_iters = iters + 4 if arm in DELTA_ARMS else iters
+            t, t_min = time_refresh(sched, n_iters, resample=True, mark=mark)
             ticks[arm] = t
+            mins[(arm, n)] = t_min
             derived = f"{1e3 * t:.2f} ms/tick"
             if arm != "looped" and "looped" in ticks:
                 derived += f" vs_looped={ticks['looped'] / t:.1f}x"
@@ -169,12 +226,19 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
                 derived += f" vs_full_fused={ticks['fused_pallas'] / t:.2f}x"
             if arm == "fused_pallas":
                 derived += f" spill/tick={sched.fused_spill / iters:.0f}"
+            if arm == "fused_delta_sharded":
+                ratio = mins[("fused_delta", n)] / t_min
+                derived += (f" shards={MESH_SHARDS}"
+                            f" vs_1shard_min={ratio:.2f}x"
+                            f" spill={sched.fused_spill}")
             csv.add(f"refresh_tick/full/{arm}/apps={n}", 1e6 * t, derived)
             row = {"name": f"refresh_tick/full/{arm}/apps={n}",
                    "arm": arm, "apps": n, "us_per_call": 1e6 * t,
                    "ms_per_tick": 1e3 * t, "ms_per_tick_min": 1e3 * t_min}
             if arm in DELTA_ARMS:
                 row["dirty_frac"] = DIRTY_FRAC
+            if "mesh_shards" in ARMS[arm]:
+                row["mesh_shards"] = ARMS[arm]["mesh_shards"]
             records.append(row)
         per_size[n] = ticks
     # rank-only tick (demand estimates cached between ticks)
@@ -197,6 +261,17 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
         f"fused_delta_vs_full@{n}": ticks["fused_pallas"] / ticks["fused_delta"]
         for n, ticks in per_size.items()
         if "fused_delta" in ticks and "fused_pallas" in ticks})
+    # the sharded acceptance ratio uses the min-of-N estimator (same one the
+    # trend gate compares): mesh tick vs the 1-shard delta arm, per size
+    speedups.update({
+        f"fused_delta_sharded_vs_1shard_min@{n}":
+            mins[("fused_delta", n)] / mins[("fused_delta_sharded", n)]
+        for n, ticks in per_size.items() if "fused_delta_sharded" in ticks})
+    speedups.update({
+        f"fused_delta_sharded_vs_mesh1_min@{n}":
+            mins[("fused_delta_mesh1", n)] / mins[("fused_delta_sharded", n)]
+        for n, ticks in per_size.items()
+        if "fused_delta_sharded" in ticks and "fused_delta_mesh1" in ticks})
     payload = {
         "benchmark": "refresh_tick",
         "smoke": smoke,
@@ -204,6 +279,8 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
         "sizes": list(sizes),
         "iters": iters,
         "dirty_frac": DIRTY_FRAC,
+        "mesh_shards": MESH_SHARDS,
+        "devices": jax.device_count(),
         "platform": platform.platform(),
         "rows": records,
         "speedup": speedups,

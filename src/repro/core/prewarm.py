@@ -182,13 +182,16 @@ class PrewarmPlan:
 
 def plan_from_store(store, slots: np.ndarray, now: float,
                     table: PrewarmTable) -> PrewarmPlan:
-    """Build one tick's plan from the slot store's persisted arrival rows.
+    """Build one tick's plan from the slot store's persisted trigger rows.
 
-    ``store`` is a :class:`repro.core.refresh.QueueState`; ``slots`` names
-    the rows the last dispatch re-walked (their ``trig``/``reach`` mirrors
-    are fresh).  This is the delta-tick planner entry: the fused dispatch
-    scatters trigger rows in place and the host reads exactly the walked
-    rows back — no fresh (A, B) reduction, no per-application loop."""
+    ``store`` is a :class:`repro.core.arena.QueueState`; ``slots`` names
+    the rows whose ``trig``/``reach`` mirrors are fresh — the walked rows
+    after an event-path refresh, or the WHOLE occupied set after a full
+    delta/mesh tick (retriggering re-conditions every slot's trigger on
+    elapsed service each tick).  This is also the cross-shard merge point
+    of the mesh path: every shard's trigger rows land in the same host
+    mirror, so one call assembles the mesh-wide plan — no per-application
+    loop, no per-shard plan objects."""
     slots = np.asarray(slots, np.int64)
     app_ids = [store.ids[int(s)] for s in slots]
     return plan_from_triggers(app_ids, store.trig[slots],
@@ -213,3 +216,26 @@ def plan_from_triggers(app_ids: Sequence[str], trigger: np.ndarray,
         kinds=[table.kinds[b] for b in b_idx],
         fire_at=np.asarray(fire, np.float64),
         p_reach=np.asarray(p_reach)[a_idx, b_idx].astype(np.float32))
+
+
+def merge_plans(prev: PrewarmPlan, plan: PrewarmPlan,
+                is_live) -> PrewarmPlan:
+    """Merge two plans, deduplicating on (app, class) with the NEWER
+    trigger winning (later refreshes carry fresher arrival estimates) and
+    pruning apps for which ``is_live(app_id)`` is False.  The scheduler
+    stashes successive per-tick/per-event plans through this, so the stash
+    stays bounded by live-apps x classes however many refreshes land
+    between two host takes."""
+    merged: Dict[tuple, tuple] = {}
+    for p in (prev, plan):
+        for i in range(len(p)):
+            if is_live(p.app_ids[i]):
+                merged[(p.app_ids[i], p.resource_keys[i])] = \
+                    (p.kinds[i], p.fire_at[i], p.p_reach[i])
+    keys = list(merged)
+    return PrewarmPlan(
+        app_ids=[a for a, _ in keys],
+        resource_keys=[k for _, k in keys],
+        kinds=[merged[k][0] for k in keys],
+        fire_at=np.asarray([merged[k][1] for k in keys], np.float64),
+        p_reach=np.asarray([merged[k][2] for k in keys], np.float32))

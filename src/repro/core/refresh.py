@@ -1,684 +1,31 @@
-"""Device-resident fused refresh pipeline (§3.3 hot path, Fig. 15).
+"""Fused refresh backbone — facade over the split subsystem.
 
-One jitted dispatch chains the whole bucket-tick estimate refresh —
+PR 5 split the original single-file backbone into three layers; this module
+re-exports the public surface so existing imports keep working:
 
-    MC walk  →  row-wise bucketize  →  Gittins rank  (→ triage quantiles,
-                                                      → prewarm triggers)
-
-— over packed PDGraph tables and a **persistent slot store** of per-app
-rows.  Only small per-app results (ranks, histogram rows, triage scalars,
-prewarm triggers) ever cross the host boundary; the ``(A, n_walkers)``
-sample matrix lives and dies on device.
-
-Two walker backends:
-
-* ``walker="threefry"`` — the original ``_walk_core`` under vmap with the
-  per-(app, refresh) fold_in chain: bit-identical demand samples to the
-  composed/looped paths, so fused ranks match them to float32 tolerance.
-  The equivalence baseline.
-* ``walker="pallas"`` — the counter-RNG ``pdgraph_walk`` kernel package
-  (Pallas kernel on TPU, bit-identical jnp twin elsewhere): breaks the
-  threefry bottleneck and adds phase compaction; distributionally
-  equivalent (KS-tested), and the default for fused mode.
-
-``QueueState`` is the slot store: a fixed-capacity power-of-two arena
-(growable by doubling) where every live application owns ONE slot for its
-whole lifetime.  ``admit`` pops a slot off the host free-list, ``retire``
-returns it (retired rows become masked holes — no swap compaction, so slot
-ids are stable and device-resident result rows stay aligned), and
-``mark_dirty`` records the slots whose PDGraph position changed since the
-last walk.  Host-side *input* rows (graph/start/executed/attained/keys/
-overrides/deadline/queue-stretch) are updated in place, O(1) per scheduler
-event; *result* rows are written only by the refresh dispatches — the
-``(cap, n_buckets)`` histogram rows live ON DEVICE (``d_probs``/``d_edges``)
-so ranks can be recomputed in place without re-walking, while the triage
-quantiles and prewarm trigger rows keep small host mirrors for the policies
-and the planner.
-
-**Delta refresh** (``refresh_ranks_delta``) is the scale path: each tick
-gathers only the dirty slots, walks just those rows, scatters their fresh
-histogram rows back into the device arena, and re-ranks EVERY occupied slot
-in place from the persisted histograms at the current attained service —
-one dispatch, sized by the dirty set, not the queue.  The scheduler falls
-back to a full re-walk when the dirty fraction crosses its threshold.
+* :mod:`repro.core.arena` — the persistent slot store (``QueueState``):
+  slot lifecycle (admit/retire/free-lists), dirty tracking, shard placement
+  and the repack epoch.
+* :mod:`repro.core.refresh_pipeline` — the device pipelines: MC walk →
+  histogram → Gittins rank → triage → prewarm reduction/retriggering, plus
+  the single-device ``refresh_ranks_fused`` / ``refresh_ranks_delta`` entry
+  points.
+* :mod:`repro.core.refresh_mesh` — ``RefreshMesh``: the same pipeline
+  partitioned across a device mesh via ``shard_map`` (one shard = one
+  contiguous device-arena block; only ranks, triage scalars and trigger
+  rows are gathered to host).
 """
-from __future__ import annotations
+from repro.core.arena import QueueState, build_queue_state  # noqa: F401
+from repro.core.refresh_pipeline import (  # noqa: F401
+    DeltaTick, FusedRefresh, _arrival_hists, _delta_pipeline,
+    _dispatch_rows, _fused_pipeline, _prewarm_args, _prewarm_triggers,
+    _store_results, _triage_stats, _triggers_from_hists, _walk_total,
+    refresh_ranks_delta, refresh_ranks_fused)
+from repro.core.refresh_mesh import (  # noqa: F401
+    MeshTick, RefreshMesh, refresh_ranks_mesh)
 
-from dataclasses import dataclass
-from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.gittins import (N_BUCKETS, gittins_rank_core,
-                                gittins_rank_hist, to_histogram_rows_jnp)
-from repro.core.pdgraph import (ARRIVAL_NEVER, PackedKB, _mc_walk_batch,
-                                _pow2_ceil)
-from repro.core.policies import HOPELESS_Q, SUP_Q
-from repro.kernels.pdgraph_walk.ops import pdgraph_walk, walker_streams
-
-
-def _prewarm_triggers(arr, graph_idx, unit_class, class_warmup, K, n_buckets,
-                      stretch):
-    """Per-walker first-arrival times -> per-(app, backend-class) prewarm
-    triggers, entirely on device (§3.4 generalized to all downstream units).
-
-    arr:         (A, W, U) cumulative service at each walker's first entry
-                 into each unit (ARRIVAL_NEVER where never entered)
-    unit_class:  (G, U, Kc) int32 backend-class ids per unit (-1 = none)
-    class_warmup:(B,) float32 warm-up seconds per class
-    K:           effectiveness knob (traced scalar — one compile serves the
-                 whole Fig. 14 K sweep)
-    stretch:     (A,) queueing-delay correction: observed wall seconds per
-                 service second (EWMA from the host; 1.0 = assume the app
-                 executes continuously, the §3.4 default)
-
-    Per (app, unit): p_reach = P[walker ever enters u]; where p_reach >= K
-    the trigger quantile is Quantile_{first-arrival | reached}(1 - K/p_reach)
-    from an n_buckets arrival histogram (linear interpolation inside the
-    crossing bucket).  Per (app, class): the earliest (stretch * quantile -
-    warm-up) over contributing units.  Returns ``(trigger (A, B), reach
-    (A, B))`` with ARRIVAL_NEVER marking "do not prewarm"."""
-    A, W, U = arr.shape
-    B = class_warmup.shape[0]
-    reached = arr < ARRIVAL_NEVER / 2                       # (A, W, U)
-    n_reach = reached.sum(axis=1).astype(jnp.float32)       # (A, U)
-    p_reach = n_reach / W
-    ok = p_reach >= K                                       # coverage gate
-    q = jnp.clip(1.0 - K / jnp.maximum(p_reach, 1e-9), 0.0, 1.0)
-
-    # arrival histogram over reached walkers, same floor binning as the
-    # rank pipeline's to_histogram_rows_jnp
-    t_lo = jnp.where(reached, arr, ARRIVAL_NEVER)
-    lo = t_lo.min(axis=1)                                   # (A, U)
-    hi = jnp.where(reached, arr, -ARRIVAL_NEVER).max(axis=1)
-    span = jnp.maximum(hi - lo, 1e-6)
-    idx = ((arr - lo[:, None, :]) * (n_buckets / span)[:, None, :])
-    idx = jnp.clip(idx.astype(jnp.int32), 0, n_buckets - 1)
-    # one-hot reduce per unit (U is static and small): peak intermediate is
-    # (A, W, nb) — same as the rank histogram — instead of the full
-    # (A, W, U, nb) cross product, which at benchmark scale (4096 apps x
-    # 512 walkers) would be a few-hundred-MB device allocation
-    buckets = jnp.arange(n_buckets)
-    hist = jnp.stack(
-        [((idx[:, :, u, None] == buckets) & reached[:, :, u, None])
-         .sum(axis=1) for u in range(U)], axis=1).astype(jnp.float32)
-    denom = jnp.maximum(n_reach, 1.0)
-    cdf = jnp.cumsum(hist, axis=-1) / denom[..., None]
-
-    # quantile: first bucket whose CDF reaches q, linearly interpolated
-    k = jnp.argmax(cdf >= q[..., None] - 1e-7, axis=-1)     # (A, U)
-    kk = k[..., None]
-    cdf_prev = jnp.where(
-        kk > 0, jnp.take_along_axis(cdf, jnp.maximum(kk - 1, 0), -1), 0.0)[..., 0]
-    p_k = jnp.take_along_axis(hist, kk, -1)[..., 0] / denom
-    frac = jnp.clip((q - cdf_prev) / jnp.maximum(p_k, 1e-9), 0.0, 1.0)
-    width = span / n_buckets
-    qtile = lo + (k.astype(jnp.float32) + frac) * width     # (A, U)
-    # queueing-delay correction: arrival quantiles are in cumulative-service
-    # seconds; the observed wall/service stretch converts them to wall time
-    # (stretch == 1.0 multiplies bit-exactly — the correction-off path stays
-    # bit-identical to the uncorrected pipeline)
-    qtile = qtile * stretch[:, None]
-
-    # scatter-min into backend classes:  trigger(a,b) = min over units of
-    # (quantile - warm-up) where unit u needs class b and passes the gate
-    uc = unit_class[graph_idx]                              # (A, U, Kc)
-    cand = qtile[..., None] - class_warmup[jnp.maximum(uc, 0)]
-    gate = ok[..., None] & (uc >= 0)
-    cls = uc[..., None] == jnp.arange(B)                    # (A, U, Kc, B)
-    hit = cls & gate[..., None]
-    trigger = jnp.min(jnp.where(hit, cand[..., None], ARRIVAL_NEVER),
-                      axis=(1, 2))                          # (A, B)
-    reach = jnp.max(jnp.where(hit, p_reach[..., None, None], 0.0),
-                    axis=(1, 2))                            # (A, B)
-    return trigger, reach
-
-
-def _walk_total(samples, counts, cum_trans, graph_idx, start, executed,
-                attained, key_ids, refresh_ids, base_key, seed,
-                ov_samples, ov_counts, valid, *,
-                n_walkers, max_steps, walker, impl, with_overrides,
-                compact_after, compact_shrink, with_prewarm):
-    """The shared walk section of both pipelines: (A,) queue rows -> TOTAL
-    demand samples ``(total (A, W), arr (A, W, U) | None, spill)``."""
-    arr = None
-    if walker == "threefry":
-        # the composed path's walker verbatim — ONE implementation carries
-        # the fold_in chain, so fused/composed bit-identity cannot drift
-        out = _mc_walk_batch(samples, counts, cum_trans,
-                             graph_idx, start, executed,
-                             base_key, key_ids, refresh_ids,
-                             ov_samples, ov_counts, n_walkers, max_steps,
-                             track_arrivals=with_prewarm)
-        rem, arr = out if with_prewarm else (out, None)
-        spill = jnp.zeros((), jnp.int32)
-    elif walker == "pallas":
-        streams = walker_streams(seed, key_ids, refresh_ids)
-        out = pdgraph_walk(
-            samples, counts, cum_trans, graph_idx, start, executed, streams,
-            ov_samples if with_overrides else None,
-            ov_counts if with_overrides else None,
-            valid=valid, n_walkers=n_walkers, max_steps=max_steps,
-            impl=impl, compact_after=compact_after,
-            compact_shrink=compact_shrink, track_arrivals=with_prewarm)
-        (rem, arr, spill) = out if with_prewarm else (out[0], None, out[1])
-    else:
-        raise ValueError(f"unknown walker {walker!r}")
-    total = attained[:, None] + jnp.maximum(rem, 0.0)
-    return total, arr, spill
-
-
-def _triage_stats(total):
-    """On-device §3.3 triage scalars for the composite policies: the same
-    (P_sup, P_hopeless, mean) the host ``_demand_stats`` pulls from raw
-    samples — computed here before the sample matrix dies on device."""
-    sup = jnp.quantile(total, SUP_Q, axis=1)
-    opt = jnp.quantile(total, HOPELESS_Q, axis=1)
-    return sup, opt, total.mean(axis=1)
-
-
-@partial(jax.jit, static_argnames=("n_walkers", "max_steps", "n_buckets",
-                                   "walker", "impl", "with_overrides",
-                                   "compact_after", "compact_shrink",
-                                   "with_prewarm", "with_triage"))
-def _fused_pipeline(samples, counts, cum_trans,        # KB: (G,U,S),(G,U),(G,U,U+1)
-                    graph_idx, start, executed, attained,   # (A,) queue state
-                    key_ids, refresh_ids,                   # (A,) RNG stream ids
-                    base_key, seed,                         # threefry / counter seeds
-                    ov_samples, ov_counts,                  # (A,U,So), (A,U)
-                    valid,                                  # (A,) bool queue rows
-                    stretch,                                # (A,) wall/service EWMA
-                    unit_class, class_warmup, prewarm_k,    # prewarm tables + K
-                    *, n_walkers: int, max_steps: int, n_buckets: int,
-                    walker: str, impl: Optional[str], with_overrides: bool,
-                    compact_after: int, compact_shrink: int,
-                    with_prewarm: bool, with_triage: bool):
-    """walk → bucketize → rank (→ triage quantiles → prewarm triggers), one
-    dispatch.  Returns (ranks, probs, edges, spill, trigger, reach, sup,
-    opt, mean) — all shaped (A, ...), A padded to a power of two by the
-    caller; trigger/reach are ``None`` without ``with_prewarm``, the triage
-    scalars ``None`` without ``with_triage``.  The (A, W) sample matrix and
-    the (A, W, U) arrival tensor never reach the host."""
-    total, arr, spill = _walk_total(
-        samples, counts, cum_trans, graph_idx, start, executed, attained,
-        key_ids, refresh_ids, base_key, seed, ov_samples, ov_counts, valid,
-        n_walkers=n_walkers, max_steps=max_steps, walker=walker, impl=impl,
-        with_overrides=with_overrides, compact_after=compact_after,
-        compact_shrink=compact_shrink, with_prewarm=with_prewarm)
-    probs, edges = to_histogram_rows_jnp(total, n_buckets)
-    ranks = gittins_rank_core(probs, edges, attained)
-    sup = opt = mean = None
-    if with_triage:
-        sup, opt, mean = _triage_stats(total)
-    trigger = reach = None
-    if with_prewarm:
-        trigger, reach = _prewarm_triggers(arr, graph_idx, unit_class,
-                                           class_warmup, prewarm_k,
-                                           n_buckets, stretch)
-    return ranks, probs, edges, spill, trigger, reach, sup, opt, mean
-
-
-@partial(jax.jit, static_argnames=("n_walkers", "max_steps", "n_buckets",
-                                   "walker", "impl", "with_overrides",
-                                   "compact_after", "compact_shrink",
-                                   "with_prewarm", "with_triage"))
-def _delta_pipeline(samples, counts, cum_trans,        # packed KB tables
-                    graph_idx, start, executed, attained,   # (D,) dirty rows
-                    key_ids, refresh_ids, base_key, seed,
-                    ov_samples, ov_counts, valid, stretch,  # (D, ...) rows
-                    slot_idx,                               # (D,) arena slots
-                    d_probs, d_edges,                       # (cap, nb) arena
-                    attained_all,                           # (cap,)
-                    unit_class, class_warmup, prewarm_k,
-                    *, n_walkers: int, max_steps: int, n_buckets: int,
-                    walker: str, impl: Optional[str], with_overrides: bool,
-                    compact_after: int, compact_shrink: int,
-                    with_prewarm: bool, with_triage: bool):
-    """The delta tick: walk ONLY the gathered dirty rows, scatter their
-    fresh histogram rows back into the persistent device arena, and re-rank
-    every slot in place from the persisted histograms at the current
-    attained service.  ``slot_idx`` padding rows carry an out-of-bounds
-    index and are dropped by the scatter.  Returns ``(d_probs', d_edges',
-    ranks (cap,), spill, sup, opt, mean, trigger, reach)`` — the last five
-    sized by the dirty set, not the arena."""
-    total, arr, spill = _walk_total(
-        samples, counts, cum_trans, graph_idx, start, executed, attained,
-        key_ids, refresh_ids, base_key, seed, ov_samples, ov_counts, valid,
-        n_walkers=n_walkers, max_steps=max_steps, walker=walker, impl=impl,
-        with_overrides=with_overrides, compact_after=compact_after,
-        compact_shrink=compact_shrink, with_prewarm=with_prewarm)
-    probs, edges = to_histogram_rows_jnp(total, n_buckets)
-    d_probs = d_probs.at[slot_idx].set(probs, mode="drop")
-    d_edges = d_edges.at[slot_idx].set(edges, mode="drop")
-    # rank-in-place: per-row math over the whole arena — bit-identical per
-    # row to ranking the (D, nb) rows alone, so delta == full re-walk for
-    # the dirty set; holes produce garbage ranks the host never reads
-    ranks = gittins_rank_core(d_probs, d_edges, attained_all)
-    sup = opt = mean = None
-    if with_triage:
-        sup, opt, mean = _triage_stats(total)
-    trigger = reach = None
-    if with_prewarm:
-        trigger, reach = _prewarm_triggers(arr, graph_idx, unit_class,
-                                           class_warmup, prewarm_k,
-                                           n_buckets, stretch)
-    return d_probs, d_edges, ranks, spill, sup, opt, mean, trigger, reach
-
-
-class QueueState:
-    """Persistent per-application slot store (the fused-mode data backbone).
-
-    A fixed-capacity power-of-two arena of per-app rows; capacity grows by
-    doubling and every live application keeps ONE slot id for its whole
-    lifetime (``admit`` pops the host free-list, ``retire`` pushes back —
-    holes are masked, never compacted away, so device-resident result rows
-    stay slot-aligned across membership churn).  Host input rows are
-    mutated in place O(1) per scheduler event; ``mark_dirty`` accumulates
-    the slots whose PDGraph position changed (admission, unit transition,
-    refinement override) for the next delta walk.  Result rows:
-
-    * ``d_probs`` / ``d_edges`` — (cap, n_buckets) histogram rows, DEVICE
-      resident; written only by dispatch scatters, read by rank-in-place.
-    * ``sup`` / ``opt`` / ``mean`` — (cap,) triage scalars, host mirrors for
-      the composite policies (written from the dirty rows each dispatch).
-    * ``trig`` / ``reach`` — (cap, B) prewarm rows, host mirrors the
-      batched planner reads (`plan_from_store`)."""
-
-    def __init__(self, packed: PackedKB, capacity: int = 64):
-        self.n_units = packed.n_units
-        self.max_samples = packed.n_samples
-        cap = max(_pow2_ceil(capacity), 1)
-        self.graph_idx = np.zeros(cap, np.int32)
-        self.start = np.zeros(cap, np.int32)
-        self.executed = np.zeros(cap, np.float32)
-        self.attained = np.zeros(cap, np.float32)
-        self.key_id = np.zeros(cap, np.int32)
-        self.refresh_id = np.zeros(cap, np.int32)
-        self.deadline = np.full(cap, np.inf, np.float32)
-        self.stretch = np.ones(cap, np.float32)
-        self.ov_samples = np.zeros((cap, self.n_units, 1), np.float32)
-        self.ov_counts = np.zeros((cap, self.n_units), np.int32)
-        self.ids: List[Optional[str]] = [None] * cap
-        self.slot: Dict[str, int] = {}
-        self._occ = np.zeros(cap, bool)
-        self._free: List[int] = list(range(cap - 1, -1, -1))
-        self.live = 0
-        self.dirty: set = set()
-        self.override_apps = 0       # apps with >= 1 active override row
-        self.kb_token = None         # packed-KB version tag (rebuild guard)
-        # result rows (allocated lazily, once n_buckets / n_classes known)
-        self._nb: Optional[int] = None
-        self.d_probs = None          # (cap, nb) jnp — device resident
-        self.d_edges = None
-        self.sup = np.zeros(cap, np.float32)
-        self.opt = np.zeros(cap, np.float32)
-        self.mean = np.zeros(cap, np.float32)
-        self.trig: Optional[np.ndarray] = None    # (cap, B)
-        self.reach: Optional[np.ndarray] = None
-
-    def __len__(self) -> int:
-        return self.live
-
-    @property
-    def capacity(self) -> int:
-        return self.graph_idx.shape[0]
-
-    def occupied(self) -> np.ndarray:
-        """Slot ids of all live applications, ascending."""
-        return np.nonzero(self._occ)[0]
-
-    # ------------------------------------------------------------- capacity
-    _ROWS = ("graph_idx", "start", "executed", "attained", "key_id",
-             "refresh_id", "deadline", "stretch", "ov_samples", "ov_counts",
-             "sup", "opt", "mean")
-
-    def _grow(self) -> None:
-        old = self.capacity
-        for name in self._ROWS + (("trig", "reach")
-                                  if self.trig is not None else ()):
-            a = getattr(self, name)
-            b = np.zeros((old * 2,) + a.shape[1:], a.dtype)
-            b[:old] = a
-            setattr(self, name, b)
-        self.deadline[old:] = np.inf
-        self.stretch[old:] = 1.0
-        if self.trig is not None:
-            self.trig[old:] = ARRIVAL_NEVER
-        self.ids.extend([None] * old)
-        self._occ = np.concatenate([self._occ, np.zeros(old, bool)])
-        self._free.extend(range(old * 2 - 1, old - 1, -1))
-        if self.d_probs is not None:
-            pad = jnp.zeros((old, self._nb), jnp.float32)
-            self.d_probs = jnp.concatenate([self.d_probs, pad])
-            self.d_edges = jnp.concatenate([self.d_edges, pad])
-
-    def _grow_override_width(self, width: int) -> None:
-        width = min(_pow2_ceil(width), self.max_samples)
-        if width <= self.ov_samples.shape[2]:
-            return
-        b = np.zeros(self.ov_samples.shape[:2] + (width,), np.float32)
-        b[:, :, :self.ov_samples.shape[2]] = self.ov_samples
-        self.ov_samples = b
-
-    def ensure_result_rows(self, n_buckets: int,
-                           n_classes: Optional[int] = None) -> None:
-        """Allocate (or re-shape) the persisted result rows."""
-        cap = self.capacity
-        if self._nb != n_buckets or self.d_probs is None:
-            self._nb = n_buckets
-            self.d_probs = jnp.zeros((cap, n_buckets), jnp.float32)
-            self.d_edges = jnp.zeros((cap, n_buckets), jnp.float32)
-        if n_classes is not None and (
-                self.trig is None or self.trig.shape[1] != n_classes):
-            self.trig = np.full((cap, n_classes), ARRIVAL_NEVER, np.float32)
-            self.reach = np.zeros((cap, n_classes), np.float32)
-
-    # ------------------------------------------------------------ lifecycle
-    def admit(self, app_id: str, graph_idx: int, start: int, key_id: int,
-              refresh_id: int = 0, deadline: Optional[float] = None,
-              stretch: float = 1.0) -> int:
-        """Take a free slot for a new application (grow by doubling when the
-        arena is full).  The slot is marked dirty — it must be walked before
-        its first rank is consumed (its result rows are a previous tenant's
-        or zeros)."""
-        if not self._free:
-            self._grow()
-        i = self._free.pop()
-        self.ids[i] = app_id
-        self.slot[app_id] = i
-        self._occ[i] = True
-        self.live += 1
-        self.graph_idx[i] = graph_idx
-        self.start[i] = start
-        self.executed[i] = 0.0
-        self.attained[i] = 0.0
-        self.key_id[i] = key_id
-        self.refresh_id[i] = refresh_id
-        self.deadline[i] = np.inf if deadline is None else deadline
-        self.stretch[i] = stretch
-        self.ov_counts[i] = 0
-        self.dirty.add(i)
-        return i
-
-    def retire(self, app_id: str) -> None:
-        """Release an application's slot back to the free-list.  The row's
-        values stay in place (stale-but-in-bounds — dispatches mask holes),
-        ready to be overwritten by the next admit."""
-        i = self.slot.pop(app_id, None)
-        if i is None:
-            return
-        if self.ov_counts[i].any():
-            self.override_apps -= 1
-        self.ids[i] = None
-        self._occ[i] = False
-        self.live -= 1
-        self.ov_counts[i] = 0
-        self.dirty.discard(i)
-        self._free.append(i)
-
-    def mark_dirty(self, app_id: str) -> None:
-        i = self.slot.get(app_id)
-        if i is not None:
-            self.dirty.add(i)
-
-    def take_dirty(self) -> np.ndarray:
-        """Drain the dirty set (ascending slot ids).  The caller decides
-        whether to walk exactly these or fall back to the full occupied
-        set when the dirty fraction makes gather/scatter a bad trade."""
-        d = np.asarray(sorted(self.dirty), np.int64)
-        self.dirty.clear()
-        return d
-
-    # --------------------------------------------------------------- events
-    def set_unit(self, app_id: str, unit_idx: int) -> None:
-        i = self.slot[app_id]
-        self.start[i] = unit_idx
-        self.executed[i] = 0.0
-        self.dirty.add(i)
-
-    def add_progress(self, app_id: str, delta: float) -> None:
-        # progress does NOT dirty the slot: the TOTAL-demand histogram stays
-        # valid and rank-in-place re-ranks at the new attained each tick
-        i = self.slot[app_id]
-        self.executed[i] += delta
-        self.attained[i] += delta
-
-    def set_override(self, app_id: str, unit_idx: int,
-                     arr: np.ndarray) -> None:
-        i = self.slot[app_id]
-        arr = np.asarray(arr, np.float32)[:self.max_samples]
-        if len(arr) == 0:
-            return
-        self._grow_override_width(len(arr))
-        arr = arr[:self.ov_samples.shape[2]]
-        if not self.ov_counts[i].any():
-            self.override_apps += 1
-        self.ov_samples[i, unit_idx, :len(arr)] = arr
-        self.ov_counts[i, unit_idx] = len(arr)
-        self.dirty.add(i)
-
-    def get_deadline(self, slot: int) -> Optional[float]:
-        """Slot's deadline row (None when the app has no deadline) — the
-        store is the view-refresh source for per-slot scalars in delta
-        mode."""
-        d = self.deadline[slot]
-        return None if np.isinf(d) else float(d)
-
-    def set_stretch(self, app_id: str, stretch: float) -> None:
-        self.stretch[self.slot[app_id]] = stretch
-
-    def bump_refresh(self, slots: np.ndarray) -> None:
-        self.refresh_id[slots] += 1
-
-    # ------------------------------------------------------------- dispatch
-    def gather(self, slots: np.ndarray) -> Tuple[np.ndarray, ...]:
-        """Padded dispatch view of a slot subset, padded to a power of two
-        by repeating the first row (padding rows are valid-but-discarded)."""
-        n = len(slots)
-        ap = max(_pow2_ceil(n), 1)
-        pad_slot = int(slots[0]) if n else 0
-        idx = np.concatenate([np.asarray(slots, np.int64),
-                              np.full(ap - n, pad_slot, np.int64)])
-        return (self.graph_idx[idx], self.start[idx], self.executed[idx],
-                self.attained[idx], self.key_id[idx], self.refresh_id[idx],
-                self.stretch[idx], self.ov_samples[idx], self.ov_counts[idx])
-
-
-def build_queue_state(packed: PackedKB, apps: Sequence, kb_token=None
-                      ) -> QueueState:
-    """Rebuild a QueueState from live AppRuntime records (used on first
-    fused refresh and whenever the packed KB tables change shape/content).
-    Every admitted slot starts dirty, so the first delta tick after a
-    rebuild re-walks the whole queue."""
-    qs = QueueState(packed, capacity=max(len(apps), 64))
-    qs.kb_token = kb_token
-    for a in apps:
-        g = packed.graph_index[a.app_name]
-        start = (packed.unit_index[g][a.current_unit] if a.current_unit
-                 else int(packed.entry[g]))
-        i = qs.admit(a.app_id, g, start, a.key_id, a.refreshes,
-                     deadline=a.deadline,
-                     stretch=getattr(a, "queue_stretch", 1.0))
-        qs.executed[i] = a.attained_in_unit
-        qs.attained[i] = a.attained
-        for name, arr in (a.overrides or {}).items():
-            uidx = packed.unit_index[g]
-            if name in uidx:
-                qs.set_override(a.app_id, uidx[name], arr)
-    return qs
-
-
-@dataclass
-class FusedRefresh:
-    """Host-side results of one fused refresh over a slot subset (all
-    row-aligned with the ``slots`` argument)."""
-    ranks: np.ndarray                  # (A,)
-    probs: np.ndarray                  # (A, n_buckets)
-    edges: np.ndarray                  # (A, n_buckets)
-    spill: int
-    trigger: Optional[np.ndarray]      # (A, B) | None
-    reach: Optional[np.ndarray]        # (A, B) | None
-    sup: Optional[np.ndarray]          # (A,) | None  (with_triage)
-    opt: Optional[np.ndarray]
-    mean: Optional[np.ndarray]
-
-
-def _prewarm_args(packed, prewarm_table):
-    if prewarm_table is not None:
-        return (jnp.asarray(prewarm_table.unit_class),
-                jnp.asarray(prewarm_table.warmup))
-    # 1-class placeholders keep the arg list static-shape friendly
-    return (jnp.full((packed.samples.shape[0], packed.n_units, 1), -1,
-                     jnp.int32),
-            jnp.zeros((1,), jnp.float32))
-
-
-def _dispatch_rows(qs: QueueState, slots: np.ndarray, packed: PackedKB,
-                   prewarm_table):
-    """Shared host-side marshalling for both refresh entry points: padded
-    row gather, override-width trim, prewarm constants."""
-    gi, start, executed, attained, kid, rid, stretch, ovs, ovc = \
-        qs.gather(slots)
-    with_ov = qs.override_apps > 0
-    if not with_ov and ovs.shape[2] > 1:
-        ovs = ovs[:, :, :1]                  # keep the no-override jit cache
-    uc, wt = _prewarm_args(packed, prewarm_table)
-    return gi, start, executed, attained, kid, rid, stretch, ovs, ovc, \
-        with_ov, uc, wt
-
-
-def _store_results(qs: QueueState, slots: np.ndarray, n_buckets: int,
-                   n_classes, sup, opt, mean, trigger, reach) -> None:
-    """Write one dispatch's per-slot results into the store's host mirrors
-    (the single write-back path for both refresh entry points)."""
-    qs.ensure_result_rows(n_buckets, n_classes)
-    if sup is not None:
-        qs.sup[slots] = sup
-        qs.opt[slots] = opt
-        qs.mean[slots] = mean
-    if trigger is not None:
-        qs.trig[slots] = trigger
-        qs.reach[slots] = reach
-
-
-def refresh_ranks_fused(packed: PackedKB, qs: QueueState, base_key, seed,
-                        *, slots: Optional[np.ndarray] = None,
-                        n_walkers: int = 512, max_steps: int = 64,
-                        n_buckets: int = N_BUCKETS, walker: str = "pallas",
-                        impl: Optional[str] = None,
-                        compact_after: int = 16, compact_shrink: int = 4,
-                        prewarm_table=None, prewarm_k: float = 0.5,
-                        with_triage: bool = False) -> FusedRefresh:
-    """One fused refresh over a slot subset (default: every occupied slot).
-
-    Returns a :class:`FusedRefresh` of host arrays — the (A, n_walkers)
-    sample matrix stays on device.  Fresh triage scalars and prewarm
-    trigger/reach rows are also written into the store's host mirrors, so
-    the planner can read arrival rows without holding this return value.
-    Does NOT bump refresh ids; callers bump after consuming."""
-    if slots is None:
-        slots = qs.occupied()
-    A = len(slots)
-    if A == 0:
-        # same field contract as the dispatch path: optional outputs are
-        # None exactly when their feature is off, zero-length otherwise
-        z = np.zeros((0, n_buckets), np.float32)
-        zs = np.zeros(0, np.float32)
-        zt = (np.zeros((0, prewarm_table.n_classes), np.float32)
-              if prewarm_table is not None else None)
-        tri = zs if with_triage else None
-        return FusedRefresh(zs, z, z, 0, zt, zt, tri, tri, tri)
-    gi, start, executed, attained, kid, rid, stretch, ovs, ovc, with_ov, \
-        uc, wt = _dispatch_rows(qs, slots, packed, prewarm_table)
-    with_pw = prewarm_table is not None
-    ranks, probs, edges, spill, trigger, reach, sup, opt, mean = \
-        _fused_pipeline(
-            packed.samples, packed.counts, packed.cum_trans,
-            jnp.asarray(gi), jnp.asarray(start), jnp.asarray(executed),
-            jnp.asarray(attained), jnp.asarray(kid), jnp.asarray(rid),
-            base_key, np.uint32(int(seed) & 0xFFFFFFFF),
-            jnp.asarray(ovs), jnp.asarray(ovc),
-            jnp.asarray(np.arange(len(gi)) < A), jnp.asarray(stretch),
-            uc, wt, jnp.float32(prewarm_k),
-            n_walkers=n_walkers, max_steps=max_steps, n_buckets=n_buckets,
-            walker=walker, impl=impl, with_overrides=with_ov,
-            compact_after=compact_after, compact_shrink=compact_shrink,
-            with_prewarm=with_pw, with_triage=with_triage)
-    out = FusedRefresh(
-        np.asarray(ranks)[:A], np.asarray(probs)[:A], np.asarray(edges)[:A],
-        int(spill),
-        np.asarray(trigger)[:A] if with_pw else None,
-        np.asarray(reach)[:A] if with_pw else None,
-        np.asarray(sup)[:A] if with_triage else None,
-        np.asarray(opt)[:A] if with_triage else None,
-        np.asarray(mean)[:A] if with_triage else None)
-    _store_results(qs, slots, n_buckets,
-                   prewarm_table.n_classes if with_pw else None,
-                   out.sup, out.opt, out.mean, out.trigger, out.reach)
-    return out
-
-
-@dataclass
-class DeltaTick:
-    """Results of one delta tick: arena-wide ranks plus the set of slots
-    whose estimates were actually re-walked."""
-    ranks: np.ndarray          # (capacity,) — index by slot id; holes garbage
-    spill: int
-    walked: np.ndarray         # slot ids re-walked (and scattered) this tick
-
-
-def refresh_ranks_delta(packed: PackedKB, qs: QueueState, base_key, seed,
-                        *, walked: np.ndarray,
-                        n_walkers: int = 512, max_steps: int = 64,
-                        n_buckets: int = N_BUCKETS, walker: str = "pallas",
-                        impl: Optional[str] = None,
-                        compact_after: int = 16, compact_shrink: int = 4,
-                        prewarm_table=None, prewarm_k: float = 0.5,
-                        with_triage: bool = False) -> DeltaTick:
-    """One delta tick over the slot store: walk ``walked`` (normally the
-    drained dirty set), scatter their histogram rows into the device arena,
-    re-rank every slot in place.  With an empty ``walked`` the tick is a
-    pure rank-in-place dispatch — no MC walk at all.  Fresh triage scalars
-    and trigger/reach rows land in the store's host mirrors for exactly the
-    walked slots.  Does NOT bump refresh ids; callers bump ``walked`` after
-    consuming."""
-    qs.ensure_result_rows(n_buckets,
-                          prewarm_table.n_classes if prewarm_table else None)
-    att_all = jnp.asarray(qs.attained)
-    D = len(walked)
-    if D == 0:
-        ranks = gittins_rank_hist(qs.d_probs, qs.d_edges, att_all)
-        return DeltaTick(np.asarray(ranks), 0, walked)
-    gi, start, executed, attained, kid, rid, stretch, ovs, ovc, with_ov, \
-        uc, wt = _dispatch_rows(qs, walked, packed, prewarm_table)
-    ap = len(gi)
-    with_pw = prewarm_table is not None
-    # padding rows scatter out of bounds -> dropped (never clobber a slot)
-    slot_idx = np.concatenate([np.asarray(walked, np.int64),
-                               np.full(ap - D, qs.capacity, np.int64)])
-    (qs.d_probs, qs.d_edges, ranks, spill, sup, opt, mean, trigger,
-     reach) = _delta_pipeline(
-        packed.samples, packed.counts, packed.cum_trans,
-        jnp.asarray(gi), jnp.asarray(start), jnp.asarray(executed),
-        jnp.asarray(attained), jnp.asarray(kid), jnp.asarray(rid),
-        base_key, np.uint32(int(seed) & 0xFFFFFFFF),
-        jnp.asarray(ovs), jnp.asarray(ovc),
-        jnp.asarray(np.arange(ap) < D), jnp.asarray(stretch),
-        jnp.asarray(slot_idx), qs.d_probs, qs.d_edges, att_all,
-        uc, wt, jnp.float32(prewarm_k),
-        n_walkers=n_walkers, max_steps=max_steps, n_buckets=n_buckets,
-        walker=walker, impl=impl, with_overrides=with_ov,
-        compact_after=compact_after, compact_shrink=compact_shrink,
-        with_prewarm=with_pw, with_triage=with_triage)
-    _store_results(qs, walked, n_buckets,
-                   prewarm_table.n_classes if with_pw else None,
-                   np.asarray(sup)[:D] if with_triage else None,
-                   np.asarray(opt)[:D] if with_triage else None,
-                   np.asarray(mean)[:D] if with_triage else None,
-                   np.asarray(trigger)[:D] if with_pw else None,
-                   np.asarray(reach)[:D] if with_pw else None)
-    return DeltaTick(np.asarray(ranks), int(spill), walked)
+__all__ = [
+    "QueueState", "build_queue_state",
+    "FusedRefresh", "DeltaTick", "refresh_ranks_fused", "refresh_ranks_delta",
+    "MeshTick", "RefreshMesh", "refresh_ranks_mesh",
+]

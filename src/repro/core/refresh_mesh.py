@@ -1,0 +1,455 @@
+"""Mesh-sharded refresh backbone: the delta pipeline across N devices.
+
+``RefreshMesh`` partitions the slot arena over a 1-D device mesh
+(``("shard",)``): shard *s* owns every slot with ``slot % n_shards == s``
+(see :mod:`repro.core.arena` for why residue placement, and for the
+shard-major device-row layout that makes each shard's rows one contiguous
+block).  Each tick is ONE jitted ``shard_map`` dispatch in which every
+shard, entirely locally,
+
+1. walks ITS dirty rows (shard-local RNG streams — keyed by the apps'
+   own (key id, refresh id) pairs, so placement cannot change a single
+   drawn bit),
+2. scatters the fresh demand + arrival histogram rows into ITS arena
+   block,
+3. re-ranks ITS stale rows (walked ∪ progressed) from the persisted
+   histograms at the current attained service, and
+4. (prewarming) re-conditions ITS trigger rows on elapsed service.
+
+No collective ever runs: the only cross-shard "communication" is the host
+gather of the small per-tick results — the stale-row ranks, the walked
+rows' triage scalars, and the trigger rows the merged ``PrewarmPlan`` is
+built from.  Sample matrices, arrival tensors and histogram arenas stay
+sharded on their devices for their whole life.
+
+Because every stage is per-row math and the RNG is position-independent,
+the mesh tick is **bit-identical** to the single-shard delta path for the
+same slot placement — at any shard count, under any dirty-set partition
+(pinned by ``tests/test_refresh_mesh.py``).
+
+Unlike the single-arena path (which re-ranks the whole arena each tick —
+cheap at one device, pure waste times N at mesh scale), the mesh tick
+ranks only the *stale* rows and serves everyone else from the arena's
+host rank mirror; with churn at a few percent per tick, per-tick host
+traffic shrinks from O(capacity) to O(churn).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.arena import QueueState
+from repro.core.gittins import N_BUCKETS, gittins_rank_core, \
+    to_histogram_rows_jnp
+from repro.core.pdgraph import PackedKB
+from repro.core.refresh_pipeline import (_arrival_hists, _triage_stats,
+                                         _triggers_from_hists, _walk_total)
+from repro.kernels.pdgraph_walk.ops import pad_rows
+
+
+class RefreshMesh:
+    """A 1-D device mesh the slot arena is partitioned over.
+
+    ``n_shards`` must be a power of two and at most the number of visible
+    devices (CI forces host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  One shard per
+    device; ``n_shards=1`` is the degenerate mesh used to A/B the sharded
+    pipeline against the single-arena path on one device."""
+
+    def __init__(self, n_shards: int = 1, devices=None):
+        if n_shards < 1 or n_shards & (n_shards - 1):
+            raise ValueError(f"n_shards must be a power of two, got "
+                             f"{n_shards}")
+        devices = list(jax.devices() if devices is None else devices)
+        if n_shards > len(devices):
+            raise ValueError(
+                f"RefreshMesh wants {n_shards} shards but only "
+                f"{len(devices)} devices are visible (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n_shards} for a "
+                f"CPU mesh)")
+        self.n_shards = n_shards
+        self.mesh = Mesh(np.asarray(devices[:n_shards]), ("shard",))
+        self._rep: dict = {}     # id -> (source ref, replicated placement)
+
+    # id-keyed replicated entries kept before the oldest are evicted: a few
+    # KB generations' worth — online refinement retunes graphs and repacks
+    # the tables, and without eviction every superseded table set would stay
+    # pinned (host array + one replica per device) for the mesh's lifetime
+    _REP_CAP = 32
+
+    def replicated(self, arr):
+        """Per-mesh cache of fully-replicated placements for slow-changing
+        constants (packed KB tables, prewarm tables, the base key).  Without
+        this every tick re-broadcasts each constant to all shards — at 8
+        devices that is hundreds of buffer puts per dispatch, more host time
+        than the walk itself."""
+        key = id(arr)
+        ent = self._rep.get(key)
+        if ent is None or ent[0] is not arr:
+            ent = (arr, jax.device_put(arr, NamedSharding(self.mesh, P())))
+            self._rep[key] = ent
+            self._evict()
+        return ent[1]
+
+    def _evict(self) -> None:
+        """Drop the oldest id-keyed entries past _REP_CAP (insertion order).
+        String-keyed placeholders ("zeros" rows) are bounded by construction
+        and exempt — they are shared across KB generations."""
+        idk = [k for k in self._rep if not isinstance(k, str)
+               and not (isinstance(k, tuple) and isinstance(k[0], str)
+                        and k[0] == "zeros")]
+        for k in idk[:max(len(idk) - self._REP_CAP, 0)]:
+            del self._rep[k]
+
+    def prewarm_constants(self, packed, prewarm_table):
+        """Replicated (unit_class, warmup) — the real tables when prewarming,
+        the packed-KB-shaped placeholders otherwise (cached either way)."""
+        if prewarm_table is not None:
+            return (self.replicated(prewarm_table.unit_class),
+                    self.replicated(prewarm_table.warmup))
+        key = ("pw_placeholder", id(packed))
+        ent = self._rep.get(key)
+        if ent is None or ent[0] is not packed:
+            from repro.core.refresh_pipeline import _prewarm_args
+            uc, wt = _prewarm_args(packed, None)
+            rep = NamedSharding(self.mesh, P())
+            ent = (packed, (jax.device_put(uc, rep),
+                            jax.device_put(wt, rep)))
+            self._rep[key] = ent
+            self._evict()
+        return ent[1]
+
+    def zeros_rows(self, key: str, width: int, dtype) -> jnp.ndarray:
+        """Cached row-sharded zero placeholders for the disabled-feature
+        argument slots (one element — or ``width`` trailing ones — per
+        shard), so feature-off ticks upload nothing for them."""
+        ent = self._rep.get(("zeros", key))
+        if ent is None:
+            shape = (self.n_shards,) if width == 0 else (self.n_shards, width)
+            arr = jax.device_put(jnp.zeros(shape, dtype),
+                                 self.row_sharding(len(shape)))
+            ent = (None, arr)
+            self._rep[("zeros", key)] = ent
+        return ent[1]
+
+    def row_sharding(self, ndim: int) -> NamedSharding:
+        """Rows (leading axis) split across shards, trailing dims whole."""
+        return NamedSharding(self.mesh, P("shard", *([None] * (ndim - 1))))
+
+    def place(self, arr):
+        """Commit a device-arena array to its shard-major row sharding
+        (no-op when already placed)."""
+        want = self.row_sharding(arr.ndim)
+        if getattr(arr, "sharding", None) == want:
+            return arr
+        return jax.device_put(arr, want)
+
+    def place_state(self, qs: QueueState) -> None:
+        """(Re)commit the store's device rows after allocation or growth."""
+        for name in ("d_probs", "d_edges", "a_hist", "a_lo", "a_span",
+                     "a_reach"):
+            a = getattr(qs, name)
+            if a is not None:
+                setattr(qs, name, self.place(a))
+
+
+@dataclass
+class MeshTick:
+    """Results of one mesh tick.  ``ranks`` aligns with ``ranked`` (the
+    stale slots actually re-ranked this tick); every other per-slot result
+    lands in the store's host mirrors (``rank``/``sup``/``trig``/…)."""
+    ranks: np.ndarray          # (R,) — row-aligned with `ranked`
+    spill: int
+    walked: np.ndarray         # slot ids re-walked this tick
+    ranked: np.ndarray         # slot ids re-ranked this tick
+
+
+def _mesh_schedule(compact_after: int, compact_shrink: int,
+                   n_lanes: int) -> Tuple[Tuple[int, int], ...]:
+    """Per-shard multi-stage compaction schedule, sized by the shard's lane
+    count (static at trace time).
+
+    Walker absorption keeps decaying long after the single PR-4 compaction
+    point — measured on the app suite at benchmark scale: ~9.4% of lanes
+    alive at step 12 (vs 25% capacity), ~2.2% at 28 (vs 6.25%), ~0.7% at 44
+    (vs 1.6%) — so at large batches three stages cut the tail-phase walk
+    cost ~40% while every stage keeps a >2x *average* capacity margin.
+    Small per-shard batches (a few dirty rows x walkers) don't average:
+    one slow-absorbing row is a triple-digit slice of a small stage
+    capacity, so under 16k lanes the schedule stays the classic
+    conservative single stage.  Compaction is exact, so the schedule
+    changes no bits unless a stage spills (surfaced per shard).  A caller
+    who tuned the single-stage knobs away from the (16, 4) default keeps
+    their stage, extended with one 4x-shrink tail stage; a caller who
+    DISABLED compaction (shrink <= 1 or a degenerate step — the legacy
+    gate's off switches) keeps it disabled, never silently re-enabled."""
+    if compact_shrink <= 1 or compact_after <= 0:
+        return ((compact_after, compact_shrink),)      # off stays off
+    if (compact_after, compact_shrink) != (16, 4):
+        return ((compact_after, compact_shrink),
+                (compact_after * 2, compact_shrink * 4))
+    if n_lanes >= 16384:
+        return ((12, 4), (28, 16), (44, 64))
+    return ((compact_after, compact_shrink),)
+
+
+# bitcast-carrier column layout (host packs, shard_fn unpacks; int32 columns
+# travel as raw float32 bit patterns — transfers and bitcasts are bit-exact)
+_COL_GI, _COL_START, _COL_KID, _COL_RID, _COL_SCAT = range(5)
+_COL_EXEC, _COL_ATT, _COL_STRETCH, _COL_RANK_ROW, _COL_RANK_ATT = range(5, 10)
+_N_COLS = 10
+
+
+@lru_cache(maxsize=None)
+def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
+               n_buckets: int, walker: str, impl: Optional[str],
+               with_overrides: bool, compact_after: int, compact_shrink: int,
+               with_prewarm: bool, with_retrigger: bool, with_triage: bool):
+    """Build (and cache per mesh + static config) the jitted shard_map tick.
+
+    ALL per-tick row state travels in ONE packed ``(n, P, _N_COLS + U)``
+    float32 carrier (int32 columns bitcast to raw float32 patterns): at 8
+    shards every separate argument costs one buffer put per device per
+    tick, so an unpacked argument list — not the walk — would dominate
+    host-side dispatch time.  Slow-changing constants (KB tables, prewarm
+    tables, base key) arrive pre-replicated through
+    :meth:`RefreshMesh.replicated`; the arena arrays are committed to their
+    row sharding and enter with zero per-tick transfer."""
+
+    def shard_fn(samples, counts, cum_trans,            # replicated KB
+                 carrier,               # (1, P, _N_COLS+U) packed row state
+                 ovs,                   # (1, P, U, So)
+                 d_probs, d_edges,      # (cap_s, nb) — the shard's arena rows
+                 a_hist, a_lo, a_span, a_reach,         # (cap_s, ...)
+                 gi_rows, delta_rows, stretch_rows,     # (cap_s,)
+                 base_key, uc, wt, prewarm_k):          # replicated
+        # NOTE two block conventions: stacked (n, ...) per-tick batches keep
+        # a leading length-1 mesh axis ([0] below); arena arrays enter in
+        # their native (cap, …) shard-major layout, so their blocks are the
+        # shard's own rows directly (no host reshape, no cross-device copy).
+        c = carrier[0]
+        as_i32 = lambda col: jax.lax.bitcast_convert_type(   # noqa: E731
+            c[:, col], jnp.int32)
+        gi, start, kid, rid, scat = (as_i32(i) for i in range(5))
+        executed = c[:, _COL_EXEC]
+        attained = c[:, _COL_ATT]
+        stretch = c[:, _COL_STRETCH]
+        rank_rows = as_i32(_COL_RANK_ROW)[None]
+        rank_att = c[:, _COL_RANK_ATT][None]
+        ovc = jax.lax.bitcast_convert_type(c[:, _N_COLS:], jnp.int32)[None]
+        cap_s = d_probs.shape[0]
+        valid = scat < cap_s                  # padding rows carry scat=cap_s
+        total, arr, spill = _walk_total(
+            samples, counts, cum_trans, gi, start, executed,
+            attained, kid, rid, base_key, np.uint32(seed), ovs[0], ovc[0],
+            valid, n_walkers=n_walkers, max_steps=max_steps,
+            walker=walker, impl=impl, with_overrides=with_overrides,
+            compact_after=compact_after, compact_shrink=compact_shrink,
+            with_prewarm=with_prewarm,
+            compact_schedule=_mesh_schedule(compact_after, compact_shrink,
+                                            c.shape[0] * n_walkers))
+        probs, edges = to_histogram_rows_jnp(total, n_buckets)
+        dp = d_probs.at[scat].set(probs, mode="drop")
+        de = d_edges.at[scat].set(edges, mode="drop")
+        # rank ONLY the stale rows, gathered from the shard's own arena
+        # block (row-wise math: bit-identical to ranking them in place)
+        rr = jnp.minimum(rank_rows[0], cap_s - 1)
+        ranks = gittins_rank_core(dp[rr], de[rr], rank_att[0])
+        if with_triage:
+            sup, opt, mean = _triage_stats(total)
+        else:
+            sup = opt = mean = jnp.zeros((1,), jnp.float32)
+        ah, al, asp, ar = a_hist, a_lo, a_span, a_reach
+        trigger = reach = jnp.zeros((1, 1), jnp.float32)
+        if with_prewarm:
+            hist, lo, span, n_reach = _arrival_hists(arr, n_buckets)
+            ah = ah.at[scat].set(hist, mode="drop")
+            al = al.at[scat].set(lo, mode="drop")
+            asp = asp.at[scat].set(span, mode="drop")
+            ar = ar.at[scat].set(n_reach, mode="drop")
+            if with_retrigger:
+                # (cap_s, B): arena-shaped, like dp/ah — no leading axis
+                trigger, reach = _triggers_from_hists(
+                    ah, al, asp, ar, n_walkers, delta_rows,
+                    uc[gi_rows], wt, prewarm_k, stretch_rows)
+            else:
+                tw, rw = _triggers_from_hists(
+                    hist, lo, span, n_reach, n_walkers,
+                    jnp.zeros_like(attained), uc[gi], wt, prewarm_k,
+                    stretch)
+                trigger, reach = tw[None], rw[None]     # (1, Dp, B)
+        exp = lambda x: x[None]                                # noqa: E731
+        return (dp, de, exp(ranks), spill.reshape(1),
+                exp(sup), exp(opt), exp(mean),
+                ah, al, asp, ar,
+                trigger, reach)
+
+    rows = P("shard")
+    rep = P()
+    in_specs = (rep, rep, rep,                     # KB tables
+                rows, rows,                        # carrier / ovs
+                rows, rows,                        # d_probs / d_edges
+                rows, rows, rows, rows,            # arrival arena
+                rows, rows, rows,                  # gi/delta/stretch rows
+                rep, rep, rep, rep)                # base_key/uc/wt/K
+    out_specs = (rows,) * 13
+    return jax.jit(shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False))
+
+
+def _partition(slots: np.ndarray, n: int, pad: int
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Split ascending ``slots`` by shard residue into an (n, pad) matrix
+    of global slot ids (-1 padding).  Returns (matrix, by_shard, counts)
+    where ``by_shard`` is ``slots`` reordered shard-major (ascending within
+    each shard) — the row-major order of the matrix's valid entries."""
+    sh = slots % n
+    order = np.argsort(sh, kind="stable")      # slots already ascending
+    by_shard = slots[order]
+    counts = np.bincount(sh, minlength=n)
+    mat = np.full((n, pad), -1, np.int64)
+    offs = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(len(slots)) - offs[sh[order]]
+    mat[sh[order], pos] = by_shard
+    return mat, by_shard, counts
+
+
+def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
+                       *, mesh: RefreshMesh, walked: np.ndarray,
+                       ranked: Optional[np.ndarray] = None,
+                       n_walkers: int = 512, max_steps: int = 64,
+                       n_buckets: int = N_BUCKETS, walker: str = "pallas",
+                       impl: Optional[str] = None,
+                       compact_after: int = 16, compact_shrink: int = 4,
+                       prewarm_table=None, prewarm_k: float = 0.5,
+                       retrigger: bool = True, host_work=None,
+                       with_triage: bool = False) -> MeshTick:
+    """One mesh tick: walk ``walked`` (shard-partitioned), scatter into the
+    sharded arena, re-rank ``ranked`` (default: the walked set), gather the
+    small results.  Bit-identical per slot to ``refresh_ranks_delta`` over
+    the same sets on one shard.  Does NOT bump refresh ids — but
+    ``host_work`` (if given) runs between the async dispatch and the
+    result sync, so callers can overlap their per-tick bookkeeping with
+    the device walk instead of serializing after it."""
+    n = mesh.n_shards
+    if qs.capacity % n or qs.n_shards != n:
+        raise ValueError(f"store is laid out for {qs.n_shards} shards, "
+                         f"mesh has {n}")
+    with_pw = prewarm_table is not None
+    qs.ensure_result_rows(n_buckets,
+                          prewarm_table.n_classes if with_pw else None,
+                          arrivals=with_pw)
+    mesh.place_state(qs)
+    cap, cap_s = qs.capacity, qs.shard_capacity
+    walked = np.asarray(walked, np.int64)
+    ranked = walked if ranked is None else np.asarray(ranked, np.int64)
+
+    wcounts = np.bincount(walked % n, minlength=n)
+    rcounts = np.bincount(ranked % n, minlength=n)
+    # one padded width for walked AND ranked rows: both ride the same
+    # packed carrier, one buffer put per shard per tick
+    Pp = pad_rows(max(int(wcounts.max()) if len(walked) else 1,
+                      int(rcounts.max()) if len(ranked) else 1))
+    wmat, w_by_shard, _ = _partition(walked, n, Pp)
+    rmat, r_by_shard, _ = _partition(ranked, n, Pp)
+
+    wvalid = wmat >= 0
+    widx = np.where(wvalid, wmat, 0)
+    scat = np.where(wvalid, wmat // n, cap_s)        # OOB pad -> dropped
+    rvalid = rmat >= 0
+    rank_rows = np.where(rvalid, rmat // n, cap_s)   # clamped in-body
+    rank_att = qs.attained[np.where(rvalid, rmat, 0)]
+
+    # ONE packed float32 carrier holds every per-row input (int32 columns as
+    # raw bit patterns); at 8 shards each extra argument is 8 buffer puts
+    # per tick, which would cost more host time than the walk itself
+    U = qs.n_units
+    carrier = np.empty((n, Pp, _N_COLS + U), np.float32)
+    ci = carrier.view(np.int32)
+    ci[:, :, _COL_GI] = qs.graph_idx[widx]
+    ci[:, :, _COL_START] = qs.start[widx]
+    ci[:, :, _COL_KID] = qs.key_id[widx]
+    ci[:, :, _COL_RID] = qs.refresh_id[widx]
+    ci[:, :, _COL_SCAT] = scat
+    carrier[:, :, _COL_EXEC] = qs.executed[widx]
+    carrier[:, :, _COL_ATT] = qs.attained[widx]
+    carrier[:, :, _COL_STRETCH] = qs.stretch[widx]
+    ci[:, :, _COL_RANK_ROW] = rank_rows
+    carrier[:, :, _COL_RANK_ATT] = rank_att
+    ci[:, :, _N_COLS:] = qs.ov_counts[widx]
+
+    with_ov = qs.override_apps > 0
+    ovs = qs.ov_samples[widx]
+    if not with_ov and ovs.shape[-1] > 1:
+        ovs = ovs[..., :1]                 # keep the no-override jit cache
+    uc, wt = mesh.prewarm_constants(packed, prewarm_table)
+    if with_pw and retrigger:
+        # arena-row-ordered (cap,) vectors: shard s's block is its own rows
+        row_slots = qs.row_slots()
+        delta_all = qs.attained - qs.a_att
+        if len(walked):
+            delta_all[walked] = 0.0
+        gi_rows = qs.graph_idx[row_slots]
+        delta_rows = delta_all[row_slots]
+        stretch_rows = qs.stretch[row_slots]
+    else:
+        gi_rows = mesh.zeros_rows("gi", 0, jnp.int32)
+        delta_rows = mesh.zeros_rows("f32", 0, jnp.float32)
+        stretch_rows = mesh.zeros_rows("f32", 0, jnp.float32)
+    dummy = mesh.zeros_rows("dummy2d", 1, jnp.float32)
+
+    fn = _mesh_exec(mesh.mesh, int(seed) & 0xFFFFFFFF, n_walkers, max_steps,
+                    n_buckets, walker, impl, with_ov, compact_after,
+                    compact_shrink, with_pw, retrigger and with_pw,
+                    with_triage)
+    (dp, de, ranks, spill, sup, opt, mean, ah, al, asp, ar, trigger,
+     reach) = fn(
+        mesh.replicated(packed.samples), mesh.replicated(packed.counts),
+        mesh.replicated(packed.cum_trans),
+        carrier, ovs,
+        qs.d_probs, qs.d_edges,
+        qs.a_hist if with_pw else dummy,
+        qs.a_lo if with_pw else dummy,
+        qs.a_span if with_pw else dummy,
+        qs.a_reach if with_pw else dummy,
+        gi_rows, delta_rows, stretch_rows,
+        mesh.replicated(base_key), uc, wt,
+        np.float32(prewarm_k))
+    if host_work is not None:
+        host_work()                # overlaps the asynchronous dispatch
+
+    qs.d_probs = dp
+    qs.d_edges = de
+    if with_pw:
+        qs.a_hist, qs.a_lo, qs.a_span, qs.a_reach = ah, al, asp, ar
+        qs.a_att[walked] = qs.attained[walked]
+
+    # ranks: row-major valid entries align with the shard-major slot order
+    rank_vals = np.asarray(ranks)[rvalid]
+    qs.rank[r_by_shard] = rank_vals
+    if with_triage and len(walked):
+        qs.sup[w_by_shard] = np.asarray(sup)[wvalid]
+        qs.opt[w_by_shard] = np.asarray(opt)[wvalid]
+        qs.mean[w_by_shard] = np.asarray(mean)[wvalid]
+    if with_pw:
+        if retrigger:
+            # (cap, B) in device-row order -> slot order
+            rows = qs.device_rows(np.arange(cap, dtype=np.int64))
+            qs.trig = np.asarray(trigger)[rows]
+            qs.reach = np.asarray(reach)[rows]
+        elif len(walked):
+            B = trigger.shape[-1]
+            qs.trig[w_by_shard] = np.asarray(trigger).reshape(-1, B)[
+                wvalid.ravel()]
+            qs.reach[w_by_shard] = np.asarray(reach).reshape(-1, B)[
+                wvalid.ravel()]
+    return MeshTick(qs.rank[ranked], int(np.asarray(spill).sum()),
+                    walked, ranked)

@@ -26,10 +26,11 @@ from repro.core.pdgraph import (PDGraph, mc_service_samples_batch,
 from repro.core.policies import (AppView, GittinsPolicy, Policy, VTCPolicy,
                                  make_policy)
 from repro.core.prewarm import (PrewarmPlan, PrewarmSignal,
-                                build_prewarm_table, plan_from_store,
-                                plan_prewarms)
-from repro.core.refresh import (build_queue_state, refresh_ranks_delta,
-                                refresh_ranks_fused)
+                                build_prewarm_table, merge_plans,
+                                plan_from_store, plan_prewarms)
+from repro.core.refresh import (RefreshMesh, build_queue_state,
+                                refresh_ranks_delta, refresh_ranks_fused,
+                                refresh_ranks_mesh)
 
 
 @dataclass
@@ -64,7 +65,8 @@ class HermesScheduler:
                  compact_after: int = 16, compact_shrink: int = 4,
                  warmup_table: Optional[Dict[str, float]] = None,
                  delta_full_threshold: float = 0.5,
-                 queue_delay_correction: bool = False):
+                 queue_delay_correction: bool = False,
+                 mesh_shards: Optional[int] = None):
         self.kb = knowledge_base
         self.policy: Policy = make_policy(policy) if policy != "gittins" \
             else make_policy(policy, n_buckets=n_buckets)
@@ -99,6 +101,18 @@ class HermesScheduler:
         self.batched = self.mode != "looped"
         self.delta_full_threshold = delta_full_threshold
         self.queue_delay_correction = queue_delay_correction
+        # Mesh sharding: partition the slot arena over mesh_shards devices
+        # and run the whole delta pipeline per shard in one shard_map
+        # dispatch (bit-identical to the 1-shard path for the same
+        # placement).  mesh_shards=1 runs the sharded pipeline on a
+        # degenerate one-device mesh (the scaling baseline); None keeps the
+        # single-arena refresh_ranks_delta path.
+        self.refresh_mesh: Optional[RefreshMesh] = None
+        if mesh_shards is not None:
+            if self.mode != "fused_delta":
+                raise ValueError("mesh_shards requires mode='fused_delta' "
+                                 f"(got mode={self.mode!r})")
+            self.refresh_mesh = RefreshMesh(mesh_shards)
         self._stretch_alpha = 0.3       # queue-wait EWMA smoothing
         self.walker = walker
         self.compact_after = compact_after
@@ -119,6 +133,10 @@ class HermesScheduler:
         self.warmup_table = warmup_table  # per-key warm-up cost overrides
         self._prewarm_tab = None          # (kb token, PrewarmTable) cache
         self.prewarm_plan: Optional[PrewarmPlan] = None   # last fused plan
+        # mesh fast path: app_id -> rank dict maintained incrementally (only
+        # re-ranked slots are touched per tick); callers get a shallow copy
+        self._mesh_ranks: Optional[Dict[str, float]] = None
+        self._mesh_ranks_qs = None        # owning QueueState (invalidation)
         for g in self.kb.values():
             C.apply_masks(g)
 
@@ -190,7 +208,9 @@ class HermesScheduler:
         token = self._packed[0]
         if self._qstate is None or self._qstate.kb_token != token:
             self._qstate = build_queue_state(
-                packed, list(self._live.values()), kb_token=token)
+                packed, list(self._live.values()), kb_token=token,
+                n_shards=(self.refresh_mesh.n_shards if self.refresh_mesh
+                          else 1))
         return self._qstate
 
     def _qstate_if_current(self):
@@ -300,25 +320,31 @@ class HermesScheduler:
         qs.bump_refresh(slots)
         # these slots' estimates are fresh now — clear their pending marks
         # so a later delta tick doesn't re-walk covered work
-        qs.dirty.difference_update(int(s) for s in slots)
+        qs.clear_dirty(slots)
 
     def _priorities_delta(self, now: float,
                           app_ids: Optional[List[str]] = None
                           ) -> Dict[str, float]:
         """The delta tick: drain the dirty set, walk ONLY those slots (full
-        re-walk past the dirty-fraction threshold), re-rank the whole arena
-        in place from the persisted device histograms, and refresh every
-        live view from the store — rank, triage scalars, prewarm rows.
+        re-walk past the dirty-fraction threshold), re-rank from the
+        persisted device histograms, and serve every live rank from the
+        store — rank, triage scalars, prewarm rows.  Full ticks are the
+        repack boundary (no slot id is held outside the store here) and,
+        with prewarming, re-condition every trigger row on elapsed service.
 
         Event-path subset calls (``app_ids`` given) walk only the dirty
         slots the event actually touched; other dirty slots keep their mark
         and walk on the next full tick, so per-event cost stays sized by
-        the event (the arena-wide rank-in-place re-rank is (cap, n_buckets)
-        row math — cheap), not by unrelated queue churn."""
+        the event, not by unrelated queue churn."""
         qs = self._ensure_qstate()
         if len(qs) == 0:
             return {}
-        if app_ids is None:
+        full = app_ids is None
+        if full:
+            # repack epoch boundary: no slot id is held outside the store
+            # between full ticks, so a shrink (mirrors remapped in place,
+            # dispatch shapes retrace at the new capacity) is safe here
+            qs.maybe_repack()
             live = list(self._live.values())
             walked = qs.take_dirty()
             if len(walked) >= self.delta_full_threshold * len(qs):
@@ -329,20 +355,29 @@ class HermesScheduler:
             live = [self.apps[i] for i in app_ids
                     if i in self.apps and not self.apps[i].done]
             req = {qs.slot[a.app_id] for a in live}
-            walked = np.asarray(sorted(qs.dirty & req), np.int64)
-            qs.dirty.difference_update(req)
+            walked = np.asarray(sorted(qs.dirty_in(req)), np.int64)
+            qs.clear_dirty(req)
         tab = self._prewarm_table() if self.prewarm_batched else None
+        if self.refresh_mesh is not None:
+            return self._priorities_mesh(qs, live, walked, now, tab, full)
         tick = refresh_ranks_delta(
             self._packed[1], qs, self._base_key, self._seed,
             walked=walked, n_walkers=self.mc_walkers,
             n_buckets=self.n_buckets, walker=self.walker,
             compact_after=self.compact_after,
             compact_shrink=self.compact_shrink,
-            prewarm_table=tab, prewarm_k=self.K,
+            prewarm_table=tab, prewarm_k=self.K, retrigger=full,
             with_triage=self._with_triage)
         self.fused_spill += tick.spill
-        if tab is not None and len(walked):
-            self._stash_plan(plan_from_store(qs, walked, now, tab))
+        if full:
+            qs.take_rank_dirty()     # arena-wide re-rank covered everyone
+        if tab is not None:
+            # full ticks re-conditioned EVERY slot's trigger rows on the
+            # service attained since its walk, so the plan covers the whole
+            # queue; event-path refreshes only re-planned the walked rows
+            plan_slots = qs.occupied() if full else walked
+            if len(plan_slots):
+                self._stash_plan(plan_from_store(qs, plan_slots, now, tab))
         if len(walked):
             qs.bump_refresh(walked)
             for s in walked:
@@ -369,31 +404,100 @@ class HermesScheduler:
         ranks = self.policy.ranks(views, now)
         return {a.app_id: float(r) for a, r in zip(live, ranks)}
 
+    def _priorities_mesh(self, qs, live: List[AppRuntime],
+                         walked: np.ndarray, now: float, tab,
+                         full: bool) -> Dict[str, float]:
+        """The mesh-sharded delta tick: one shard_map dispatch walks each
+        shard's dirty rows and re-ranks each shard's *stale* rows (walked ∪
+        progressed); every other live rank is served from the store's host
+        rank mirror without touching a device.  For the plain Gittins
+        policy the whole consumption side is vectorized — no per-app view
+        objects on the tick path at all."""
+        within = None if full else {qs.slot[a.app_id] for a in live}
+        stale = qs.take_rank_dirty(within)
+        stale.update(int(s) for s in walked)
+        ranked = np.asarray(sorted(stale), np.int64)
+
+        def bookkeeping():
+            # overlapped with the device walk (refresh id rows were already
+            # snapshotted into the dispatch's carrier)
+            if len(walked):
+                qs.bump_refresh(walked)
+                for s in walked:
+                    self.apps[qs.ids[int(s)]].refreshes += 1
+
+        tick = refresh_ranks_mesh(
+            self._packed[1], qs, self._base_key, self._seed,
+            mesh=self.refresh_mesh, walked=walked, ranked=ranked,
+            n_walkers=self.mc_walkers, n_buckets=self.n_buckets,
+            walker=self.walker, compact_after=self.compact_after,
+            compact_shrink=self.compact_shrink,
+            prewarm_table=tab, prewarm_k=self.K, retrigger=full,
+            host_work=bookkeeping, with_triage=self._with_triage)
+        self.fused_spill += tick.spill
+        if tab is not None:
+            plan_slots = qs.occupied() if full else walked
+            if len(plan_slots):
+                self._stash_plan(plan_from_store(qs, plan_slots, now, tab))
+        if type(self.policy) is GittinsPolicy:
+            # incremental consumption: only the re-ranked slots touch the
+            # cached dict (retires prune it in _retire; a store rebuild
+            # resets it), so per-tick host cost is O(churn), not O(live).
+            # Event-path subset refreshes MUST update it too — they re-walk
+            # slots and drain their marks, so the next full tick would
+            # otherwise serve the pre-event rank forever
+            cache = self._mesh_ranks
+            if cache is not None and self._mesh_ranks_qs is qs:
+                for s, r in zip(ranked.tolist(), tick.ranks.tolist()):
+                    cache[qs.ids[s]] = r
+            if not full:
+                slots = np.asarray([qs.slot[a.app_id] for a in live],
+                                   np.int64)
+                ids = [qs.ids[s] for s in slots.tolist()]
+                return dict(zip(ids, qs.rank[slots].tolist()))
+            if cache is None or self._mesh_ranks_qs is not qs:
+                occ = qs.occupied()
+                cache = dict(zip([qs.ids[s] for s in occ.tolist()],
+                                 qs.rank[occ].tolist()))
+                self._mesh_ranks, self._mesh_ranks_qs = cache, qs
+            return dict(cache)
+        triage = self._with_triage
+        for a in live:
+            s = qs.slot[a.app_id]
+            v = a.view
+            if v is None:
+                v = AppView(app_id=a.app_id, tenant=a.tenant,
+                            arrival=a.arrival, attained=a.attained,
+                            total_samples=None, deadline=qs.get_deadline(s),
+                            oracle_remaining=a.oracle_remaining)
+                a.view = v
+            v.attained = a.attained
+            v.fused_rank = float(qs.rank[s])
+            if triage:
+                v.demand_sup = float(qs.sup[s])
+                v.demand_opt = float(qs.opt[s])
+                v.demand_mean = float(qs.mean[s])
+        views = [a.view for a in live]
+        if not views:
+            return {}
+        ranks = self.policy.ranks(views, now)
+        return {a.app_id: float(r) for a, r in zip(live, ranks)}
+
     def _stash_plan(self, plan: PrewarmPlan) -> None:
         """Accumulate plans until the host takes them (several subset
-        refreshes may land between two take_prewarm_plan calls).  Merging
-        dedups on (app, class) with the NEWEST trigger winning — later
-        refreshes have fresher arrival estimates — so the stash is bounded
-        by live-apps x classes even if no host ever takes it."""
+        refreshes — or several shards' rows — may land between two
+        take_prewarm_plan calls).  ``merge_plans`` dedups on (app, class)
+        with the NEWEST trigger winning — later refreshes have fresher
+        arrival estimates — so the stash is bounded by live-apps x classes
+        even if no host ever takes it."""
         if len(plan) == 0:
             return
         prev = self.prewarm_plan
         if prev is None or len(prev) == 0:
             self.prewarm_plan = plan
             return
-        merged: Dict[tuple, tuple] = {}
-        for p in (prev, plan):
-            for i in range(len(p)):
-                if p.app_ids[i] in self._live:     # prune retired apps
-                    merged[(p.app_ids[i], p.resource_keys[i])] = \
-                        (p.kinds[i], p.fire_at[i], p.p_reach[i])
-        keys = list(merged)
-        self.prewarm_plan = PrewarmPlan(
-            app_ids=[a for a, _ in keys],
-            resource_keys=[k for _, k in keys],
-            kinds=[merged[k][0] for k in keys],
-            fire_at=np.asarray([merged[k][1] for k in keys], np.float64),
-            p_reach=np.asarray([merged[k][2] for k in keys], np.float32))
+        self.prewarm_plan = merge_plans(prev, plan,
+                                        self._live.__contains__)
 
     # -------------------------------------------------------------- events
     def on_arrival(self, app_id: str, app_name: str, now: float, *,
@@ -497,6 +601,8 @@ class HermesScheduler:
         app.view = None
         app.overrides.clear()
         self._live.pop(app.app_id, None)
+        if self._mesh_ranks is not None:
+            self._mesh_ranks.pop(app.app_id, None)
         if self._qstate is not None:
             self._qstate.retire(app.app_id)
 

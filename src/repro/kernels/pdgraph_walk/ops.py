@@ -20,6 +20,18 @@ Compaction is exact — the counter RNG is indexed by (stream, original lane,
 global step), so a walker draws the same bits wherever it sits — and the
 rare capacity overflow is surfaced as a ``spill`` count (spilled walkers
 keep their phase-1 partial totals) instead of silently biasing estimates.
+
+Sharded dispatch: ``pdgraph_walk`` is collective-free per-row math, so the
+mesh-sharded refresh (`repro.core.refresh_mesh`) traces it inside a
+``shard_map`` body, one instance per arena shard.  RNG streams stay
+*shard-local*: ``walker_streams`` keys every walker by the app's own
+(key id, refresh id) pair — never by batch position or shard — so a row
+draws identical bits whether it is walked alone, in the global batch, or
+inside any shard.  ``pad_rows`` is the dispatch-row padding policy for the
+sharded path: per-shard dirty counts churn every tick, so it quantizes to
+1/8-octave steps (bounded jit-shape churn, pad waste capped at ~23% just
+above a power of two and ~12.5% elsewhere) instead of the full
+power-of-two rounding (up to ~2x waste) the whole-queue paths use.
 """
 from __future__ import annotations
 
@@ -29,9 +41,31 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.pdgraph import ARRIVAL_NEVER  # single sentinel definition
+from repro.core.pdgraph import ARRIVAL_NEVER, _pow2_ceil
 from repro.kernels.pdgraph_walk.kernel import pdgraph_walk_kernel
 from repro.kernels.pdgraph_walk.ref import walk_phase_ref, walker_streams  # noqa: F401  (re-export)
+
+
+def pad_rows(n: int, min_rows: int = 1) -> int:
+    """Quantized dispatch-row padding for per-shard walk batches.
+
+    Rounds ``n`` up to the next multiple of ``pow2_ceil(n) / 8`` (plain
+    power-of-two at or below 64): at most 8 distinct padded sizes per
+    octave, so the jit cache stays small under per-tick dirty-count churn,
+    while the padding waste stays far under the up-to-2x of pure
+    power-of-two rounding (<= q/(2^k+1) ~= 23% just above a power of two,
+    ~12.5% elsewhere).  Below 64 rows the multinomial tick-to-tick
+    scatter of per-shard dirty counts straddles quanta constantly — there,
+    coarse pow2 buckets trade a few idle padding rows (walked dead,
+    ``valid=False``) for a stable compiled shape; at large batches the
+    fine quanta are the difference between a half-idle and a busy walk
+    dispatch."""
+    n = max(n, min_rows, 1)
+    p = _pow2_ceil(n)
+    if n <= 64:
+        return p
+    q = p // 8
+    return ((n + q - 1) // q) * q
 
 
 def _phase(flat_tables, ov_tables, state, *, step0, n_steps, lanes_per_app,
@@ -79,6 +113,7 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
                  n_walkers: int = 512, max_steps: int = 64,
                  impl: Optional[str] = None, interpret: Optional[bool] = None,
                  compact_after: int = 16, compact_shrink: int = 4,
+                 compact_schedule: Optional[Tuple[Tuple[int, int], ...]] = None,
                  track_arrivals: bool = False
                  ) -> Tuple[jnp.ndarray, ...]:
     """Remaining-service totals for A apps: ``((A, n_walkers), spill)``.
@@ -87,6 +122,20 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
     ``walker_streams(seed, key_ids, refresh_ids)``.  ``valid`` marks real
     queue rows: padding rows start their walkers absorbed, so they neither
     occupy phase-2 compaction capacity nor inflate the spill count.
+
+    ``compact_schedule`` generalizes the single (compact_after,
+    compact_shrink) compaction into a multi-stage one: a tuple of
+    ``(step, shrink)`` stages, ascending in both, each packing the
+    survivors into an ``N // shrink``-slot state at ``step`` (shrink is a
+    divisor of the ORIGINAL lane count).  Absorption keeps decaying after
+    the first compaction — the app suite leaves ~6% of lanes alive at step
+    16 and ~2% at step 32, so a second stage halves the remaining-phase
+    cost at a >3x capacity margin (the mesh-sharded refresh's default).
+    Compaction is exact, so ANY schedule returns bit-identical totals as
+    long as nothing spills; stages that would violate monotonicity, exceed
+    ``max_steps``, or drop capacity under 128 lanes disable themselves,
+    exactly like the legacy gate.  When None, the schedule is the classic
+    ``((compact_after, compact_shrink),)``.
 
     ``track_arrivals`` additionally returns per-walker first-arrival times
     into every unit — ``((A, W), (A, W, U), spill)`` — feeding the fused
@@ -124,57 +173,75 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
              gi, app, stream, lane,
              rep(executed, jnp.float32))
 
-    compact = (0 < compact_after < max_steps
-               and compact_shrink > 1 and N // compact_shrink >= 128)
-    phase1_steps = compact_after if compact else max_steps
+    # validate the schedule trace-time: stages ascending in step AND shrink,
+    # inside (0, max_steps), capacity >= 128 lanes; offending stages disable
+    # themselves (the legacy single-stage gate, per stage)
+    if compact_schedule is None:
+        compact_schedule = ((compact_after, compact_shrink),)
+    stages = []
+    prev_step, prev_shrink = 0, 1
+    for step, shrink in compact_schedule:
+        if step <= prev_step or step >= max_steps:
+            continue
+        if shrink <= prev_shrink or N // shrink < 128:
+            continue
+        stages.append((step, shrink))
+        prev_step, prev_shrink = step, shrink
+
     arr = (jnp.full((N, U), ARRIVAL_NEVER, jnp.float32)
            if track_arrivals else None)
-    out1 = _phase(flat_tables, ov_tables, state,
-                  step0=0, n_steps=phase1_steps,
-                  lanes_per_app=W, impl=impl, interpret=interpret,
-                  arrivals=arr)
-    if track_arrivals:
-        cur, total, done, arr = out1
-    else:
-        cur, total, done = out1
-    if not compact:
+    cur, total, done, gi_c, app_c, stream_c, lane_c, executed_c = state
+    spill = jnp.zeros((), jnp.int32)
+    unwind = []                      # (totals, arrivals, keep) per level
+    seg_start = 0
+    for step_b, shrink in stages + [(max_steps, None)]:
+        out = _phase(flat_tables, ov_tables,
+                     (cur, total, done, gi_c, app_c, stream_c, lane_c,
+                      executed_c),
+                     step0=seg_start, n_steps=step_b - seg_start,
+                     lanes_per_app=W, impl=impl, interpret=interpret,
+                     arrivals=arr)
         if track_arrivals:
-            return (total.reshape(A, W), arr.reshape(A, W, U),
-                    jnp.zeros((), jnp.int32))
-        return total.reshape(A, W), jnp.zeros((), jnp.int32)
-
-    C = N // compact_shrink
-    order = jnp.argsort(done.astype(jnp.int32))           # stable: alive first
-    keep = order[:C]
-    alive = jnp.sum(~done)
-    spill = jnp.maximum(alive - C, 0).astype(jnp.int32)
-    sub = (cur[keep], total[keep], done[keep],
-           gi[keep], app[keep], stream[keep], lane[keep],
-           None)                                          # executed: step 0 only
-    out2 = _phase(flat_tables, ov_tables, sub,
-                  step0=compact_after,
-                  n_steps=max_steps - compact_after,
-                  lanes_per_app=W, impl=impl, interpret=interpret,
-                  arrivals=arr[keep] if track_arrivals else None)
+            cur, total, done, arr = out
+        else:
+            cur, total, done = out
+        if shrink is None:
+            break
+        C = N // shrink
+        order = jnp.argsort(done.astype(jnp.int32))       # stable: alive first
+        keep = order[:C]
+        spill += jnp.maximum(jnp.sum(~done) - C, 0).astype(jnp.int32)
+        unwind.append((total, arr, keep))
+        cur, done = cur[keep], done[keep]
+        gi_c, app_c = gi_c[keep], app_c[keep]
+        stream_c, lane_c = stream_c[keep], lane_c[keep]
+        total = total[keep]
+        if track_arrivals:
+            arr = arr[keep]
+        executed_c = None                                 # step 0 only
+        seg_start = step_b
+    # unwind the compaction levels: each level's kept lanes take the deeper
+    # totals; spilled lanes keep their partial (pre-compaction) totals
+    for total_prev, arr_prev, keep in reversed(unwind):
+        total = total_prev.at[keep].set(total)
+        if track_arrivals:
+            arr = arr_prev.at[keep].set(arr)
     if track_arrivals:
-        _, total2, _, arr2 = out2
-        total = total.at[keep].set(total2)
-        arr = arr.at[keep].set(arr2)   # spilled walkers keep phase-1 arrivals
         return total.reshape(A, W), arr.reshape(A, W, U), spill
-    _, total2, _ = out2
-    total = total.at[keep].set(total2)
     return total.reshape(A, W), spill
 
 
 @partial(jax.jit, static_argnames=("n_walkers", "max_steps", "impl",
                                    "interpret", "compact_after",
-                                   "compact_shrink", "track_arrivals"))
+                                   "compact_shrink", "compact_schedule",
+                                   "track_arrivals"))
 def pdgraph_walk_jit(samples, counts, cum_trans, graph_idx, start, executed,
                      streams, ov_samples=None, ov_counts=None, *,
                      n_walkers: int = 512, max_steps: int = 64,
                      impl: Optional[str] = None,
                      interpret: Optional[bool] = None,
                      compact_after: int = 16, compact_shrink: int = 4,
+                     compact_schedule=None,
                      track_arrivals: bool = False):
     """Jitted standalone entry point (tests / direct benchmarking)."""
     return pdgraph_walk(samples, counts, cum_trans, graph_idx, start,
@@ -182,4 +249,5 @@ def pdgraph_walk_jit(samples, counts, cum_trans, graph_idx, start, executed,
                         n_walkers=n_walkers, max_steps=max_steps, impl=impl,
                         interpret=interpret, compact_after=compact_after,
                         compact_shrink=compact_shrink,
+                        compact_schedule=compact_schedule,
                         track_arrivals=track_arrivals)

@@ -47,14 +47,19 @@ class SimConfig:
     mc_walkers: int = 256
     n_buckets: int = 10
     seed: int = 0
-    # priority-refresh pipeline: "fused" (device-resident walk->bucketize->
-    # rank->prewarm single dispatch, the default since the PR-2 soak),
-    # "fused_delta" (fused + dirty-set delta refresh over the persistent
-    # slot store: event handlers mark dirty slots and each tick re-walks
-    # only those), "composed" (PR 1 batched path), "looped" (seed
-    # baseline); `walker` picks the fused MC backend
-    refresh_mode: str = "fused"
+    # priority-refresh pipeline: "fused_delta" (the default since the PR-4
+    # soak: dirty-set delta refresh over the persistent slot store — event
+    # handlers mark dirty slots, each tick re-walks only those and re-ranks
+    # the arena in place; prewarm triggers re-condition on elapsed service
+    # every tick), "fused" (full device-resident walk->bucketize->rank->
+    # prewarm dispatch each tick), "composed" (PR 1 batched path), "looped"
+    # (seed baseline); `walker` picks the fused MC backend; `mesh_shards`
+    # partitions the slot arena across a device mesh (fused_delta only;
+    # needs >= mesh_shards visible devices — on CPU force them with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N)
+    refresh_mode: str = "fused_delta"
     walker: str = "pallas"
+    mesh_shards: Optional[int] = None
     # §3.4 queueing-delay correction: condition prewarm trigger times on the
     # app's observed queue wait (per-app wall/service EWMA) instead of
     # assuming continuous execution.  Off by default — the paper's model.
@@ -158,6 +163,7 @@ class ClusterSim:
             prewarm=(cfg.prewarm_mode == "hermes"),
             mc_walkers=cfg.mc_walkers, seed=cfg.seed,
             mode=cfg.refresh_mode, walker=cfg.walker,
+            mesh_shards=cfg.mesh_shards,
             warmup_table=self.warmup_table,
             queue_delay_correction=cfg.queue_delay_correction)
         self.let = HermesLet(kv_capacity=cfg.kv_capacity,

@@ -197,3 +197,44 @@ def test_counter_uniforms_are_uniform():
         # moments while we're here (catches sign/scale slips KS can miss)
         assert abs(u.mean() - 0.5) < 0.01
         assert abs(u.std() - np.sqrt(1 / 12)) < 0.01
+
+
+def test_multi_stage_compaction_schedule_is_exact(packed):
+    """A multi-stage compact_schedule (the mesh tick's walk configuration)
+    returns bit-identical totals to the single-stage and no-compaction
+    walks while nothing spills — compaction timing is a pure performance
+    knob, never a semantics one."""
+    gi, start, ex, streams = _queue(packed, 16)
+    base = dict(n_walkers=128, max_steps=64, impl="ref")
+    none_, s0 = pdgraph_walk_jit(packed.samples, packed.counts,
+                                 packed.cum_trans, gi, start, ex, streams,
+                                 compact_after=0, **base)
+    one, s1 = pdgraph_walk_jit(packed.samples, packed.counts,
+                               packed.cum_trans, gi, start, ex, streams,
+                               compact_after=16, compact_shrink=4, **base)
+    multi, s2 = pdgraph_walk_jit(packed.samples, packed.counts,
+                                 packed.cum_trans, gi, start, ex, streams,
+                                 compact_schedule=((12, 4), (28, 16)),
+                                 **base)
+    assert int(s0) == int(s1) == int(s2) == 0
+    np.testing.assert_array_equal(np.asarray(none_), np.asarray(one))
+    np.testing.assert_array_equal(np.asarray(none_), np.asarray(multi))
+
+
+def test_compaction_schedule_invalid_stages_self_disable(packed):
+    """Stages breaking monotonicity / max_steps / the 128-lane capacity
+    floor drop out instead of erroring — the same silent-gate semantics as
+    the legacy single-stage knobs."""
+    gi, start, ex, streams = _queue(packed, 4)
+    base = dict(n_walkers=32, max_steps=24, impl="ref")
+    ref, _ = pdgraph_walk_jit(packed.samples, packed.counts,
+                              packed.cum_trans, gi, start, ex, streams,
+                              compact_after=0, **base)
+    # step beyond max_steps, non-monotonic shrink, capacity under 128
+    out, spill = pdgraph_walk_jit(packed.samples, packed.counts,
+                                  packed.cum_trans, gi, start, ex, streams,
+                                  compact_schedule=((30, 4), (8, 2),
+                                                    (10, 2), (12, 64)),
+                                  **base)
+    assert int(spill) == 0
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))

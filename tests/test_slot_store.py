@@ -21,6 +21,7 @@ from hypothesis import strategies as st
 from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
 from repro.core.pdgraph import (ARRIVAL_NEVER, BackendSpec, PDGraph,
                                 UnitNode, pack_graphs)
+from repro.core.prewarm import prewarm_trigger_time
 from repro.core.refresh import (QueueState, refresh_ranks_delta,
                                 refresh_ranks_fused)
 from repro.core.scheduler import HermesScheduler
@@ -263,6 +264,79 @@ def test_retune_mid_run_reestimates_stale_fused_views(kb):
                for a in s.apps.values() if not a.done)
 
 
+# ------------------------------------------------------------------- repack
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 10 ** 6)),
+                min_size=8, max_size=150))
+@settings(max_examples=25, deadline=None)
+def test_repack_churn_invariants(ops):
+    """grow -> shrink -> grow churn with interleaved explicit repacks: the
+    arena stays a valid pow-2 partition, every live app keeps its row
+    values across renumbering, and slot ids change ONLY at repack epochs."""
+    packed = _tiny_packed()
+    qs = QueueState(packed, capacity=4)
+    mirror = {}
+    seq = 0
+    for kind, r in ops:
+        if kind == 0 or (kind != 3 and not mirror):       # admit
+            aid = f"app{seq}"
+            qs.admit(aid, 0, r % packed.n_units, key_id=seq)
+            mirror[aid] = [seq, 0.0]
+            seq += 1
+        elif kind == 1:                                   # retire
+            aid = sorted(mirror)[r % len(mirror)]
+            mirror.pop(aid)
+            qs.retire(aid)
+        elif kind == 2:                                   # progress
+            aid = sorted(mirror)[r % len(mirror)]
+            qs.add_progress(aid, 0.5)
+            mirror[aid][1] += 0.5
+        else:                                             # repack epoch
+            epoch = qs.repack_epoch
+            snapshot = {a: qs.slot[a] for a in mirror}
+            mapping = qs.repack()
+            assert qs.repack_epoch == epoch + 1
+            assert sorted(mapping) == sorted(snapshot.values())
+            for aid, old in snapshot.items():
+                assert qs.slot[aid] == mapping[old]       # remapped, once
+    cap = qs.capacity
+    assert cap & (cap - 1) == 0
+    occ, free = set(qs.occupied().tolist()), set(qs._free)
+    assert occ | free == set(range(cap)) and not (occ & free)
+    assert len(qs) == len(mirror) and sorted(qs.slot) == sorted(mirror)
+    for aid, (key, att) in mirror.items():
+        s = qs.slot[aid]
+        assert qs.ids[s] == aid and qs.key_id[s] == key
+        assert qs.attained[s] == pytest.approx(att)
+    # dirty/rank-dirty marks must reference live slots only
+    assert qs.dirty <= occ and qs.rank_dirty <= occ
+
+
+def test_scheduler_repacks_at_tick_boundary(kb):
+    """Legacy delta path: a mostly-retired queue shrinks its arena on the
+    next full tick, preserving every survivor's rank WITHOUT a re-walk
+    (persisted device histogram rows are remapped, not rebuilt)."""
+    s = _filled(kb, "fused_delta", n_apps=96)
+    r1 = s.refresh_tick(10.0, resample=True)
+    qs = s._qstate
+    cap0 = qs.capacity
+    for i in range(88):
+        s.on_app_complete(f"a{i:03d}")
+    before = {a.app_id: a.refreshes for a in s.apps.values() if not a.done}
+    r2 = s.refresh_tick(11.0, resample=True)
+    assert qs.capacity < cap0 and qs.repack_epoch == 1
+    for aid, n in before.items():
+        assert r2[aid] == r1[aid]
+        assert s.apps[aid].refreshes == n
+
+
+def test_small_arena_never_repacks(kb):
+    s = _filled(kb, "fused_delta", n_apps=4)
+    s.refresh_tick(10.0, resample=True)
+    assert s._qstate.capacity == 64 and s._qstate.repack_epoch == 0
+    s.refresh_tick(11.0, resample=True)
+    assert s._qstate.repack_epoch == 0    # cap is already at the floor
+
+
 # ------------------------------------------------- queueing-delay correction
 def _chain_kb(dur_a=30.0, dur_b=5.0):
     def unit(name, image, durs, nxt):
@@ -315,3 +389,77 @@ def test_store_arrival_rows_feed_the_plan(kb):
     b = tab.classes.index("docker:img-b")
     assert qs.trig[slot, b] < ARRIVAL_NEVER / 2
     assert any(k == "docker:img-b" for k in plan.resource_keys)
+
+
+# ----------------------------------------------- per-tick trigger retiming
+def test_retrigger_delta_zero_is_bitwise_stable():
+    """A walk-free tick with no intervening progress re-derives every
+    trigger from the persisted arrival histograms at delta=0 — bit-identical
+    to the walk-time triggers (one shared quantile code path)."""
+    s = HermesScheduler(_chain_kb(), policy="gittins", t_in=T_IN,
+                        t_out=T_OUT, mc_walkers=256, seed=3,
+                        mode="fused_delta", walker="pallas", prewarm=True)
+    s.on_arrival("x", "T", now=0.0)
+    s.priorities(0.0)
+    qs = s._qstate
+    trig0, reach0 = qs.trig.copy(), qs.reach.copy()
+    s.priorities(1.0)                       # no events: pure retrigger tick
+    np.testing.assert_array_equal(qs.trig, trig0)
+    np.testing.assert_array_equal(qs.reach, reach0)
+
+
+def test_retrigger_tracks_elapsed_service():
+    """With deterministic unit durations the ABSOLUTE fire time must stay
+    put as the app executes: the relative trigger shrinks by exactly the
+    attained service (the bucketized analogue of the legacy planner's
+    ``tail - elapsed`` re-quantile), instead of freezing at walk time."""
+    DOCKER_TP = 10.0
+    s = HermesScheduler(_chain_kb(dur_a=30.0), policy="gittins", t_in=T_IN,
+                        t_out=T_OUT, mc_walkers=256, seed=3,
+                        mode="fused_delta", walker="pallas", prewarm=True)
+    s.on_arrival("x", "T", now=0.0)
+    s.priorities(0.0)
+    plan0 = s.take_prewarm_plan()
+    fire0 = dict(zip(plan0.resource_keys, plan0.fire_at))["docker:img-b"]
+    assert fire0 == pytest.approx(30.0 - DOCKER_TP, abs=0.5)
+    # 12 s of service later (progress does NOT dirty the slot -> no re-walk)
+    s.on_progress("x", 12.0)
+    before = s.apps["x"].refreshes
+    s.priorities(12.0)
+    assert s.apps["x"].refreshes == before
+    plan1 = s.take_prewarm_plan()
+    fire1 = dict(zip(plan1.resource_keys, plan1.fire_at))["docker:img-b"]
+    assert fire1 == pytest.approx(fire0, abs=0.5)   # absolute time invariant
+    # legacy closed form at the same elapsed service
+    legacy = prewarm_trigger_time([30.0] * 20, unit_start=0.0, now=12.0,
+                                  p_s=1.0, t_p=DOCKER_TP, K=0.5)
+    assert fire1 == pytest.approx(legacy, abs=0.5)
+
+
+def test_retrigger_conditions_reach_probability():
+    """Arrivals the app has demonstrably outlived are falsified: once the
+    attained service passes the early mode of a bimodal arrival
+    distribution, the surviving reach mass (and the planner's p_reach)
+    drops accordingly."""
+    def unit(name, image, durs, nxt):
+        return UnitNode(name=name, backend=BackendSpec("docker", model=image),
+                        duration=list(durs), next_counts=dict(nxt))
+    units = {"a": unit("a", "img-a", [10.0] * 10 + [50.0] * 10, {"b": 20}),
+             "b": unit("b", "img-b", [5.0] * 20, {"$end": 20})}
+    kb2 = {"T": PDGraph("T", "a", units)}
+    s = HermesScheduler(kb2, policy="gittins", t_in=T_IN, t_out=T_OUT,
+                        mc_walkers=512, seed=3, mode="fused_delta",
+                        walker="pallas", prewarm=True, K=0.4)
+    s.on_arrival("x", "T", now=0.0)
+    s.priorities(0.0)
+    qs = s._qstate
+    tab = s._prewarm_table()
+    b = tab.classes.index("docker:img-b")
+    slot = qs.slot["x"]
+    r0 = qs.reach[slot, b]
+    assert r0 == pytest.approx(1.0, abs=0.05)
+    s.on_progress("x", 20.0)          # outlived the 10 s mode entirely
+    s.priorities(20.0)
+    r1 = qs.reach[slot, b]
+    assert r1 == pytest.approx(0.5, abs=0.1)
+    assert r1 < r0 - 0.3
