@@ -7,19 +7,20 @@ tick (re-draw every demand estimate from the PDGraphs, re-bucketize,
 re-rank) under:
 
   looped        the seed implementation — one MC walk + one histogram per
-                application per tick (``HermesScheduler(mode="looped")``)
+                application per tick (``HermesScheduler(refresh=RefreshConfig(mode="looped"))``)
   composed      PR 1: one jitted vmapped walk, host-side numpy bucketize,
-                second jitted rank dispatch (``mode="composed"``)
+                second jitted rank dispatch (``RefreshConfig(mode="composed")``)
   fused         the device-resident pipeline with the threefry walker —
                 walk → bucketize → rank in ONE dispatch, bit-identical
-                demand samples to composed (``mode="fused",
-                walker="threefry"``): isolates the fusion gain
+                demand samples to composed (``RefreshConfig(mode="fused",
+                walker="threefry")``): isolates the fusion gain
   fused_pallas  the shipping fused path: the counter-RNG ``pdgraph_walk``
-                kernel package with phase compaction (``walker="pallas"``;
+                kernel package with phase compaction (``walker="pallas"``,
+                the RefreshConfig default;
                 Pallas kernel on TPU, its bit-identical jnp twin on CPU):
                 fusion + RNG + compaction gains together
   fused_delta   the dirty-set delta refresh over the persistent slot store
-                (``mode="fused_delta"``): before each tick a realistic
+                (``mode="fused_delta"``, the default): before each tick a realistic
                 fraction (DIRTY_FRAC) of the queue takes a unit-transition
                 event; the tick re-walks ONLY those slots and re-ranks the
                 whole arena in place from persisted device histograms —
@@ -72,6 +73,7 @@ import jax  # noqa: E402
 
 from benchmarks.common import Csv, kb  # noqa: E402
 from repro.apps.suite import T_IN, T_OUT  # noqa: E402
+from repro.core.refresh_config import RefreshConfig  # noqa: E402
 from repro.core.scheduler import HermesScheduler  # noqa: E402
 
 MC_WALKERS = 128
@@ -84,18 +86,18 @@ MESH_SHARDS = 1 << (min(8, jax.device_count()).bit_length() - 1)
 # fused_prewarm measures the increment of computing the batched prewarm
 # trigger matrix inside the same dispatch (arrival tracking + reduction)
 ARMS = {
-    "looped": dict(mode="looped", prewarm=False),
-    "composed": dict(mode="composed", prewarm=False),
-    "fused": dict(mode="fused", walker="threefry", prewarm=False),
-    "fused_pallas": dict(mode="fused", walker="pallas", prewarm=False),
-    "fused_prewarm": dict(mode="fused", walker="pallas", prewarm=True),
-    "fused_delta": dict(mode="fused_delta", walker="pallas", prewarm=False),
-    "fused_delta_prewarm": dict(mode="fused_delta", walker="pallas",
-                                prewarm=True),
-    "fused_delta_mesh1": dict(mode="fused_delta", walker="pallas",
-                              prewarm=False, mesh_shards=1),
-    "fused_delta_sharded": dict(mode="fused_delta", walker="pallas",
-                                prewarm=False, mesh_shards=MESH_SHARDS),
+    "looped": dict(refresh=RefreshConfig(mode="looped"), prewarm=False),
+    "composed": dict(refresh=RefreshConfig(mode="composed"), prewarm=False),
+    "fused": dict(refresh=RefreshConfig(mode="fused", walker="threefry"),
+                  prewarm=False),
+    "fused_pallas": dict(refresh=RefreshConfig(mode="fused"), prewarm=False),
+    "fused_prewarm": dict(refresh=RefreshConfig(mode="fused"), prewarm=True),
+    "fused_delta": dict(refresh=RefreshConfig(), prewarm=False),
+    "fused_delta_prewarm": dict(refresh=RefreshConfig(), prewarm=True),
+    "fused_delta_mesh1": dict(refresh=RefreshConfig(mesh_shards=1),
+                              prewarm=False),
+    "fused_delta_sharded": dict(refresh=RefreshConfig(
+        mesh_shards=MESH_SHARDS), prewarm=False),
 }
 DELTA_ARMS = ("fused_delta", "fused_delta_prewarm", "fused_delta_mesh1",
               "fused_delta_sharded")

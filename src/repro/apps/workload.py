@@ -200,24 +200,48 @@ def make_open_workload(duration_s: float, *,
     weights = np.asarray([max(p.weight, 0.0) for p in profiles], np.float64)
     weights = weights / weights.sum()
 
-    out: List[AppInstance] = []
+    # all categorical draws happen as whole-trace vectors up front (one
+    # alias-table build per distribution instead of one per arrival — the
+    # difference between seconds and minutes at 10^5+ arrivals); only the
+    # inherently sequential per-app trajectory sampling stays in the loop
+    n = len(times)
+    prof_idx = (rng.choice(len(profiles), size=n, p=weights)
+                if n else np.zeros(0, np.int64))
+    names: List[Optional[str]] = [None] * n
+    default = np.asarray([p.app_mix is None for p in profiles])[prof_idx] \
+        if n else np.zeros(0, bool)
+    k = int(default.sum())
+    if k:
+        drawn = iter(sample_app_names(k, rng))
+        for i in np.nonzero(default)[0]:
+            names[i] = next(drawn)
+    for pi, prof in enumerate(profiles):
+        if prof.app_mix is None:
+            continue
+        rows = np.nonzero(prof_idx == pi)[0]
+        if not len(rows):
+            continue
+        mix_names = sorted(prof.app_mix)
+        mix_w = np.asarray([prof.app_mix[m] for m in mix_names], np.float64)
+        picks = rng.choice(len(mix_names), size=len(rows),
+                           p=mix_w / mix_w.sum())
+        for i, d in zip(rows, picks):
+            names[i] = mix_names[d]
+
     ddl_scales = [(1.2, "tight"), (1.5, "modest"), (2.0, "loose")]
+    if with_deadlines and n:
+        ddl_frac = np.asarray([p.deadline_frac for p in profiles])[prof_idx]
+        has_ddl = rng.uniform(size=n) < ddl_frac
+        ddl_pick = rng.integers(len(ddl_scales), size=n)
+    out: List[AppInstance] = []
     for i, t in enumerate(times):
-        prof = profiles[int(rng.choice(len(profiles), p=weights))]
-        if prof.app_mix:
-            mix_names = sorted(prof.app_mix)
-            mix_w = np.asarray([prof.app_mix[n] for n in mix_names],
-                               np.float64)
-            name = mix_names[int(rng.choice(len(mix_names),
-                                            p=mix_w / mix_w.sum()))]
-        else:
-            name = sample_app_names(1, rng)[0]
+        name = names[i]
         traj = sample_trajectory(suite[name], rng)
         inst = AppInstance(app_id=f"app{i:06d}", app_name=name,
-                           tenant=prof.name, arrival=float(t),
-                           trajectory=traj)
-        if with_deadlines and rng.uniform() < prof.deadline_frac:
-            scale, cls = ddl_scales[int(rng.integers(len(ddl_scales)))]
+                           tenant=profiles[prof_idx[i]].name,
+                           arrival=float(t), trajectory=traj)
+        if with_deadlines and has_ddl[i]:
+            scale, cls = ddl_scales[int(ddl_pick[i])]
             base = trajectory_service(traj, t_in, t_out) \
                 + _coldstart_overhead(suite[name], traj, warmup_table)
             inst.deadline = float(t + scale * base)

@@ -2,5 +2,7 @@
 queue management, and PDGraph-driven backend prewarming (Hermes)."""
 from repro.core.pdgraph import PDGraph, UnitNode, BackendSpec  # noqa: F401
 from repro.core.gittins import gittins_rank_hist, gittins_rank_samples  # noqa: F401
-from repro.core.refresh import (QueueState, refresh_ranks_delta,  # noqa: F401
-                                refresh_ranks_fused)
+from repro.core.arena import QueueState  # noqa: F401
+from repro.core.refresh_config import RefreshConfig  # noqa: F401
+from repro.core.refresh_pipeline import (refresh_ranks_delta,  # noqa: F401
+                                         refresh_ranks_fused)

@@ -227,8 +227,10 @@ class QueueState:
                 continue
             # shard-major layout: each shard's block grows in place, so old
             # rows keep their device row *within* the shard and slot ids are
-            # untouched (for 1 shard this is a plain concat)
-            n, cs = self.n_shards, self.shard_capacity
+            # untouched (for 1 shard this is a plain concat).  The host rows
+            # above have already doubled, so the pre-grow shard width is
+            # old // n, not self.shard_capacity
+            n, cs = self.n_shards, old // self.n_shards
             blocks = a.reshape((n, cs) + a.shape[1:])
             pad = jnp.zeros((n, cs) + a.shape[1:], a.dtype)
             setattr(self, name,
@@ -293,6 +295,71 @@ class QueueState:
         self.ov_counts[i] = 0
         self._add_dirty(i)
         return i
+
+    def admit_many(self, rows: Sequence[tuple]) -> np.ndarray:
+        """Admit a batch in one call: ``rows`` is a sequence of
+        ``(app_id, graph_idx, start, key_id, deadline)``.  Slot choice
+        (shard balancing, grow timing) is IDENTICAL to calling
+        :meth:`admit` per row in order, but the per-slot column writes land
+        as one vectorized scatter per column — the array-native admission
+        path for arrival bursts.  Returns the assigned slot ids."""
+        n = len(rows)
+        slots = np.empty(n, np.int64)
+        for j, (app_id, *_rest) in enumerate(rows):
+            if not self._free_count():
+                self._grow()
+            shard = max(range(self.n_shards),
+                        key=lambda s: len(self._frees[s]))
+            i = self._frees[shard].pop()
+            slots[j] = i
+            self.ids[i] = app_id
+            self.slot[app_id] = i
+            self._dirty[i % self.n_shards].add(i)
+        self._occ[slots] = True
+        self.live += n
+        self.graph_idx[slots] = [r[1] for r in rows]
+        self.start[slots] = [r[2] for r in rows]
+        self.executed[slots] = 0.0
+        self.attained[slots] = 0.0
+        self.key_id[slots] = [r[3] for r in rows]
+        self.refresh_id[slots] = 0
+        self.deadline[slots] = [np.inf if r[4] is None else r[4]
+                                for r in rows]
+        self.stretch[slots] = 1.0
+        self.ov_counts[slots] = 0
+        return slots
+
+    def retire_many(self, app_ids: Sequence[str]) -> np.ndarray:
+        """Release a batch of applications' slots in one call (same
+        per-slot semantics as :meth:`retire`; occupancy cleared as one
+        scatter).  Unknown / already-retired ids are skipped.  Returns the
+        freed slot ids."""
+        freed: List[int] = []
+        for app_id in app_ids:
+            i = self.slot.pop(app_id, None)
+            if i is None:
+                continue
+            if self.ov_counts[i].any():
+                self.override_apps -= 1
+            self.ids[i] = None
+            freed.append(i)
+            self._dirty[i % self.n_shards].discard(i)
+            self.rank_dirty.discard(i)
+            self._frees[i % self.n_shards].append(i)
+        out = np.asarray(freed, np.int64)
+        if len(out):
+            self._occ[out] = False
+            self.ov_counts[out] = 0
+            self.live -= len(out)
+        return out
+
+    def mark_dirty_many(self, app_ids: Sequence[str]) -> None:
+        """Mark a batch of applications' slots for the next delta walk in
+        one call (unknown ids skipped, like :meth:`mark_dirty`)."""
+        for app_id in app_ids:
+            i = self.slot.get(app_id)
+            if i is not None:
+                self._dirty[i % self.n_shards].add(i)
 
     def retire(self, app_id: str) -> None:
         """Release an application's slot back to its shard's free-list.  The

@@ -14,6 +14,8 @@ inference ~ 3 s on the A100-class engine).
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -74,6 +76,7 @@ class WarmEntry:
     speculative: bool = False # loaded by a prewarm signal
     used_after_warm: bool = False
     pins: int = 0             # live applications depending on this content
+    seq: int = 0              # creation order (LRU-heap tie-break)
 
 
 class WarmCache:
@@ -86,6 +89,12 @@ class WarmCache:
         self.capacity = capacity
         self.name = name
         self.entries: Dict[str, WarmEntry] = {}
+        # lazy LRU index: (last_used, creation_seq, key) records, one pushed
+        # per touch; stale records (entry evicted or touched since) are
+        # dropped when eviction pops them.  Keeps victim selection
+        # O(log n) instead of a full min() scan of a 10k+-entry pool.
+        self._lru: List[Tuple[float, int, str]] = []
+        self._seq = itertools.count()
         self.hits = 0
         self.misses = 0
         self.wasted_warm_s = 0.0   # speculative entries evicted unused
@@ -108,6 +117,7 @@ class WarmCache:
         if e is not None and e.warm_at <= now:
             self.hits += 1
             e.last_used = now
+            self._touch(e)
             if e.speculative and not e.used_after_warm:
                 self.spec_used += 1     # first use of a prewarmed entry
             e.used_after_warm = True
@@ -129,8 +139,10 @@ class WarmCache:
         self.loads += 1
         if speculative:
             self.spec_loads += 1
-        self.entries[key] = WarmEntry(key=key, warm_at=now + t_warm,
-                                      last_used=now, speculative=speculative)
+        e = WarmEntry(key=key, warm_at=now + t_warm, last_used=now,
+                      speculative=speculative, seq=next(self._seq))
+        self.entries[key] = e
+        self._touch(e)
         return now + t_warm
 
     def consume_inflight(self, key: str, now: float) -> Optional[float]:
@@ -144,6 +156,7 @@ class WarmCache:
             self.spec_used += 1
         e.used_after_warm = True
         e.last_used = max(e.warm_at, now)
+        self._touch(e)
         return e.warm_at
 
     def _account_waste(self, e: WarmEntry, now: float) -> None:
@@ -160,19 +173,56 @@ class WarmCache:
         if e is not None:
             e.pins = max(e.pins - 1, 0)
 
+    def _touch(self, e: WarmEntry) -> None:
+        heapq.heappush(self._lru, (e.last_used, e.seq, e.key))
+        if len(self._lru) > 8 * max(self.capacity, 64):
+            # mostly-stale index: rebuild from the live entries
+            self._lru = [(x.last_used, x.seq, x.key)
+                         for x in self.entries.values()]
+            heapq.heapify(self._lru)
+
+    def _pick_victim(self, now: float, speculative: bool) -> Optional[WarmEntry]:
+        """Least-recently-used qualifying entry, via the lazy heap.  Pops
+        ascend (last_used, creation_seq), so the first unpinned live entry
+        IS the seed scan's ``min`` (creation order breaks last_used ties
+        exactly like the insertion-ordered dict did).  Records popped past
+        (pinned entries) are re-pushed — a later eviction may claim them."""
+        skipped: List[Tuple[float, int, str]] = []
+        victim = None
+        while self._lru:
+            rec = heapq.heappop(self._lru)
+            lu, seq, key = rec
+            e = self.entries.get(key)
+            if e is None or e.seq != seq or e.last_used != lu:
+                continue                      # stale: evicted or re-touched
+            if e.pins == 0:
+                # idleness is monotone in last_used: if the LRU-most
+                # unpinned entry is too hot to evict speculatively, every
+                # later one is hotter — stop either way
+                if not speculative or \
+                        now - e.last_used >= self.spec_evict_idle_s:
+                    victim = e
+                else:
+                    skipped.append(rec)
+                break
+            skipped.append(rec)
+        if victim is None and not speculative and skipped:
+            # demand loads must make progress: all-pinned pool falls back
+            # to the overall LRU entry (first valid record popped)
+            lu, seq, key = skipped[0]
+            victim = self.entries[key]
+            skipped = skipped[1:]
+        for rec in skipped:
+            heapq.heappush(self._lru, rec)
+        return victim
+
     def _evict_if_needed(self, now: float, speculative: bool = False) -> bool:
         while len(self.entries) >= self.capacity:
-            pool = list(self.entries.values())
-            unpinned = [e for e in pool if e.pins == 0]
-            if speculative:
-                # never evict pinned (live-app) or hot contents speculatively
-                cand = [e for e in unpinned
-                        if now - e.last_used >= self.spec_evict_idle_s]
-                if not cand:
-                    return False
-            else:
-                cand = unpinned or pool  # demand loads must make progress
-            victim = min(cand, key=lambda e: e.last_used)
+            # never evict pinned (live-app) or hot contents speculatively;
+            # demand loads must always make progress
+            victim = self._pick_victim(now, speculative)
+            if victim is None:
+                return False
             self._account_waste(victim, now)
             del self.entries[victim.key]
         return True

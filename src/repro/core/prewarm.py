@@ -12,20 +12,29 @@ backend with branch probability p_s and warm-up duration t_p, and the
   (clipped at `now`; a smaller K = more aggressive = earlier trigger and more
   potential waste — the Fig. 14 trade-off.)
 
-Two planning paths:
+:class:`PrewarmPlan` is the single planning API.  Every way of producing
+prewarm decisions is a constructor on it, and merging is a method:
 
-* **Batched device plan** (fused refresh mode) — the fused refresh walk also
-  records per-walker first-arrival times into every unit; the pipeline
-  reduces them on device into per-(app, backend-class) arrival histograms
-  and trigger quantiles, generalizing the one-hop branch probability p_s to
-  the full reach probability over ALL downstream units.  ``PrewarmTable``
-  packs the unit -> warmable-backend-class mapping and per-class warm-up
-  durations into device constants; ``plan_from_triggers`` turns the
-  ``(A, B)`` device trigger matrix into one :class:`PrewarmPlan` per tick —
-  no per-application host loop anywhere on the tick path.
-* **Legacy one-hop host plan** (``plan_prewarms``) — the original per-app
+* ``PrewarmPlan.from_store(store, slots, now, table)`` — batched device
+  plan (fused refresh mode): the fused refresh walk records per-walker
+  first-arrival times into every unit; the pipeline reduces them on device
+  into per-(app, backend-class) arrival histograms and trigger quantiles,
+  generalizing the one-hop branch probability p_s to the full reach
+  probability over ALL downstream units.  ``PrewarmTable`` packs the
+  unit -> warmable-backend-class mapping and per-class warm-up durations
+  into device constants; this constructor reads the store's persisted
+  trigger rows — no per-application host loop anywhere on the tick path.
+* ``PrewarmPlan.from_triggers(app_ids, trigger, p_reach, now, table)`` —
+  the same reduction from an explicit ``(A, B)`` device trigger matrix.
+* ``PrewarmPlan.one_hop(graph, app_id, ...)`` — the original per-app
   immediate-successor planner, retained for the looped/composed refresh
   modes and as the closed-form oracle the batched plan is tested against.
+* ``plan.merge(other, is_live)`` — dedup two plans on (app, class), newest
+  trigger winning, dead apps pruned.
+
+The former module-level entry points (``plan_from_store``,
+``plan_from_triggers``, ``plan_prewarms``, ``merge_plans``) remain as
+deprecated wrappers for one release.
 """
 from __future__ import annotations
 
@@ -81,26 +90,17 @@ def plan_prewarms(graph: PDGraph, app_id: str, current_unit: str,
                   unit_start: float, now: float, K: float,
                   warmup_time_of, is_warm, t_in: float, t_out: float
                   ) -> List[PrewarmSignal]:
-    """Prewarm signals for the cold backends of `current_unit`'s downstream
-    units.  `warmup_time_of(resource_key) -> seconds`; `is_warm(key) -> bool`.
-    """
-    cur = graph.units[current_unit]
-    dur = cur.service_samples(t_in, t_out)
-    out: List[PrewarmSignal] = []
-    for nxt, p_s in cur.next_probs().items():
-        if nxt == "$end":
-            continue
-        unit = graph.units[nxt]
-        for key in unit.backend.resource_keys():
-            if is_warm(key):
-                continue
-            t_p = warmup_time_of(key)
-            fire = prewarm_trigger_time(dur, unit_start, now, p_s, t_p, K)
-            if fire is not None:
-                out.append(PrewarmSignal(fire_at=fire, resource_key=key,
-                                         backend_kind=unit.backend.kind,
-                                         app_id=app_id, unit=nxt, p_s=p_s))
-    return out
+    """Deprecated: use :meth:`PrewarmPlan.one_hop` (and its ``signals()``)."""
+    _deprecated("plan_prewarms", "PrewarmPlan.one_hop(...).signals()")
+    return list(PrewarmPlan.one_hop(graph, app_id, current_unit, unit_start,
+                                    now, K, warmup_time_of, is_warm,
+                                    t_in, t_out).signals())
+
+
+def _deprecated(old: str, new: str) -> None:
+    import warnings
+    warnings.warn(f"repro.core.prewarm.{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -158,84 +158,157 @@ def build_prewarm_table(kb: Dict[str, PDGraph], packed: PackedKB,
 
 @dataclass
 class PrewarmPlan:
-    """One tick's batched prewarm decisions: M (application, backend-class)
-    triggers, produced from the fused dispatch's ``(A, B)`` trigger matrix.
-    ``fire_at`` is absolute; ``p_reach`` is the MC probability that the app
-    ever needs the class (the batched generalization of one-hop p_s)."""
+    """A set of prewarm decisions: M (application, backend-class) triggers.
+
+    The single prewarm-planning API (see module docstring): construct via
+    :meth:`from_store` / :meth:`from_triggers` (batched device paths) or
+    :meth:`one_hop` (legacy host path), combine via :meth:`merge`, and
+    execute via :meth:`signals`.  ``fire_at`` is absolute; ``p_reach`` is
+    the probability that the app ever needs the class (the MC reach
+    probability for the batched paths, one-hop branch probability for
+    ``one_hop``).  ``units`` names the downstream unit a trigger is for —
+    the batched paths plan per backend class across ALL downstream units,
+    recorded as ``"*"``."""
     app_ids: List[str]           # (M,)
     resource_keys: List[str]     # (M,) unqualified class keys
     kinds: List[str]             # (M,)
     fire_at: np.ndarray          # (M,) float64 absolute seconds
     p_reach: np.ndarray          # (M,) float32
+    units: Optional[List[str]] = None   # (M,) downstream unit, "*" = any
 
     def __len__(self) -> int:
         return len(self.app_ids)
+
+    def unit_of(self, i: int) -> str:
+        return self.units[i] if self.units is not None else "*"
 
     def signals(self):
         for i in range(len(self.app_ids)):
             yield PrewarmSignal(fire_at=float(self.fire_at[i]),
                                 resource_key=self.resource_keys[i],
                                 backend_kind=self.kinds[i],
-                                app_id=self.app_ids[i], unit="*",
+                                app_id=self.app_ids[i], unit=self.unit_of(i),
                                 p_s=float(self.p_reach[i]))
+
+    # ------------------------------------------------------------ constructors
+    @classmethod
+    def from_store(cls, store, slots: np.ndarray, now: float,
+                   table: "PrewarmTable") -> "PrewarmPlan":
+        """Build one tick's plan from the slot store's persisted trigger rows.
+
+        ``store`` is a :class:`repro.core.arena.QueueState`; ``slots`` names
+        the rows whose ``trig``/``reach`` mirrors are fresh — the walked rows
+        after an event-path refresh, or the WHOLE occupied set after a full
+        delta/mesh tick (retriggering re-conditions every slot's trigger on
+        elapsed service each tick).  This is also the cross-shard merge point
+        of the mesh path: every shard's trigger rows land in the same host
+        mirror, so one call assembles the mesh-wide plan — no per-application
+        loop, no per-shard plan objects."""
+        slots = np.asarray(slots, np.int64)
+        app_ids = [store.ids[int(s)] for s in slots]
+        return cls.from_triggers(app_ids, store.trig[slots],
+                                 store.reach[slots], now, table)
+
+    @classmethod
+    def from_triggers(cls, app_ids: Sequence[str], trigger: np.ndarray,
+                      p_reach: np.ndarray, now: float,
+                      table: "PrewarmTable") -> "PrewarmPlan":
+        """Vectorized (A, B) trigger matrix -> PrewarmPlan.
+
+        ``trigger`` holds device-computed fire times relative to ``now``
+        (>= ``ARRIVAL_NEVER/2`` meaning "do not prewarm"); negative relative
+        triggers clip to `now` (warm-up can no longer finish in time but
+        partial overlap still helps — same clip as the one-hop planner)."""
+        trigger = np.asarray(trigger)
+        a_idx, b_idx = np.nonzero(trigger < ARRIVAL_NEVER / 2)
+        fire = now + np.maximum(trigger[a_idx, b_idx], 0.0)
+        return cls(
+            app_ids=[app_ids[a] for a in a_idx],
+            resource_keys=[table.classes[b] for b in b_idx],
+            kinds=[table.kinds[b] for b in b_idx],
+            fire_at=np.asarray(fire, np.float64),
+            p_reach=np.asarray(p_reach)[a_idx, b_idx].astype(np.float32))
+
+    @classmethod
+    def one_hop(cls, graph: PDGraph, app_id: str, current_unit: str,
+                unit_start: float, now: float, K: float,
+                warmup_time_of, is_warm, t_in: float, t_out: float
+                ) -> "PrewarmPlan":
+        """The legacy host planner: triggers for the cold backends of
+        ``current_unit``'s *immediate* successors only, from the closed-form
+        §3.4 quantile (``warmup_time_of(resource_key) -> seconds``;
+        ``is_warm(key) -> bool``).  Retained for the looped/composed refresh
+        modes and as the oracle the batched plan is tested against."""
+        cur = graph.units[current_unit]
+        dur = cur.service_samples(t_in, t_out)
+        ids: List[str] = []
+        keys: List[str] = []
+        kinds: List[str] = []
+        fires: List[float] = []
+        p: List[float] = []
+        units: List[str] = []
+        for nxt, p_s in cur.next_probs().items():
+            if nxt == "$end":
+                continue
+            unit = graph.units[nxt]
+            for key in unit.backend.resource_keys():
+                if is_warm(key):
+                    continue
+                t_p = warmup_time_of(key)
+                fire = prewarm_trigger_time(dur, unit_start, now, p_s, t_p, K)
+                if fire is not None:
+                    ids.append(app_id)
+                    keys.append(key)
+                    kinds.append(unit.backend.kind)
+                    fires.append(fire)
+                    p.append(p_s)
+                    units.append(nxt)
+        return cls(app_ids=ids, resource_keys=keys, kinds=kinds,
+                   fire_at=np.asarray(fires, np.float64),
+                   p_reach=np.asarray(p, np.float32), units=units)
+
+    # ----------------------------------------------------------------- merge
+    def merge(self, plan: "PrewarmPlan", is_live) -> "PrewarmPlan":
+        """Merge ``plan`` into this one, deduplicating on (app, class) with
+        the NEWER trigger winning (later refreshes carry fresher arrival
+        estimates) and pruning apps for which ``is_live(app_id)`` is False.
+        The scheduler stashes successive per-tick/per-event plans through
+        this, so the stash stays bounded by live-apps x classes however many
+        refreshes land between two host takes."""
+        merged: Dict[tuple, tuple] = {}
+        for p in (self, plan):
+            for i in range(len(p)):
+                if is_live(p.app_ids[i]):
+                    merged[(p.app_ids[i], p.resource_keys[i])] = \
+                        (p.kinds[i], p.fire_at[i], p.p_reach[i],
+                         p.unit_of(i))
+        keys = list(merged)
+        return PrewarmPlan(
+            app_ids=[a for a, _ in keys],
+            resource_keys=[k for _, k in keys],
+            kinds=[merged[k][0] for k in keys],
+            fire_at=np.asarray([merged[k][1] for k in keys], np.float64),
+            p_reach=np.asarray([merged[k][2] for k in keys], np.float32),
+            units=[merged[k][3] for k in keys])
 
 
 def plan_from_store(store, slots: np.ndarray, now: float,
                     table: PrewarmTable) -> PrewarmPlan:
-    """Build one tick's plan from the slot store's persisted trigger rows.
-
-    ``store`` is a :class:`repro.core.arena.QueueState`; ``slots`` names
-    the rows whose ``trig``/``reach`` mirrors are fresh — the walked rows
-    after an event-path refresh, or the WHOLE occupied set after a full
-    delta/mesh tick (retriggering re-conditions every slot's trigger on
-    elapsed service each tick).  This is also the cross-shard merge point
-    of the mesh path: every shard's trigger rows land in the same host
-    mirror, so one call assembles the mesh-wide plan — no per-application
-    loop, no per-shard plan objects."""
-    slots = np.asarray(slots, np.int64)
-    app_ids = [store.ids[int(s)] for s in slots]
-    return plan_from_triggers(app_ids, store.trig[slots],
-                              store.reach[slots], now, table)
+    """Deprecated: use :meth:`PrewarmPlan.from_store`."""
+    _deprecated("plan_from_store", "PrewarmPlan.from_store")
+    return PrewarmPlan.from_store(store, slots, now, table)
 
 
 def plan_from_triggers(app_ids: Sequence[str], trigger: np.ndarray,
                        p_reach: np.ndarray, now: float,
                        table: PrewarmTable) -> PrewarmPlan:
-    """Vectorized (A, B) trigger matrix -> PrewarmPlan.
-
-    ``trigger`` holds device-computed fire times relative to ``now``
-    (>= ``ARRIVAL_NEVER/2`` meaning "do not prewarm"); negative relative
-    triggers clip to `now` (warm-up can no longer finish in time but partial
-    overlap still helps — same clip as the legacy planner)."""
-    trigger = np.asarray(trigger)
-    a_idx, b_idx = np.nonzero(trigger < ARRIVAL_NEVER / 2)
-    fire = now + np.maximum(trigger[a_idx, b_idx], 0.0)
-    return PrewarmPlan(
-        app_ids=[app_ids[a] for a in a_idx],
-        resource_keys=[table.classes[b] for b in b_idx],
-        kinds=[table.kinds[b] for b in b_idx],
-        fire_at=np.asarray(fire, np.float64),
-        p_reach=np.asarray(p_reach)[a_idx, b_idx].astype(np.float32))
+    """Deprecated: use :meth:`PrewarmPlan.from_triggers`."""
+    _deprecated("plan_from_triggers", "PrewarmPlan.from_triggers")
+    return PrewarmPlan.from_triggers(app_ids, trigger, p_reach, now, table)
 
 
 def merge_plans(prev: PrewarmPlan, plan: PrewarmPlan,
                 is_live) -> PrewarmPlan:
-    """Merge two plans, deduplicating on (app, class) with the NEWER
-    trigger winning (later refreshes carry fresher arrival estimates) and
-    pruning apps for which ``is_live(app_id)`` is False.  The scheduler
-    stashes successive per-tick/per-event plans through this, so the stash
-    stays bounded by live-apps x classes however many refreshes land
-    between two host takes."""
-    merged: Dict[tuple, tuple] = {}
-    for p in (prev, plan):
-        for i in range(len(p)):
-            if is_live(p.app_ids[i]):
-                merged[(p.app_ids[i], p.resource_keys[i])] = \
-                    (p.kinds[i], p.fire_at[i], p.p_reach[i])
-    keys = list(merged)
-    return PrewarmPlan(
-        app_ids=[a for a, _ in keys],
-        resource_keys=[k for _, k in keys],
-        kinds=[merged[k][0] for k in keys],
-        fire_at=np.asarray([merged[k][1] for k in keys], np.float64),
-        p_reach=np.asarray([merged[k][2] for k in keys], np.float32))
+    """Deprecated: use :meth:`PrewarmPlan.merge`."""
+    _deprecated("merge_plans", "PrewarmPlan.merge")
+    return prev.merge(plan, is_live)

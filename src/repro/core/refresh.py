@@ -1,7 +1,9 @@
-"""Fused refresh backbone — facade over the split subsystem.
+"""DEPRECATED facade over the split refresh backbone.
 
-PR 5 split the original single-file backbone into three layers; this module
-re-exports the public surface so existing imports keep working:
+PR 5 split the original single-file backbone into three layers, and this
+module kept existing imports working.  It is now a deprecation shim: every
+attribute access re-exports the symbol from its real home and emits a
+:class:`DeprecationWarning`.  Import directly from:
 
 * :mod:`repro.core.arena` — the persistent slot store (``QueueState``):
   slot lifecycle (admit/retire/free-lists), dirty tracking, shard placement
@@ -11,21 +13,40 @@ re-exports the public surface so existing imports keep working:
   the single-device ``refresh_ranks_fused`` / ``refresh_ranks_delta`` entry
   points.
 * :mod:`repro.core.refresh_mesh` — ``RefreshMesh``: the same pipeline
-  partitioned across a device mesh via ``shard_map`` (one shard = one
-  contiguous device-arena block; only ranks, triage scalars and trigger
-  rows are gathered to host).
+  partitioned across a device mesh via ``shard_map``.
 """
-from repro.core.arena import QueueState, build_queue_state  # noqa: F401
-from repro.core.refresh_pipeline import (  # noqa: F401
-    DeltaTick, FusedRefresh, _arrival_hists, _delta_pipeline,
-    _dispatch_rows, _fused_pipeline, _prewarm_args, _prewarm_triggers,
-    _store_results, _triage_stats, _triggers_from_hists, _walk_total,
-    refresh_ranks_delta, refresh_ranks_fused)
-from repro.core.refresh_mesh import (  # noqa: F401
-    MeshTick, RefreshMesh, refresh_ranks_mesh)
+import importlib
+import warnings
+
+_HOMES = {
+    "repro.core.arena": ("QueueState", "build_queue_state"),
+    "repro.core.refresh_pipeline": (
+        "DeltaTick", "FusedRefresh", "_arrival_hists", "_delta_pipeline",
+        "_dispatch_rows", "_fused_pipeline", "_prewarm_args",
+        "_prewarm_triggers", "_store_results", "_triage_stats",
+        "_triggers_from_hists", "_walk_total",
+        "refresh_ranks_delta", "refresh_ranks_fused"),
+    "repro.core.refresh_mesh": ("MeshTick", "RefreshMesh",
+                                "refresh_ranks_mesh"),
+}
+_HOME_OF = {name: mod for mod, names in _HOMES.items() for name in names}
 
 __all__ = [
     "QueueState", "build_queue_state",
     "FusedRefresh", "DeltaTick", "refresh_ranks_fused", "refresh_ranks_delta",
     "MeshTick", "RefreshMesh", "refresh_ranks_mesh",
 ]
+
+
+def __getattr__(name):
+    home = _HOME_OF.get(name)
+    if home is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    warnings.warn(
+        f"repro.core.refresh is deprecated; import {name} from {home}",
+        DeprecationWarning, stacklevel=2)
+    return getattr(importlib.import_module(home), name)
+
+
+def __dir__():
+    return sorted(__all__)

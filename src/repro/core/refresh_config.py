@@ -1,0 +1,123 @@
+"""RefreshConfig: the one validated construction surface for the refresh
+backbone.
+
+Before this module, the knobs that select and tune the priority-refresh
+pipeline — ``refresh_mode``/``mode``, ``walker``, ``mesh_shards``,
+``delta_full_threshold``, ``queue_delay_correction`` — were duplicated as
+loose keyword arguments on both ``HermesScheduler.__init__`` and
+``SimConfig``, each with its own copy of the validation rules (and the
+``mesh_shards``-requires-``fused_delta`` check lived only in the
+scheduler).  ``RefreshConfig`` consolidates them: build one, pass it to
+either entry point::
+
+    from repro.core import RefreshConfig
+    from repro.core.scheduler import HermesScheduler
+    from repro.serving.simulator import SimConfig
+
+    rc = RefreshConfig(mode="fused_delta", walker="pallas", mesh_shards=8)
+    sched = HermesScheduler(kb, policy="gittins", refresh=rc)
+    cfg = SimConfig(policy="gittins", refresh=rc)
+
+The legacy kwargs keep working for one release — both entry points shim
+them into a ``RefreshConfig`` and emit a :class:`DeprecationWarning` —
+and every validation rule now lives in exactly one place,
+``RefreshConfig.__post_init__``.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, replace
+from typing import Optional
+
+MODES = ("looped", "composed", "fused", "fused_delta")
+WALKERS = ("pallas", "threefry")
+
+# sentinel distinguishing "caller never passed this kwarg" from an explicit
+# None/default (the deprecation shims must only warn on explicit use)
+_UNSET = object()
+
+
+@dataclass(frozen=True)
+class RefreshConfig:
+    """Validated refresh-backbone configuration (see module docstring).
+
+    mode
+        ``looped`` (seed per-app walk), ``composed`` (PR-1 batched walk),
+        ``fused`` (one device dispatch per tick), ``fused_delta`` (the
+        default: dirty-set delta refresh over the persistent slot arena).
+    walker
+        Fused-mode MC backend: ``pallas`` (counter-RNG kernel package,
+        fastest) or ``threefry`` (bit-identical streams to composed/looped).
+    mesh_shards
+        Partition the slot arena across this many mesh devices (power of
+        two; requires ``mode="fused_delta"``).  ``None`` keeps the
+        single-arena pipeline; ``1`` runs the mesh pipeline on a degenerate
+        one-device mesh (the scaling baseline).
+    delta_full_threshold
+        Dirty fraction past which a delta tick falls back to re-walking the
+        whole occupied set (the subset gather/scatter stops paying).
+    queue_delay_correction
+        §3.4 refinement: condition prewarm trigger times on each app's
+        observed wall/service stretch EWMA instead of assuming continuous
+        execution.  Off by default (the paper model).
+    """
+    mode: str = "fused_delta"
+    walker: str = "pallas"
+    mesh_shards: Optional[int] = None
+    delta_full_threshold: float = 0.5
+    queue_delay_correction: bool = False
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown refresh mode {self.mode!r}; "
+                             f"known: {MODES}")
+        if self.walker not in WALKERS:
+            raise ValueError(f"unknown fused walker {self.walker!r}; "
+                             f"known: {WALKERS}")
+        if self.mesh_shards is not None:
+            # the one rule that used to live only in HermesScheduler — now
+            # both entry points (and any direct construction) share it
+            if self.mode != "fused_delta":
+                raise ValueError("mesh_shards requires mode='fused_delta' "
+                                 f"(got mode={self.mode!r})")
+            n = self.mesh_shards
+            if n < 1 or n & (n - 1):
+                raise ValueError("mesh_shards must be a power of two, "
+                                 f"got {n}")
+        if not 0.0 <= self.delta_full_threshold <= 1.0:
+            raise ValueError("delta_full_threshold must be in [0, 1], "
+                             f"got {self.delta_full_threshold}")
+
+
+def resolve_refresh_config(refresh: Optional[RefreshConfig], *,
+                           owner: str,
+                           mode=_UNSET, walker=_UNSET, mesh_shards=_UNSET,
+                           delta_full_threshold=_UNSET,
+                           queue_delay_correction=_UNSET,
+                           stacklevel: int = 3) -> RefreshConfig:
+    """Merge a ``RefreshConfig`` with legacy per-field kwargs.
+
+    Shared by both entry points' deprecation shims: every legacy kwarg that
+    was *explicitly* passed (anything not ``_UNSET``) overrides the
+    corresponding ``RefreshConfig`` field and emits a single
+    :class:`DeprecationWarning` naming the replacement.  Passing a field
+    both ways is an error — silently picking one would hide a real
+    configuration bug.
+    """
+    legacy = {k: v for k, v in (
+        ("mode", mode), ("walker", walker), ("mesh_shards", mesh_shards),
+        ("delta_full_threshold", delta_full_threshold),
+        ("queue_delay_correction", queue_delay_correction),
+    ) if v is not _UNSET}
+    if not legacy:
+        return refresh if refresh is not None else RefreshConfig()
+    if refresh is not None:
+        dup = sorted(legacy)
+        raise TypeError(f"{owner}: got both refresh=RefreshConfig(...) and "
+                        f"legacy kwarg(s) {dup}; move them into the "
+                        "RefreshConfig")
+    warnings.warn(
+        f"{owner}: the {sorted(legacy)} kwarg(s) are deprecated; pass "
+        "refresh=RefreshConfig(...) instead (repro.core.refresh_config)",
+        DeprecationWarning, stacklevel=stacklevel)
+    return replace(RefreshConfig(), **legacy)

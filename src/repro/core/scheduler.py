@@ -25,12 +25,14 @@ from repro.core.pdgraph import (PDGraph, mc_service_samples_batch,
                                 pack_graphs)
 from repro.core.policies import (AppView, GittinsPolicy, Policy, VTCPolicy,
                                  make_policy)
+from repro.core.arena import build_queue_state
 from repro.core.prewarm import (PrewarmPlan, PrewarmSignal,
-                                build_prewarm_table, merge_plans,
-                                plan_from_store, plan_prewarms)
-from repro.core.refresh import (RefreshMesh, build_queue_state,
-                                refresh_ranks_delta, refresh_ranks_fused,
-                                refresh_ranks_mesh)
+                                build_prewarm_table)
+from repro.core.refresh_config import (_UNSET, RefreshConfig,
+                                       resolve_refresh_config)
+from repro.core.refresh_mesh import RefreshMesh, refresh_ranks_mesh
+from repro.core.refresh_pipeline import (refresh_ranks_delta,
+                                         refresh_ranks_fused)
 
 
 @dataclass
@@ -60,13 +62,14 @@ class HermesScheduler:
                  K: float = 0.5, n_buckets: int = 10,
                  refine: bool = True, prewarm: bool = True,
                  mc_walkers: int = 512, seed: int = 0,
-                 batched: bool = True, mode: Optional[str] = None,
-                 walker: str = "pallas",
+                 batched: bool = True,
+                 refresh: Optional[RefreshConfig] = None,
+                 mode=_UNSET, walker=_UNSET,
                  compact_after: int = 16, compact_shrink: int = 4,
                  warmup_table: Optional[Dict[str, float]] = None,
-                 delta_full_threshold: float = 0.5,
-                 queue_delay_correction: bool = False,
-                 mesh_shards: Optional[int] = None):
+                 delta_full_threshold=_UNSET,
+                 queue_delay_correction=_UNSET,
+                 mesh_shards=_UNSET):
         self.kb = knowledge_base
         self.policy: Policy = make_policy(policy) if policy != "gittins" \
             else make_policy(policy, n_buckets=n_buckets)
@@ -76,31 +79,27 @@ class HermesScheduler:
         self.refine = refine
         self.prewarm_enabled = prewarm
         self.mc_walkers = mc_walkers
-        # Refresh modes (``mode`` wins; ``batched`` kept for compatibility):
-        #   looped       the seed's per-application walk + histogram loop
-        #   composed     one batched jitted MC dispatch, host histogram,
-        #                second rank dispatch (PR 1; bit-identical streams
-        #                to looped)
-        #   fused        the device-resident pipeline: walk -> bucketize ->
-        #                rank in ONE dispatch over the slot store; only
-        #                small per-app results return
-        #   fused_delta  fused + dirty-set delta refresh: each tick walks
-        #                ONLY the slots whose PDGraph position changed and
-        #                re-ranks the whole arena in place from persisted
-        #                device histograms (full re-walk past
-        #                ``delta_full_threshold`` dirty fraction)
-        # Fused walker: "pallas" = counter-RNG pdgraph_walk kernel package
-        # (distributionally equivalent, fastest); "threefry" = the fold_in
-        # chain (bit-identical samples to composed/looped).
-        self.mode = mode if mode is not None else \
-            ("composed" if batched else "looped")
-        if self.mode not in ("looped", "composed", "fused", "fused_delta"):
-            raise ValueError(f"unknown refresh mode {self.mode!r}")
-        if walker not in ("pallas", "threefry"):
-            raise ValueError(f"unknown fused walker {walker!r}")
+        # The refresh backbone is configured by ONE validated RefreshConfig
+        # (see repro.core.refresh_config for the mode/walker/mesh semantics);
+        # the per-field kwargs remain as deprecation shims for one release.
+        if mode is None:
+            mode = _UNSET      # legacy "derive from ``batched``" spelling
+        rc = resolve_refresh_config(
+            refresh, owner="HermesScheduler",
+            mode=mode, walker=walker, mesh_shards=mesh_shards,
+            delta_full_threshold=delta_full_threshold,
+            queue_delay_correction=queue_delay_correction)
+        if refresh is None and mode is _UNSET:
+            # bare construction keeps the pre-RefreshConfig default: the
+            # ``batched`` flag picks composed vs looped (the simulator's
+            # SimConfig is where fused_delta is the default)
+            rc = dataclasses.replace(
+                rc, mode="composed" if batched else "looped")
+        self.refresh_config = rc
+        self.mode = rc.mode
         self.batched = self.mode != "looped"
-        self.delta_full_threshold = delta_full_threshold
-        self.queue_delay_correction = queue_delay_correction
+        self.delta_full_threshold = rc.delta_full_threshold
+        self.queue_delay_correction = rc.queue_delay_correction
         # Mesh sharding: partition the slot arena over mesh_shards devices
         # and run the whole delta pipeline per shard in one shard_map
         # dispatch (bit-identical to the 1-shard path for the same
@@ -108,13 +107,10 @@ class HermesScheduler:
         # degenerate one-device mesh (the scaling baseline); None keeps the
         # single-arena refresh_ranks_delta path.
         self.refresh_mesh: Optional[RefreshMesh] = None
-        if mesh_shards is not None:
-            if self.mode != "fused_delta":
-                raise ValueError("mesh_shards requires mode='fused_delta' "
-                                 f"(got mode={self.mode!r})")
-            self.refresh_mesh = RefreshMesh(mesh_shards)
+        if rc.mesh_shards is not None:
+            self.refresh_mesh = RefreshMesh(rc.mesh_shards)
         self._stretch_alpha = 0.3       # queue-wait EWMA smoothing
-        self.walker = walker
+        self.walker = rc.walker
         self.compact_after = compact_after
         self.compact_shrink = compact_shrink
         if hasattr(self.policy, "vectorized"):
@@ -303,7 +299,7 @@ class HermesScheduler:
             with_triage=self._with_triage)
         self.fused_spill += out.spill
         if tab is not None:
-            self._stash_plan(plan_from_store(qs, slots, now, tab))
+            self._stash_plan(PrewarmPlan.from_store(qs, slots, now, tab))
         triage = out.sup is not None
         for i, a in enumerate(apps):
             a.refreshes += 1
@@ -377,7 +373,8 @@ class HermesScheduler:
             # queue; event-path refreshes only re-planned the walked rows
             plan_slots = qs.occupied() if full else walked
             if len(plan_slots):
-                self._stash_plan(plan_from_store(qs, plan_slots, now, tab))
+                self._stash_plan(PrewarmPlan.from_store(qs, plan_slots,
+                                                        now, tab))
         if len(walked):
             qs.bump_refresh(walked)
             for s in walked:
@@ -438,7 +435,8 @@ class HermesScheduler:
         if tab is not None:
             plan_slots = qs.occupied() if full else walked
             if len(plan_slots):
-                self._stash_plan(plan_from_store(qs, plan_slots, now, tab))
+                self._stash_plan(PrewarmPlan.from_store(qs, plan_slots,
+                                                        now, tab))
         if type(self.policy) is GittinsPolicy:
             # incremental consumption: only the re-ranked slots touch the
             # cached dict (retires prune it in _retire; a store rebuild
@@ -486,18 +484,17 @@ class HermesScheduler:
     def _stash_plan(self, plan: PrewarmPlan) -> None:
         """Accumulate plans until the host takes them (several subset
         refreshes — or several shards' rows — may land between two
-        take_prewarm_plan calls).  ``merge_plans`` dedups on (app, class)
-        with the NEWEST trigger winning — later refreshes have fresher
-        arrival estimates — so the stash is bounded by live-apps x classes
-        even if no host ever takes it."""
+        take_prewarm_plan calls).  ``PrewarmPlan.merge`` dedups on (app,
+        class) with the NEWEST trigger winning — later refreshes have
+        fresher arrival estimates — so the stash is bounded by live-apps x
+        classes even if no host ever takes it."""
         if len(plan) == 0:
             return
         prev = self.prewarm_plan
         if prev is None or len(prev) == 0:
             self.prewarm_plan = plan
             return
-        self.prewarm_plan = merge_plans(prev, plan,
-                                        self._live.__contains__)
+        self.prewarm_plan = prev.merge(plan, self._live.__contains__)
 
     # -------------------------------------------------------------- events
     def on_arrival(self, app_id: str, app_name: str, now: float, *,
@@ -627,6 +624,15 @@ class HermesScheduler:
         else:
             live = [self.apps[i] for i in app_ids
                     if i in self.apps and not self.apps[i].done]
+        if getattr(self.policy, "view_free", False):
+            # rank reads only per-app scheduler state (arrival / tenant /
+            # deadline — AppRuntime carries the same fields AppView does),
+            # never the demand estimate: skip the MC view refresh entirely.
+            # Rank values are identical to the refreshed-view path.
+            if not live:
+                return {}
+            ranks = self.policy.ranks(live, now)
+            return {a.app_id: float(r) for a, r in zip(live, ranks)}
         if self._fused_active():
             stale = [a for a in live if a.view is None]
             self._refresh_views_fused(stale, now)
@@ -644,6 +650,60 @@ class HermesScheduler:
             return {}
         ranks = self.policy.ranks(views, now)
         return {a.app_id: float(r) for a, r in zip(live, ranks)}
+
+    def priorities_arrays(self, now: float,
+                          app_ids: Optional[List[str]] = None
+                          ) -> Tuple[List[str], np.ndarray]:
+        """Array-facing twin of :meth:`priorities`: ``(app_ids, ranks)``
+        with the ranks as one float64 vector instead of a dict of boxed
+        floats.  Array-native hosts (the simulator's calendar engine)
+        scatter the vector straight into their rank columns — at 100k live
+        applications the per-app dict build is itself a per-tick O(Q) host
+        cost worth deleting.  Fast paths:
+
+        * view-free policies rank straight off the AppRuntime records (no
+          view refresh, no dict);
+        * Gittins over the mesh/delta store serves slot-aligned rank
+          mirrors gathered in one vectorized read;
+        * everything else falls back through :meth:`priorities`.
+
+        Rank values are bit-identical to :meth:`priorities` for the same
+        state."""
+        if getattr(self.policy, "view_free", False):
+            if app_ids is None:
+                live = list(self._live.values())
+            else:
+                live = [self.apps[i] for i in app_ids
+                        if i in self.apps and not self.apps[i].done]
+            if not live:
+                return [], np.zeros(0)
+            return ([a.app_id for a in live],
+                    np.asarray(self.policy.ranks(live, now), np.float64))
+        d = self.priorities(now, app_ids)
+        return list(d), np.fromiter(d.values(), np.float64, count=len(d))
+
+    def on_arrivals(self, items: List[tuple], now: float) -> None:
+        """Batch admission: ``items`` is a list of ``(app_id, app_name,
+        tenant, deadline)``.  Equivalent to calling :meth:`on_arrival` per
+        item in order (same slot assignment, same dirty marks), but the
+        slot-store writes land through one ``admit_many`` call — the
+        array-native host path for arrival bursts."""
+        packed = self._qstate_if_current()
+        rows = []
+        for app_id, app_name, tenant, deadline in items:
+            g = self.kb[app_name]
+            app = AppRuntime(app_id=app_id, app_name=app_name, tenant=tenant,
+                             arrival=now, deadline=deadline,
+                             current_unit=g.entry, unit_start=now,
+                             key_id=next(self._app_seq))
+            self.apps[app_id] = app
+            self._live[app_id] = app
+            if packed is not None:
+                gi = packed.graph_index[app_name]
+                rows.append((app_id, gi, int(packed.entry[gi]),
+                             app.key_id, deadline))
+        if rows:
+            self._qstate.admit_many(rows)
 
     def refresh_tick(self, now: float, *,
                      resample: bool = False) -> Dict[str, float]:
@@ -692,6 +752,6 @@ class HermesScheduler:
         if app.done or app.current_unit is None:
             return []
         g = self.kb[app.app_name]
-        return plan_prewarms(g, app_id, app.current_unit, app.unit_start,
-                             now, self.K, warmup_time_of, is_warm,
-                             self.t_in, self.t_out)
+        return list(PrewarmPlan.one_hop(
+            g, app_id, app.current_unit, app.unit_start, now, self.K,
+            warmup_time_of, is_warm, self.t_in, self.t_out).signals())

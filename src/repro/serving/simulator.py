@@ -7,11 +7,25 @@ priority refresh with preemption at bucket boundaries, and PDGraph-driven
 prewarming.  The scheduler under test is the real ``HermesScheduler`` — the
 simulator only supplies ground truth (pre-sampled trajectories) and time.
 
+Two host engines share one drain loop (``SimConfig.engine``):
+
+* ``calendar`` (default) — the array-native engine: a bucketed calendar
+  queue over numpy arrays for events, vectorized ``lexsort`` waiting
+  queues, batch admission (``HermesScheduler.on_arrivals`` →
+  ``QueueState.admit_many``) and ranks consumed as one vector per refresh
+  (``priorities_arrays``) scattered into a dense host rank column.  This
+  is what makes 100k-concurrent-app open-arrival traces runnable.
+* ``heap`` — the seed's ``heapq`` event loop, per-app rank dicts and
+  heap waiting queues, kept verbatim as the bit-equivalence oracle and
+  benchmark baseline (``benchmarks/sim_scale.py``).
+
+Both engines produce identical completion orders and ``SimResult`` stats
+for the same trace (pinned by ``tests/test_sim_engine.py``).
+
 This is the harness behind Figs. 9-15.
 """
 from __future__ import annotations
 
-import heapq
 import itertools
 import time as _time
 from dataclasses import dataclass, field
@@ -24,7 +38,10 @@ from repro.apps.suite import T_IN, T_OUT
 from repro.apps.workload import AppInstance
 from repro.core.hermeslet import HermesLet
 from repro.core.pdgraph import PDGraph
+from repro.core.refresh_config import (RefreshConfig, _UNSET,
+                                       resolve_refresh_config)
 from repro.core.scheduler import HermesScheduler
+from repro.serving.events import ENGINES, make_event_queue, make_wait_queue
 
 
 @dataclass
@@ -47,23 +64,20 @@ class SimConfig:
     mc_walkers: int = 256
     n_buckets: int = 10
     seed: int = 0
-    # priority-refresh pipeline: "fused_delta" (the default since the PR-4
-    # soak: dirty-set delta refresh over the persistent slot store — event
-    # handlers mark dirty slots, each tick re-walks only those and re-ranks
-    # the arena in place; prewarm triggers re-condition on elapsed service
-    # every tick), "fused" (full device-resident walk->bucketize->rank->
-    # prewarm dispatch each tick), "composed" (PR 1 batched path), "looped"
-    # (seed baseline); `walker` picks the fused MC backend; `mesh_shards`
-    # partitions the slot arena across a device mesh (fused_delta only;
-    # needs >= mesh_shards visible devices — on CPU force them with
-    # XLA_FLAGS=--xla_force_host_platform_device_count=N)
-    refresh_mode: str = "fused_delta"
-    walker: str = "pallas"
-    mesh_shards: Optional[int] = None
-    # §3.4 queueing-delay correction: condition prewarm trigger times on the
-    # app's observed queue wait (per-app wall/service EWMA) instead of
-    # assuming continuous execution.  Off by default — the paper's model.
-    queue_delay_correction: bool = False
+    # host event engine: "calendar" = the array-native calendar-queue
+    # engine (the default); "heap" = the seed's heapq loop (bit-equivalent,
+    # kept as the equivalence oracle and benchmark baseline)
+    engine: str = "calendar"
+    # priority-refresh pipeline configuration: ONE validated RefreshConfig
+    # (mode / walker / mesh_shards / delta_full_threshold /
+    # queue_delay_correction — see repro.core.refresh_config).  The
+    # per-field kwargs below keep working for one release as
+    # DeprecationWarning shims.
+    refresh: Optional[RefreshConfig] = None
+    refresh_mode: Optional[str] = None            # deprecated -> refresh
+    walker: Optional[str] = None                  # deprecated -> refresh
+    mesh_shards: Optional[int] = None             # deprecated -> refresh
+    queue_delay_correction: Optional[bool] = None  # deprecated -> refresh
     # epwq prefetch window: how many upcoming trajectory units (starting at
     # the one being spawned) get their backend keys prefetched when tasks
     # enqueue.  1 = the CachedAttention-style current-unit-only baseline.
@@ -76,9 +90,26 @@ class SimConfig:
     warmup_model: Optional[str] = None
     keep_alive_s: Optional[float] = None
 
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown sim engine {self.engine!r}; "
+                             f"known: {ENGINES}")
+        kw = {}
+        if self.refresh_mode is not None:
+            kw["mode"] = self.refresh_mode
+        if self.walker is not None:
+            kw["walker"] = self.walker
+        if self.mesh_shards is not None:
+            kw["mesh_shards"] = self.mesh_shards
+        if self.queue_delay_correction is not None:
+            kw["queue_delay_correction"] = self.queue_delay_correction
+        # stacklevel: resolve -> __post_init__ -> generated __init__ -> user
+        self.refresh = resolve_refresh_config(self.refresh, owner="SimConfig",
+                                              stacklevel=4, **kw)
 
-@dataclass
-class SimTask:
+
+@dataclass(eq=False)   # identity equality: tasks are unique live objects,
+class SimTask:         # and pool membership tests must not scan field-wise
     task_id: int
     app_id: str
     unit: str
@@ -118,6 +149,9 @@ class SimResult:
     # cold-start consequences the caches can't see: stall seconds charged
     # to task starts, cold-hit counts, prewarm signals scheduled
     stall_stats: Dict[str, float] = field(default_factory=dict)
+    # app ids in completion order (ties resolved by event order) — the
+    # engine bit-equivalence contract compares this list verbatim
+    completion_order: List[str] = field(default_factory=list)
 
     @property
     def prewarm_stats(self) -> Dict[str, float]:
@@ -150,6 +184,7 @@ class ClusterSim:
     def __init__(self, kb: Dict[str, PDGraph], cfg: SimConfig):
         self.kb = kb
         self.cfg = cfg
+        self.engine = cfg.engine
         warmup = {}
         if cfg.warmup_model:
             from repro.core.hermeslet import warmup_table_from_model
@@ -162,10 +197,8 @@ class ClusterSim:
             n_buckets=cfg.n_buckets, refine=cfg.refine,
             prewarm=(cfg.prewarm_mode == "hermes"),
             mc_walkers=cfg.mc_walkers, seed=cfg.seed,
-            mode=cfg.refresh_mode, walker=cfg.walker,
-            mesh_shards=cfg.mesh_shards,
-            warmup_table=self.warmup_table,
-            queue_delay_correction=cfg.queue_delay_correction)
+            refresh=cfg.refresh,
+            warmup_table=self.warmup_table)
         self.let = HermesLet(kv_capacity=cfg.kv_capacity,
                              lora_capacity=cfg.lora_capacity,
                              docker_capacity=cfg.docker_capacity,
@@ -174,56 +207,92 @@ class ClusterSim:
                              keep_alive_s=cfg.keep_alive_s)
         self.slots = {"llm": cfg.n_llm_slots, "docker": cfg.n_docker_slots,
                       "dnn": cfg.n_dnn_slots}
-        self.running: Dict[str, List[SimTask]] = {k: [] for k in self.slots}
-        # waiting queues are heaps of (rank_key, task); keys go stale when
-        # ranks refresh, so full refreshes rebuild the heaps (O(Q)) instead
-        # of resorting every queue on every event (O(E * Q log Q))
-        self.waiting: Dict[str, List[Tuple[tuple, SimTask]]] = \
-            {k: [] for k in self.slots}
+        # running pools are insertion-ordered dicts: iteration order matches
+        # the seed's append/remove list exactly, but retire is O(1) instead
+        # of an O(slots) field-wise list scan per completion
+        self.running: Dict[str, Dict[SimTask, None]] = \
+            {k: {} for k in self.slots}
+        # waiting queues hold (rank_key, task) with keys snapshotted at push
+        # time; keys go stale when ranks refresh, so full refreshes re-key
+        # and rebuild each queue — a heapify of Python tuples on the heap
+        # engine, one vectorized gather + lexsort on the calendar engine
+        self.waiting = {k: make_wait_queue(self.engine) for k in self.slots}
         self.apps: Dict[str, AppSim] = {}
-        self.events: List[Tuple[float, int, str, object]] = []
-        self._eid = itertools.count()
+        self.events = make_event_queue(self.engine, bucket_s=cfg.bucket_s)
         self._tid = itertools.count()
         self.now = 0.0
         self.rng = np.random.default_rng(cfg.seed + 1)
         self.policy_time = 0.0
         self.policy_calls = 0
+        # rank store: the heap engine keeps the seed's per-app dict; the
+        # calendar engine keeps a dense float64 column indexed by a stable
+        # per-app host index (assigned at arrival) that rank vectors from
+        # priorities_arrays scatter into and waiting-queue rebuilds gather
+        # from — no per-app boxing anywhere on the tick path
         self._ranks: Dict[str, float] = {}
+        self._app_ai: Dict[str, int] = {}
+        self._rank_arr = np.full(1024, np.inf)
+        self._completions: List[str] = []
         self._prewarm_fired: Dict[Tuple[str, str, str], float] = {}
         # backend cold/warm consequences (surfaced in SimResult.prewarm_stats)
         self.coldstart_stall_s = 0.0   # task wall time spent waiting on loads
         self.coldstart_events = 0      # task starts that hit a cold backend
         self.prewarm_pushed = 0        # prewarm signals scheduled
+        # mid-run progress credit is observable only through preemption,
+        # progress-dependent ranks, or demand-driven prewarm (see _on_tick)
+        self._tick_credit = (cfg.preemptive
+                             or cfg.prewarm_mode == "hermes"
+                             or not getattr(self.sched.policy,
+                                            "static_ranks", False))
 
     # ----------------------------------------------------------- event glue
     def _push(self, t: float, kind: str, payload=None):
-        heapq.heappush(self.events, (t, next(self._eid), kind, payload))
+        self.events.push(t, kind, payload)
 
     # -------------------------------------------------------------- running
-    def run(self, instances: List[AppInstance]) -> SimResult:
+    def run(self, instances: List[AppInstance], *,
+            max_events: Optional[int] = None,
+            progress=None) -> SimResult:
+        """Drive the trace to completion.  ``max_events`` stops the loop
+        after that many drained events (benchmark windows over overload
+        traces that would otherwise run for hours on the baseline engine);
+        ``progress`` is an optional callable invoked with the sim after
+        every drained micro-batch (scale benchmarks sample wall clock vs
+        queue size through it).  Both default to off and leave the hot loop
+        untouched."""
         for inst in instances:
             self._push(inst.arrival, "arrival", inst)
         self._push(self.cfg.bucket_s, "tick", None)
         remaining_apps = len(instances)
+        self.events_processed = 0
 
-        while self.events and remaining_apps > 0:
+        while len(self.events) and remaining_apps > 0 and \
+                (max_events is None or self.events_processed < max_events):
             # micro-batch: drain EVERY event with this timestamp, then run
             # one rank refresh + one reschedule for the whole batch instead
             # of one per popped event (same-t arrivals/completions are the
-            # norm under bursty traces and slot-width unit fan-out)
-            t, _, kind, payload = heapq.heappop(self.events)
+            # norm under bursty traces and slot-width unit fan-out).  Both
+            # engines share this drain contract (events.next_batch).
+            t, batch = self.events.next_batch()
             self.now = max(self.now, t)
-            batch = [(kind, payload)]
-            while self.events and self.events[0][0] == t:
-                _, _, k2, p2 = heapq.heappop(self.events)
-                batch.append((k2, p2))
             touched: List[str] = []
             full_refresh = False
             spawns: List[AppSim] = []
-            for kind, payload in batch:
+            i, n = 0, len(batch)
+            while i < n:
+                kind, payload = batch[i]
                 if kind == "arrival":
-                    self._on_arrival(payload, touched, spawns)
-                elif kind == "task_done":
+                    # consecutive arrivals admit as ONE batch (index-array
+                    # admission on the slot store); handler order within
+                    # the micro-batch is unchanged
+                    j = i + 1
+                    while j < n and batch[j][0] == "arrival":
+                        j += 1
+                    self._on_arrivals([p for _, p in batch[i:j]],
+                                      touched, spawns)
+                    i = j
+                    continue
+                if kind == "task_done":
                     task, epoch = payload
                     if task.epoch == epoch and task.running:
                         done = self._on_task_done(task, touched, spawns)
@@ -235,14 +304,18 @@ class ClusterSim:
                     full_refresh = True
                     if remaining_apps > 0:
                         self._push(self.now + self.cfg.bucket_s, "tick", None)
+                i += 1
             if full_refresh:
-                self._refresh_ranks()
+                self._refresh_ranks(touched=list(dict.fromkeys(touched)))
             elif touched:
                 self._refresh_ranks(list(dict.fromkeys(touched)))
             for sim in spawns:          # enqueue with freshly-computed ranks
                 if sim.finished is None:
                     self._spawn_unit(sim)
             self._reschedule()
+            self.events_processed += n
+            if progress is not None:
+                progress(self)
 
         self.let.finalize(self.now)
         stall_stats = {
@@ -262,36 +335,51 @@ class ClusterSim:
             policy_time_s=self.policy_time,
             policy_calls=self.policy_calls,
             makespan=self.now,
-            stall_stats=stall_stats)
+            stall_stats=stall_stats,
+            completion_order=list(self._completions))
 
     # --------------------------------------------------------------- events
-    def _on_arrival(self, inst: AppInstance, touched: List[str],
-                    spawns: List[AppSim]):
-        sim = AppSim(inst=inst)
-        # true demand incl. expected cold starts (what the oracle of a real
-        # system would know about wall cost)
+    def _on_arrivals(self, insts: List[AppInstance], touched: List[str],
+                     spawns: List[AppSim]):
+        """Admit a same-timestamp arrival burst: per-app host bookkeeping,
+        then ONE batched scheduler admission (``on_arrivals`` →
+        ``admit_many``).  Equivalent to admitting one at a time in order."""
         from repro.apps.spec import coldstart_overhead
         from repro.apps.suite import SUITE
-        sim.true_remaining = trajectory_service(inst.trajectory,
-                                                self.cfg.t_in, self.cfg.t_out)
-        base_name = inst.app_name.split("#")[0]
-        if base_name in SUITE:
-            sim.true_remaining += coldstart_overhead(SUITE[base_name],
-                                                     inst.trajectory,
-                                                     self.warmup_table)
-        self.apps[inst.app_id] = sim
-        self.sched.on_arrival(inst.app_id, inst.app_name, self.now,
-                              tenant=inst.tenant, deadline=inst.deadline)
-        self.sched.set_oracle(inst.app_id, sim.true_remaining)
-        if self.cfg.prewarm_mode == "hermes":
-            # application viewpoint: arrival IS the signal for the entry
-            # unit's backends (p_s = 1) — start loads in parallel with the
-            # queue wait instead of at slot assignment
-            g = self.kb[inst.app_name]
-            for key in g.units[g.entry].backend.resource_keys():
-                self.let.prewarm(self._qualify(key, inst.app_id), self.now)
-        touched.append(inst.app_id)
-        spawns.append(sim)
+        for inst in insts:
+            sim = AppSim(inst=inst)
+            # true demand incl. expected cold starts (what the oracle of a
+            # real system would know about wall cost)
+            sim.true_remaining = trajectory_service(
+                inst.trajectory, self.cfg.t_in, self.cfg.t_out)
+            base_name = inst.app_name.split("#")[0]
+            if base_name in SUITE:
+                sim.true_remaining += coldstart_overhead(SUITE[base_name],
+                                                         inst.trajectory,
+                                                         self.warmup_table)
+            self.apps[inst.app_id] = sim
+            if self.engine == "calendar":
+                ai = self._app_ai[inst.app_id] = len(self._app_ai)
+                if ai >= len(self._rank_arr):
+                    grown = np.full(2 * len(self._rank_arr), np.inf)
+                    grown[:ai] = self._rank_arr
+                    self._rank_arr = grown
+        self.sched.on_arrivals(
+            [(i.app_id, i.app_name, i.tenant, i.deadline) for i in insts],
+            self.now)
+        for inst in insts:
+            sim = self.apps[inst.app_id]
+            self.sched.set_oracle(inst.app_id, sim.true_remaining)
+            if self.cfg.prewarm_mode == "hermes":
+                # application viewpoint: arrival IS the signal for the entry
+                # unit's backends (p_s = 1) — start loads in parallel with
+                # the queue wait instead of at slot assignment
+                g = self.kb[inst.app_name]
+                for key in g.units[g.entry].backend.resource_keys():
+                    self.let.prewarm(self._qualify(key, inst.app_id),
+                                     self.now)
+            touched.append(inst.app_id)
+            spawns.append(sim)
 
     def _qualify(self, key: str, app_id: str) -> str:
         """Docker containers are per-application-run (the paper's code-exec
@@ -350,7 +438,7 @@ class ClusterSim:
 
     def _push_signals(self, sigs):
         # dedupe per (app, unit, key) so each tick's recomputed triggers
-        # don't flood the event heap, with two escape hatches: the tag
+        # don't flood the event queue, with two escape hatches: the tag
         # expires one keep-alive after the recorded fire time (a key evicted
         # after long idle can be re-prewarmed on unit revisits), and a
         # CORRECTED earlier trigger always goes through (fresher estimates
@@ -387,7 +475,7 @@ class ClusterSim:
         """Returns True when the whole application finished."""
         self._credit(task)
         task.running = False
-        self.running[task.kind].remove(task)
+        del self.running[task.kind][task]
         sim = self.apps[task.app_id]
         sim.open_tasks -= 1
         if sim.open_tasks > 0:
@@ -400,6 +488,7 @@ class ClusterSim:
         self.sched.on_unit_finish(task.app_id, unit, obs, self.now, nxt)
         if nxt is None:
             sim.finished = self.now
+            self._completions.append(task.app_id)
             self._ranks.pop(task.app_id, None)
             return True
         touched.append(task.app_id)
@@ -407,24 +496,63 @@ class ClusterSim:
         return False
 
     def _on_tick(self):
+        # per-tick progress crediting exists for readers of mid-run attained
+        # service: preemption (task.remaining), rank policies whose priority
+        # moves with progress, and the PDGraph prewarm planner's demand
+        # views.  When none of those can read it — admission-fixed ranks,
+        # non-preemptive, no demand-driven prewarm — each task's full credit
+        # still lands at completion, so skip the O(running) sweep
+        if not self._tick_credit:
+            return
         for pool in self.running.values():
             for task in pool:
                 self._credit(task)
 
-    def _refresh_ranks(self, app_ids=None):
-        """Full queue refresh on bucket ticks (stale heap keys rebuilt).
-        Between ticks, policies whose ranks depend only on the app's own
-        state re-rank just the applications an event touched; policies with
-        cross-app or time-dependent ranks (VTC counters, deadline slack)
-        keep the seed's full re-rank on every event."""
+    def _refresh_ranks(self, app_ids=None, touched=None):
+        """Full queue refresh on bucket ticks (stale waiting keys re-keyed
+        and rebuilt; ``touched`` carries the app ids the batch's events hit
+        so fast paths know what could have moved).  Between ticks, policies
+        whose ranks depend only on the app's own state re-rank just the
+        applications an event touched; policies with cross-app or
+        time-dependent ranks (VTC counters, deadline slack) keep the seed's
+        full re-rank on every event."""
         t0 = _time.perf_counter()
-        if app_ids is not None and \
-                getattr(self.sched.policy, "independent_ranks", True):
-            self._ranks.update(self.sched.priorities(self.now,
-                                                     app_ids=app_ids))
+        policy = self.sched.policy
+        subset = app_ids is not None and \
+            getattr(policy, "independent_ranks", True)
+        task_level = getattr(policy, "task_level", False)
+        static = getattr(policy, "static_ranks", False) and \
+            getattr(policy, "independent_ranks", True)
+        if self.engine == "calendar":
+            if subset:
+                sel = app_ids
+            elif static:
+                # admission-fixed ranks: a full tick can only have NEW rows
+                # to write (this batch's arrivals/transitions); everything
+                # already in the column is final
+                sel = touched or []
+            else:
+                sel = None
+            if sel is None or sel:
+                ids, ranks = self.sched.priorities_arrays(self.now, sel)
+                if ids:
+                    idx = np.fromiter((self._app_ai[i] for i in ids),
+                                      np.int64, count=len(ids))
+                    self._rank_arr[idx] = ranks
+            if not subset and not task_level and not static:
+                # task-level keys are rank-independent and static ranks are
+                # push-time-final: those queues never need re-keying;
+                # everyone else re-keys in one gather
+                for wq in self.waiting.values():
+                    wq.rebuild(self._rank_arr)
         else:
-            self._ranks = self.sched.priorities(self.now)
-            self._rebuild_waiting()
+            if subset:
+                self._ranks.update(self.sched.priorities(self.now,
+                                                         app_ids=app_ids))
+            else:
+                self._ranks = self.sched.priorities(self.now)
+                for wq in self.waiting.values():
+                    wq.rebuild(self._task_rank)
         self.policy_time += _time.perf_counter() - t0
         self.policy_calls += 1
         if self.sched.prewarm_batched:
@@ -434,21 +562,18 @@ class ClusterSim:
     def _task_rank(self, task: SimTask) -> Tuple[float, float, int]:
         if getattr(self.sched.policy, "task_level", False):
             return (task.submitted, task.task_id, 0)
-        return (self._ranks.get(task.app_id, np.inf), task.submitted,
-                task.task_id)
+        if self.engine == "calendar":
+            r = float(self._rank_arr[self._app_ai[task.app_id]])
+        else:
+            r = self._ranks.get(task.app_id, np.inf)
+        return (r, task.submitted, task.task_id)
 
     def _enqueue(self, task: SimTask):
-        heapq.heappush(self.waiting[task.kind], (self._task_rank(task), task))
-
-    def _rebuild_waiting(self):
-        for kind, entries in self.waiting.items():
-            if entries:
-                fresh = [(self._task_rank(t), t) for _, t in entries]
-                heapq.heapify(fresh)
-                self.waiting[kind] = fresh
+        ai = self._app_ai[task.app_id] if self.engine == "calendar" else -1
+        self.waiting[task.kind].push(self._task_rank(task), task, ai)
 
     def _start(self, task: SimTask):
-        if self.cfg.queue_delay_correction:
+        if self.cfg.refresh.queue_delay_correction:
             self.sched.observe_queue_wait(
                 task.app_id, self.now - task.submitted, task.service)
         ready = self.now
@@ -462,33 +587,33 @@ class ClusterSim:
         task.ready_at = ready
         task.last_credit = self.now
         task.epoch += 1
-        self.running[task.kind].append(task)
+        self.running[task.kind][task] = None
         self._push(ready + task.remaining, "task_done", (task, task.epoch))
 
     def _preempt(self, task: SimTask):
         self._credit(task)
         task.running = False
         task.epoch += 1
-        self.running[task.kind].remove(task)
+        del self.running[task.kind][task]
         self._enqueue(task)
 
     def _reschedule(self):
         for kind, cap in self.slots.items():
             wq = self.waiting[kind]
             # fill free slots
-            while wq and len(self.running[kind]) < cap:
-                self._start(heapq.heappop(wq)[1])
-            if not self.cfg.preemptive or not wq:
+            while len(wq) and len(self.running[kind]) < cap:
+                self._start(wq.pop())
+            if not self.cfg.preemptive or not len(wq):
                 continue
             # preempt: lowest-priority running vs highest-priority waiting
-            while wq:
+            while len(wq):
                 run = self.running[kind]
                 victim = max(run, key=self._task_rank, default=None)
                 if victim is None or victim.ready_at > self.now:
                     break
-                if wq[0][0] < self._task_rank(victim):
+                if wq.peek_key() < self._task_rank(victim):
                     self._preempt(victim)
-                    self._start(heapq.heappop(wq)[1])
+                    self._start(wq.pop())
                 else:
                     break
 

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
-from repro.core.refresh import build_queue_state
+from repro.core.arena import build_queue_state
 from repro.core.scheduler import HermesScheduler
 
 

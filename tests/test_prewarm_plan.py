@@ -259,14 +259,15 @@ def test_model_zoo_warmup_table_scales_with_architecture():
 
 
 def test_arrival_never_sentinel_is_plan_threshold():
-    """plan_from_triggers drops exactly the ARRIVAL_NEVER-marked cells."""
-    from repro.core.prewarm import PrewarmTable, plan_from_triggers
+    """from_triggers drops exactly the ARRIVAL_NEVER-marked cells."""
+    from repro.core.prewarm import PrewarmPlan, PrewarmTable
     tab = PrewarmTable(classes=("docker:x", "kv:y"), kinds=("docker", "llm"),
                        unit_class=np.zeros((1, 1, 1), np.int32),
                        warmup=np.zeros(2, np.float32))
     trig = np.asarray([[5.0, ARRIVAL_NEVER], [-3.0, 2.0]], np.float32)
     reach = np.full((2, 2), 0.9, np.float32)
-    plan = plan_from_triggers(["a0", "a1"], trig, reach, now=100.0, table=tab)
+    plan = PrewarmPlan.from_triggers(["a0", "a1"], trig, reach,
+                                     now=100.0, table=tab)
     got = {(a, k): t for a, k, t in
            zip(plan.app_ids, plan.resource_keys, plan.fire_at)}
     assert got == {("a0", "docker:x"): 105.0, ("a1", "docker:x"): 100.0,

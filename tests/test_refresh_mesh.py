@@ -16,7 +16,7 @@ import pytest
 import jax
 
 from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
-from repro.core.refresh import RefreshMesh
+from repro.core.refresh_mesh import RefreshMesh
 from repro.core.scheduler import HermesScheduler
 
 MC = 32

@@ -1,0 +1,350 @@
+"""Array-native event engine vs the seed's heap engine.
+
+The contract (``repro.serving.events``): for the same pushes, both event
+queues emit IDENTICAL ``(t, batch)`` sequences — same timestamps, same
+micro-batch contents, same within-batch order — and both waiting queues pop
+in identical order across pushes, pops, and full rank rebuilds.  On top of
+that, ``ClusterSim`` with ``engine="calendar"`` must reproduce the heap
+engine's ``SimResult`` *exactly* (completion order, ACTs, makespan, cache
+stats) on randomized open-arrival traces, including simultaneous-event
+bursts and mid-run arena repacks.
+
+Also here: the RefreshConfig deprecation-shim round-trips (legacy kwargs
+warn but resolve to the identical config; mixing old and new spellings is a
+TypeError) and the ``repro.core.refresh`` facade / legacy prewarm entry
+point deprecations.
+"""
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
+from repro.apps.workload import make_open_workload, make_workload
+from repro.core.prewarm import PrewarmPlan
+from repro.core.refresh_config import RefreshConfig, resolve_refresh_config
+from repro.core.scheduler import HermesScheduler
+from repro.serving.events import (ArrayWaitQueue, CalendarEventQueue,
+                                  HeapEventQueue, HeapWaitQueue,
+                                  make_event_queue, make_wait_queue)
+from repro.serving.simulator import ClusterSim, SimConfig, run_sim
+
+_KB = None
+
+
+def _kb():
+    """Module-lazy KB (hypothesis-driven tests can't take fixtures)."""
+    global _KB
+    if _KB is None:
+        _KB = build_knowledge_base(n_trials=40, seed=3)
+    return _KB
+
+
+# ---------------------------------------------------------------- event queue
+
+def _drive_both(rng, n_rounds=40):
+    """Random interleaving of pushes and drains, exercising: timestamp ties,
+    pushes into the bucket currently being drained (the late-buffer path),
+    wheel-crossing gaps, and many-runs compaction.  Asserts the two engines
+    emit identical batch sequences."""
+    h, c = HeapEventQueue(), CalendarEventQueue(bucket_s=1.0)
+    # offsets are multiples of 0.25 so exact-tie timestamps are common
+    now, uid = 0.0, 0
+    for _ in range(int(rng.integers(1, 5))):
+        t = float(rng.integers(0, 16)) * 0.25
+        h.push(t, "e", uid)
+        c.push(t, "e", uid)
+        uid += 1
+    for _ in range(n_rounds):
+        if len(h) == 0:
+            break
+        th, bh = h.next_batch()
+        tc, bc = c.next_batch()
+        assert th == tc
+        assert bh == bc
+        now = th
+        # follow-up pushes at t >= now: 0 (re-tie, same bucket), small
+        # (same/next bucket), large (skips buckets)
+        for _ in range(int(rng.integers(0, 4))):
+            dt = float(rng.choice([0.0, 0.25, 0.5, 1.0, 3.25, 7.0]))
+            h.push(now + dt, "e", uid)
+            c.push(now + dt, "e", uid)
+            uid += 1
+    while len(h):
+        assert h.next_batch() == c.next_batch()
+    assert len(c) == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_calendar_matches_heap_event_order(seed):
+    _drive_both(np.random.default_rng(seed))
+
+
+def test_calendar_same_timestamp_across_late_pushes_keeps_push_order():
+    """Events pushed mid-drain at an already-seen timestamp must drain in
+    push order behind the earlier pushes (run-creation order)."""
+    c = CalendarEventQueue(bucket_s=10.0)
+    for i in range(3):
+        c.push(1.0, "a", i)
+    t, batch = c.next_batch()
+    assert (t, batch) == (1.0, [("a", 0), ("a", 1), ("a", 2)])
+    c.push(2.0, "b", 0)
+    c.push(2.0, "b", 1)       # same bucket: late buffer
+    assert c.next_batch() == (2.0, [("b", 0), ("b", 1)])
+    # interleave: settled run holds t=3 and t=5; late pushes add more t=3
+    c.push(3.0, "c", 0)
+    c.push(5.0, "d", 0)
+    c.push(3.0, "c", 1)
+    assert c.next_batch() == (3.0, [("c", 0), ("c", 1)])
+    assert c.next_batch() == (5.0, [("d", 0)])
+    assert len(c) == 0
+
+
+def test_calendar_run_compaction_preserves_order():
+    """> _MAX_RUNS late-settle cycles inside one bucket trigger compaction;
+    order must survive the merge."""
+    c = CalendarEventQueue(bucket_s=1e9)      # everything in one bucket
+    c.push(0.0, "seed", None)
+    c.next_batch()
+    expect = []
+    for k in range(3 * CalendarEventQueue._MAX_RUNS):
+        t = 10.0 + k
+        c.push(t, "e", k)         # each drain settles a fresh run
+        expect.append((t, [("e", k)]))
+        if k % 3 == 0:
+            c.push(t, "tie", k)   # same-t tie within the same run
+            expect[-1][1].append(("tie", k))
+        got = c.next_batch()
+        assert got == expect[-1]
+
+
+def test_event_queue_factory():
+    assert isinstance(make_event_queue("heap"), HeapEventQueue)
+    assert isinstance(make_event_queue("calendar", bucket_s=2.0),
+                      CalendarEventQueue)
+    with pytest.raises(ValueError, match="unknown sim engine"):
+        make_event_queue("wheel-of-fortune")
+    with pytest.raises(ValueError, match="positive"):
+        CalendarEventQueue(bucket_s=0.0)
+
+
+# --------------------------------------------------------------- wait queues
+
+class _T:
+    __slots__ = ("submitted", "task_id", "ai")
+
+    def __init__(self, submitted, task_id, ai):
+        self.submitted, self.task_id, self.ai = submitted, task_id, ai
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_array_wait_queue_matches_heap(seed):
+    """Random push/pop/rebuild interleavings: identical pop order, with
+    rebuilds re-keying r0 from a mutating rank column (stale-key semantics
+    shared by both: keys snapshot at push, refresh at rebuild)."""
+    rng = np.random.default_rng(seed)
+    n_apps = int(rng.integers(2, 8))
+    ranks = rng.uniform(0, 10, n_apps)
+    hq, aq = HeapWaitQueue(), ArrayWaitQueue()
+    uid = 0
+    for step in range(int(rng.integers(5, 60))):
+        op = rng.uniform()
+        if op < 0.55:
+            ai = int(rng.integers(n_apps))
+            t = _T(float(rng.integers(0, 8)) * 0.5, uid, ai)
+            uid += 1
+            key = (float(ranks[ai]), t.submitted, t.task_id)
+            hq.push(key, t, ai)
+            aq.push(key, t, ai)
+        elif op < 0.85:
+            assert len(hq) == len(aq)
+            if len(hq):
+                assert hq.peek_key() == tuple(map(float, aq.peek_key()))
+                assert hq.pop() is aq.pop()
+        else:
+            ranks = rng.uniform(0, 10, n_apps)       # rank refresh
+            hq.rebuild(lambda t: (float(ranks[t.ai]), t.submitted, t.task_id))
+            aq.rebuild(ranks)
+    while len(hq):
+        assert len(aq) and hq.pop() is aq.pop()
+    assert len(aq) == 0
+
+
+def test_array_wait_queue_task_level_rebuild_keeps_keys():
+    """rank_of=None (task-level policies): rebuild resorts but keeps the
+    stored keys verbatim."""
+    aq = ArrayWaitQueue()
+    ts = [_T(float(i % 3), i, -1) for i in range(7)]
+    for t in ts:
+        aq.push((t.submitted, float(t.task_id), 0.0), t, -1)
+    aq.rebuild(None)
+    order = [aq.pop() for _ in range(len(aq))]
+    assert order == sorted(ts, key=lambda t: (t.submitted, t.task_id))
+    assert isinstance(make_wait_queue("heap"), HeapWaitQueue)
+    assert isinstance(make_wait_queue("calendar"), ArrayWaitQueue)
+    with pytest.raises(ValueError):
+        make_wait_queue("nope")
+
+
+# ------------------------------------------------------- full-sim equivalence
+
+def _assert_equivalent(a, b):
+    assert a.completion_order == b.completion_order
+    assert a.acts == b.acts
+    assert a.makespan == b.makespan
+    assert a.policy_calls == b.policy_calls
+    assert a.cache_stats == b.cache_stats
+    assert a.stall_stats == b.stall_stats
+    assert a.dsr == b.dsr
+
+
+def _run_both(insts, **cfg_kw):
+    out = []
+    for eng in ("heap", "calendar"):
+        cfg = SimConfig(engine=eng, **cfg_kw)
+        out.append(run_sim(_kb(), insts, cfg))
+    return out
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=10**4),
+       st.sampled_from(["gittins", "fcfs_app", "vtc", "hermes_ddl",
+                        "fcfs_req"]))
+def test_engines_bit_equivalent_on_open_arrivals(seed, policy):
+    """Randomized bursty open-arrival traces: the calendar engine's
+    SimResult matches the heap engine's exactly."""
+    insts = make_open_workload(60.0, t_in=T_IN, t_out=T_OUT, rate_per_s=0.5,
+                               process="gamma", cv=2.5, seed=seed,
+                               with_deadlines=True, max_apps=24)
+    if not insts:
+        return
+    a, b = _run_both(insts, policy=policy, mc_walkers=16, seed=seed % 7,
+                     n_llm_slots=4, n_docker_slots=6, n_dnn_slots=2)
+    _assert_equivalent(a, b)
+
+
+def test_engines_bit_equivalent_on_simultaneous_bursts():
+    """Arrivals quantized to whole seconds: large same-timestamp
+    micro-batches (batch admission + shared drain helper) stay equivalent."""
+    insts = make_workload(32, 6.0, seed=11, t_in=T_IN, t_out=T_OUT,
+                          with_deadlines=True)
+    for i in insts:
+        i.arrival = float(int(i.arrival))     # force exact ties
+    a, b = _run_both(insts, policy="gittins", mc_walkers=16, seed=3,
+                     n_llm_slots=4)
+    _assert_equivalent(a, b)
+
+
+def test_engines_bit_equivalent_across_midrun_repack():
+    """A trace long enough that the slot arena shrink-repacks mid-run
+    (slot renumbering + device-row remap) on the fused_delta path."""
+    insts = make_workload(150, 4.0, seed=9, t_in=T_IN, t_out=T_OUT)
+    sims = []
+    for eng in ("heap", "calendar"):
+        sim = ClusterSim(_kb(), SimConfig(engine=eng, mc_walkers=16, seed=2,
+                                          n_llm_slots=8))
+        sims.append((sim, sim.run(insts)))
+    (sa, a), (sb, b) = sims
+    assert sa.sched._qstate.repack_epoch >= 1    # the repack actually fired
+    assert sa.sched._qstate.repack_epoch == sb.sched._qstate.repack_epoch
+    _assert_equivalent(a, b)
+
+
+# ------------------------------------------------- RefreshConfig round-trips
+
+def test_refresh_config_validation():
+    with pytest.raises(ValueError, match="mode"):
+        RefreshConfig(mode="warp")
+    with pytest.raises(ValueError, match="walker"):
+        RefreshConfig(walker="xorshift")
+    with pytest.raises(ValueError, match="fused_delta"):
+        RefreshConfig(mode="fused", mesh_shards=2)
+    with pytest.raises(ValueError, match="power of two"):
+        RefreshConfig(mesh_shards=3)
+    with pytest.raises(ValueError, match="delta_full_threshold"):
+        RefreshConfig(delta_full_threshold=-0.5)
+    rc = RefreshConfig()
+    assert (rc.mode, rc.walker) == ("fused_delta", "pallas")
+
+
+def test_legacy_kwargs_round_trip_with_warning():
+    """Every legacy per-field spelling resolves to the identical
+    RefreshConfig the new API builds directly — after exactly one
+    DeprecationWarning naming the offending kwargs."""
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        rc = resolve_refresh_config(None, owner="X", mode="fused",
+                                    walker="threefry",
+                                    delta_full_threshold=0.25)
+    assert rc == RefreshConfig(mode="fused", walker="threefry",
+                               delta_full_threshold=0.25)
+    with pytest.raises(TypeError, match="both"):
+        resolve_refresh_config(RefreshConfig(), owner="X", mode="fused")
+
+
+def test_scheduler_accepts_refresh_config_and_keeps_bare_default():
+    kb = _kb()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        s = HermesScheduler(kb, refresh=RefreshConfig(mode="fused_delta",
+                                                      walker="threefry"))
+        assert (s.mode, s.walker) == ("fused_delta", "threefry")
+        assert s.refresh_config.mode == "fused_delta"
+        # bare construction keeps the pre-RefreshConfig defaults
+        assert HermesScheduler(kb).mode == "composed"
+        assert HermesScheduler(kb, batched=False).mode == "looped"
+    with pytest.warns(DeprecationWarning):
+        s2 = HermesScheduler(kb, mode="fused", walker="threefry")
+    assert (s2.mode, s2.walker) == ("fused", "threefry")
+    with pytest.raises(TypeError, match="both"):
+        HermesScheduler(kb, refresh=RefreshConfig(), mode="fused")
+
+
+def test_simconfig_accepts_refresh_config_and_shims_legacy():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = SimConfig(refresh=RefreshConfig(mode="composed"))
+        assert cfg.refresh.mode == "composed"
+        assert SimConfig().refresh == RefreshConfig()     # sim default
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        cfg = SimConfig(refresh_mode="fused", walker="threefry",
+                        queue_delay_correction=True)
+    assert cfg.refresh == RefreshConfig(mode="fused", walker="threefry",
+                                        queue_delay_correction=True)
+    with pytest.raises(TypeError, match="both"):
+        SimConfig(refresh=RefreshConfig(), refresh_mode="fused")
+    with pytest.raises(ValueError, match="unknown sim engine"):
+        SimConfig(engine="abacus")
+
+
+# ------------------------------------------------------------- deprecations
+
+def test_refresh_facade_reexports_with_warning():
+    import repro.core.refresh as facade
+    from repro.core.arena import QueueState
+    with pytest.warns(DeprecationWarning, match="repro.core.arena"):
+        assert facade.QueueState is QueueState
+    from repro.core.refresh_pipeline import refresh_ranks_fused
+    with pytest.warns(DeprecationWarning, match="refresh_pipeline"):
+        assert facade.refresh_ranks_fused is refresh_ranks_fused
+    with pytest.raises(AttributeError):
+        facade.does_not_exist
+
+
+def test_prewarm_legacy_entry_points_warn_and_delegate():
+    from repro.core.prewarm import merge_plans
+    p1 = PrewarmPlan(app_ids=["a"], resource_keys=["kv:x"], kinds=["kv"],
+                     fire_at=np.asarray([5.0]), p_reach=np.asarray([0.9]))
+    p2 = PrewarmPlan(app_ids=["b"], resource_keys=["kv:y"], kinds=["kv"],
+                     fire_at=np.asarray([6.0]), p_reach=np.asarray([0.8]),
+                     units=["plan"])
+    with pytest.warns(DeprecationWarning, match="PrewarmPlan.merge"):
+        old = merge_plans(p1, p2, lambda a: True)
+    new = p1.merge(p2, lambda a: True)
+    assert old.app_ids == new.app_ids == ["a", "b"]
+    np.testing.assert_array_equal(old.fire_at, new.fire_at)
+    assert [old.unit_of(i) for i in range(2)] == \
+        [new.unit_of(i) for i in range(2)] == ["*", "plan"]

@@ -22,8 +22,9 @@ from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
 from repro.core.pdgraph import (ARRIVAL_NEVER, BackendSpec, PDGraph,
                                 UnitNode, pack_graphs)
 from repro.core.prewarm import prewarm_trigger_time
-from repro.core.refresh import (QueueState, refresh_ranks_delta,
-                                refresh_ranks_fused)
+from repro.core.arena import QueueState
+from repro.core.refresh_pipeline import (refresh_ranks_delta,
+                                         refresh_ranks_fused)
 from repro.core.scheduler import HermesScheduler
 
 MC = 32
