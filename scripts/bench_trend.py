@@ -18,7 +18,11 @@ docs/BENCHMARKS.md):
 * each row compares the ``ms_per_tick_min`` (min-of-N) estimator, and
   ``--update`` folds a fresh record into the baseline as a per-row MAX —
   the baseline is the upper envelope of healthy runs, so one lucky fast
-  draw can never poison it into flagging every later run.
+  draw can never poison it into flagging every later run;
+* ``--field``/``--direction`` generalize the gate beyond latency: the
+  overload benchmark gates ``--field goodput_per_s --direction max``
+  (larger is better — regression = shrinkage, the envelope folds as a
+  per-row MIN, and ``--min-ms 0`` keeps sub-1.0 goodput rows in play).
 
 Usage:
   python scripts/bench_trend.py BENCH_refresh_tick.json \
@@ -37,13 +41,23 @@ import shutil
 import sys
 
 
-def load_rows(path: str) -> dict:
+def row_value(r: dict, field: str):
+    # the noise-robust min-of-N estimator when recorded ("<field>_min");
+    # the plain field for records predating it (or deterministic metrics
+    # like goodput that need no envelope estimator)
+    v = r.get(field + "_min", r.get(field))
+    return None if v is None else float(v)
+
+
+def load_rows(path: str, field: str) -> dict:
     with open(path) as f:
         payload = json.load(f)
-    # min-of-N when recorded (noise-robust: one contended iteration must
-    # not read as a regression); mean for records predating the field
-    return payload, {r["name"]: r.get("ms_per_tick_min", r["ms_per_tick"])
-                     for r in payload["rows"]}
+    rows = {}
+    for r in payload["rows"]:
+        v = row_value(r, field)
+        if v is not None:          # rows without the field pass untouched
+            rows[r["name"]] = v
+    return payload, rows
 
 
 def main(argv=None) -> int:
@@ -54,7 +68,15 @@ def main(argv=None) -> int:
     ap.add_argument("--max-regress-pct", type=float, default=25.0,
                     help="fail when ms/tick grows more than this (%%)")
     ap.add_argument("--min-ms", type=float, default=1.0,
-                    help="skip arms whose baseline tick is below this")
+                    help="skip arms whose baseline value is below this")
+    ap.add_argument("--field", default="ms_per_tick",
+                    help="row field to gate on (a '<field>_min' estimator "
+                         "is preferred when recorded)")
+    ap.add_argument("--direction", choices=("min", "max"), default="min",
+                    help="'min': smaller is better (latency; regression = "
+                         "growth, baseline folds as an upper envelope); "
+                         "'max': larger is better (goodput; regression = "
+                         "shrinkage, baseline folds as a lower envelope)")
     ap.add_argument("--force", action="store_true",
                     help="fail even across differing platform strings")
     ap.add_argument("--update", action="store_true",
@@ -92,17 +114,24 @@ def main(argv=None) -> int:
         # absorb noise peaks, but a sequence of sub-threshold regressions
         # must not ratchet it upward unbounded (slow drift stays visible
         # against the intentionally-refreshed committed baseline)
-        cap = 1.0 + args.max_regress_pct / 200.0
+        cap = args.max_regress_pct / 200.0
         for r in fresh_payload["rows"]:
             prev = by_name.get(r["name"])
             if prev is None:
                 by_name[r["name"]] = r
                 continue
-            pv = prev.get("ms_per_tick_min", prev["ms_per_tick"])
-            fv = r.get("ms_per_tick_min", r["ms_per_tick"])
-            if fv > pv:
+            pv, fv = row_value(prev, args.field), row_value(r, args.field)
+            if pv is None or fv is None:
+                by_name[r["name"]] = r
+                continue
+            worse = fv > pv if args.direction == "min" else fv < pv
+            if worse:
                 r = dict(r)
-                r["ms_per_tick_min"] = min(fv, pv * cap)
+                folded = min(fv, pv * (1.0 + cap)) \
+                    if args.direction == "min" else max(fv, pv * (1.0 - cap))
+                key = args.field + "_min" if args.field + "_min" in r \
+                    else args.field
+                r[key] = folded
                 by_name[r["name"]] = r
         base_payload["rows"] = [by_name[k] for k in sorted(by_name)]
         with open(args.baseline, "w") as f:
@@ -111,8 +140,8 @@ def main(argv=None) -> int:
               f"({len(by_name)} rows)")
         return 0
 
-    fresh_payload, fresh = load_rows(args.fresh)
-    base_payload, base = load_rows(args.baseline)
+    fresh_payload, fresh = load_rows(args.fresh, args.field)
+    base_payload, base = load_rows(args.baseline, args.field)
 
     cross = fresh_payload.get("platform") != base_payload.get("platform")
     shared = sorted(set(fresh) & set(base))
@@ -125,11 +154,16 @@ def main(argv=None) -> int:
     print(f"{'row':<52} {'base':>9} {'fresh':>9} {'delta':>8}")
     for name in shared:
         b, f = base[name], fresh[name]
-        if b < args.min_ms:
+        if b < args.min_ms or b <= 0.0:
             continue
+        # positive pct always means "worse by pct" in the gated direction
         pct = 100.0 * (f - b) / b
+        if args.direction == "max":
+            pct = -pct
         flag = " <-- REGRESSION" if pct > args.max_regress_pct else ""
-        print(f"{name:<52} {b:>7.2f}ms {f:>7.2f}ms {pct:>+7.1f}%{flag}")
+        unit = "ms" if args.field.startswith("ms") else ""
+        print(f"{name:<52} {b:>7.4g}{unit} {f:>7.4g}{unit} "
+              f"{pct:>+7.1f}%{flag}")
         if pct > args.max_regress_pct:
             regressions.append((name, b, f, pct))
 

@@ -35,6 +35,9 @@ class AppInstance:
     trajectory: List[Tuple[str, Dict[str, float]]]
     deadline: Optional[float] = None
     ddl_class: str = ""
+    # SLO class consumed by the admission controller (repro.core.admission):
+    # "gold" | "standard" | "best_effort"
+    slo: str = "standard"
 
 
 def bursty_arrivals(n: int, window_s: float, rng: np.random.Generator,
@@ -103,6 +106,8 @@ class TenantProfile:
     weight: float = 1.0
     app_mix: Optional[Dict[str, float]] = None
     deadline_frac: float = 1.0
+    # every application this tenant submits carries this SLO class
+    slo: str = "standard"
 
 
 def open_arrivals(rate_per_s: float, duration_s: float,
@@ -239,12 +244,151 @@ def make_open_workload(duration_s: float, *,
         traj = sample_trajectory(suite[name], rng)
         inst = AppInstance(app_id=f"app{i:06d}", app_name=name,
                            tenant=profiles[prof_idx[i]].name,
-                           arrival=float(t), trajectory=traj)
+                           arrival=float(t), trajectory=traj,
+                           slo=profiles[prof_idx[i]].slo)
         if with_deadlines and has_ddl[i]:
             scale, cls = ddl_scales[int(ddl_pick[i])]
             base = trajectory_service(traj, t_in, t_out) \
                 + _coldstart_overhead(suite[name], traj, warmup_table)
             inst.deadline = float(t + scale * base)
+            inst.ddl_class = cls
+        out.append(inst)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Overload scenarios (flash crowds, diurnal load, SLO mixes)
+# ---------------------------------------------------------------------------
+
+def assign_slo_mix(insts: Sequence[AppInstance],
+                   mix: Dict[str, float], *, seed: int = 0
+                   ) -> List[AppInstance]:
+    """Overwrite each instance's SLO class with an i.i.d. draw from
+    ``mix`` (class -> weight); returns the same list for chaining."""
+    rng = np.random.default_rng(seed)
+    names = sorted(mix)
+    w = np.asarray([max(mix[n], 0.0) for n in names], np.float64)
+    picks = rng.choice(len(names), size=len(insts), p=w / w.sum())
+    for inst, p in zip(insts, picks):
+        inst.slo = names[p]
+    return list(insts)
+
+
+def make_flash_crowd_workload(duration_s: float, *,
+                              t_in: float, t_out: float,
+                              base_load: float = 0.8,
+                              spike_mult: float = 10.0,
+                              spike_start: float,
+                              spike_dur: float,
+                              n_service_slots: int = 16,
+                              crowd_tenant: str = "crowd",
+                              crowd_slo: str = "best_effort",
+                              base_slo_mix: Optional[Dict[str, float]] = None,
+                              with_deadlines: bool = True,
+                              n_tenants: int = 4,
+                              seed: int = 0,
+                              apps: Optional[Dict[str, AppSpec]] = None,
+                              warmup_table: Optional[Dict[str, float]] = None
+                              ) -> List[AppInstance]:
+    """A steady background trace plus one tenant's flash crowd.
+
+    Background tenants offer ``base_load`` (ρ = λ·E[S]/slots) for the whole
+    window with the given SLO mix; during ``[spike_start, spike_start +
+    spike_dur)`` the ``crowd_tenant`` adds ``(spike_mult - 1)x`` the base
+    arrival rate of ``crowd_slo`` traffic — total offered load inside the
+    spike is ``spike_mult x base_load``.  This is the scenario the
+    shedding/fairness machinery is graded on: one tenant's crowd must not
+    starve the background tenants' deadline work.
+    """
+    if spike_mult < 1.0:
+        raise ValueError(f"spike_mult must be >= 1, got {spike_mult}")
+    base = make_open_workload(
+        duration_s, t_in=t_in, t_out=t_out, target_load=base_load,
+        n_service_slots=n_service_slots, tenants=n_tenants,
+        with_deadlines=with_deadlines, seed=seed, apps=apps,
+        warmup_table=warmup_table)
+    if base_slo_mix:
+        assign_slo_mix(base, base_slo_mix, seed=seed + 1)
+    suite = apps or SUITE
+    e_s = mean_service_demand(suite, t_in=t_in, t_out=t_out, seed=seed,
+                              warmup_table=warmup_table)
+    base_rate = base_load * n_service_slots / max(e_s, 1e-9)
+    rng = np.random.default_rng(seed + 7919)
+    times = spike_start + open_arrivals(base_rate * (spike_mult - 1.0),
+                                        spike_dur, rng)
+    names = sample_app_names(len(times), rng)
+    crowd: List[AppInstance] = []
+    for i, (t, name) in enumerate(zip(times, names)):
+        traj = sample_trajectory(suite[name], rng)
+        inst = AppInstance(app_id=f"crowd{i:06d}", app_name=name,
+                           tenant=crowd_tenant, arrival=float(t),
+                           trajectory=traj, slo=crowd_slo)
+        if with_deadlines:
+            svc = trajectory_service(traj, t_in, t_out) \
+                + _coldstart_overhead(suite[name], traj, warmup_table)
+            inst.deadline = float(t + 1.5 * svc)
+            inst.ddl_class = "modest"
+        crowd.append(inst)
+    out = base + crowd
+    out.sort(key=lambda a: (a.arrival, a.app_id))
+    return out
+
+
+def make_diurnal_workload(duration_s: float, *,
+                          t_in: float, t_out: float,
+                          peak_load: float = 1.5,
+                          trough_load: float = 0.3,
+                          period_s: Optional[float] = None,
+                          n_service_slots: int = 16,
+                          tenants: Union[int, Sequence[TenantProfile]] = 4,
+                          with_deadlines: bool = True,
+                          seed: int = 0,
+                          apps: Optional[Dict[str, AppSpec]] = None,
+                          warmup_table: Optional[Dict[str, float]] = None
+                          ) -> List[AppInstance]:
+    """Sinusoidal diurnal load between ``trough_load`` and ``peak_load``:
+    a peak-rate Poisson stream thinned to the instantaneous rate (an exact
+    construction for an inhomogeneous Poisson process).  One ``period_s``
+    spans trough -> peak -> trough; the default is the whole window."""
+    if not 0.0 <= trough_load <= peak_load:
+        raise ValueError("need 0 <= trough_load <= peak_load, got "
+                         f"{trough_load} / {peak_load}")
+    period_s = float(period_s or duration_s)
+    suite = apps or SUITE
+    e_s = mean_service_demand(suite, t_in=t_in, t_out=t_out, seed=seed,
+                              warmup_table=warmup_table)
+    peak_rate = peak_load * n_service_slots / max(e_s, 1e-9)
+    rng = np.random.default_rng(seed + 104729)
+    times = open_arrivals(peak_rate, duration_s, rng)
+    # rate(t)/peak in [trough/peak, 1]; phase puts the trough at t = 0
+    mid = 0.5 * (peak_load + trough_load)
+    amp = 0.5 * (peak_load - trough_load)
+    rel = (mid - amp * np.cos(2.0 * np.pi * times / period_s)) / peak_load
+    times = times[rng.uniform(size=len(times)) < rel]
+    if isinstance(tenants, int):
+        profiles = [TenantProfile(name=f"tenant{i}")
+                    for i in range(max(tenants, 1))]
+    else:
+        profiles = list(tenants)
+    weights = np.asarray([max(p.weight, 0.0) for p in profiles], np.float64)
+    prof_idx = (rng.choice(len(profiles), size=len(times),
+                           p=weights / weights.sum())
+                if len(times) else np.zeros(0, np.int64))
+    names = sample_app_names(len(times), rng)
+    ddl_scales = [(1.2, "tight"), (1.5, "modest"), (2.0, "loose")]
+    out: List[AppInstance] = []
+    for i, t in enumerate(times):
+        name = names[i]
+        traj = sample_trajectory(suite[name], rng)
+        prof = profiles[prof_idx[i]]
+        inst = AppInstance(app_id=f"diur{i:06d}", app_name=name,
+                           tenant=prof.name, arrival=float(t),
+                           trajectory=traj, slo=prof.slo)
+        if with_deadlines and rng.uniform() < prof.deadline_frac:
+            scale, cls = ddl_scales[int(rng.integers(len(ddl_scales)))]
+            svc = trajectory_service(traj, t_in, t_out) \
+                + _coldstart_overhead(suite[name], traj, warmup_table)
+            inst.deadline = float(t + scale * svc)
             inst.ddl_class = cls
         out.append(inst)
     return out

@@ -79,8 +79,24 @@ class Policy:
     # the waiting-queue rebuild entirely (the values they hold are already
     # final).  Implies the rank is per-app and time-invariant.
     static_ranks = False
+    # True when the policy can rank straight off slot-store column gathers
+    # (ranks_columns) — the scheduler's delta/mesh consumption then skips
+    # minting AppView objects entirely (the last per-app Python loop on the
+    # mesh hot path)
+    columns_capable = False
 
     def ranks(self, apps: List[AppView], now: float) -> np.ndarray:
+        raise NotImplementedError
+
+    def ranks_columns(self, now: float, *, g: np.ndarray, sup: np.ndarray,
+                      opt: np.ndarray, mean: np.ndarray,
+                      attained: np.ndarray,
+                      deadline: np.ndarray) -> np.ndarray:
+        """Vectorized twin of :meth:`ranks` over store columns: ``g`` the
+        device Gittins ranks (float32 mirror rows), ``sup``/``opt``/``mean``
+        the device triage scalars, ``attained``/``deadline`` the host
+        bookkeeping (``np.inf`` = no deadline).  Must return values
+        bit-identical to :meth:`ranks` over views of the same scalars."""
         raise NotImplementedError
 
 
@@ -246,6 +262,27 @@ class LSTFPolicy(Policy):
             out[i] = rank
         return out
 
+    columns_capable = True
+
+    def ranks_columns(self, now, *, g=None, sup, opt, mean, attained,
+                      deadline):
+        """Vectorized :meth:`ranks` (``g`` unused — LSTF is pure eq. 2).
+        All arithmetic runs in float64, elementwise identical to the
+        per-app loop; ``deadline=np.inf`` rows collapse to the loop's
+        no-deadline ``np.inf`` rank (inf slack -> inf bucket -> inf rank,
+        and the hopeless test can never fire on them)."""
+        sup = np.asarray(sup, np.float64)
+        opt = np.asarray(opt, np.float64)
+        mean = np.asarray(mean, np.float64)
+        attained = np.asarray(attained, np.float64)
+        deadline = np.asarray(deadline, np.float64)
+        mean_rem = np.maximum(mean - attained, 0.0)
+        slack = deadline - now - np.maximum(sup - attained, 0.0)
+        bucket = np.floor(slack / self.slack_bucket_s) * self.slack_bucket_s
+        rank = bucket * 1e3 + mean_rem
+        hopeless = (deadline - now - np.maximum(opt - attained, 0.0)) < 0.0
+        return np.where(hopeless, rank + self.hopeless_penalty, rank)
+
 
 class HermesDDLPolicy(Policy):
     """Hermes-DDL: the deadline extension actually shipped (§3.3 + Fig. 11).
@@ -303,6 +340,29 @@ class HermesDDLPolicy(Policy):
                 cls = 1
             out.append(cls * self.cls_span + gr)
         return np.asarray(out)
+
+    columns_capable = True
+
+    def ranks_columns(self, now, *, g, sup, opt, attained, deadline,
+                      mean=None):
+        """Vectorized :meth:`ranks` over store columns.  Bit-identical to
+        the per-app loop on fused views: the loop's ``cls * cls_span + gr``
+        adds a weak Python float to a float32 device rank — NEP-50 performs
+        that add in float32 — so this path clips and accumulates in float32
+        too.  ``deadline=np.inf`` rows land in the safe class (inf slack),
+        whose ``1 * cls_span + g`` equals the loop's explicit no-deadline
+        branch."""
+        g32 = np.minimum(np.asarray(g, np.float32),
+                         np.float32(self.cls_span * 0.99))
+        sup = np.asarray(sup, np.float64)
+        opt = np.asarray(opt, np.float64)
+        attained = np.asarray(attained, np.float64)
+        deadline = np.asarray(deadline, np.float64)
+        slack_sup = deadline - now - np.maximum(sup - attained, 0.0)
+        slack_opt = deadline - now - np.maximum(opt - attained, 0.0)
+        cls = np.where(slack_opt < 0.0, 2,
+                       np.where(slack_sup < self.risk_window_s, 0, 1))
+        return cls.astype(np.float32) * np.float32(self.cls_span) + g32
 
 
 class OraclePolicy(Policy):

@@ -18,15 +18,14 @@ either entry point::
     sched = HermesScheduler(kb, policy="gittins", refresh=rc)
     cfg = SimConfig(policy="gittins", refresh=rc)
 
-The legacy kwargs keep working for one release — both entry points shim
-them into a ``RefreshConfig`` and emit a :class:`DeprecationWarning` —
-and every validation rule now lives in exactly one place,
+The legacy kwargs were deprecation shims for one release (PR 6) and are
+now retired: passing any of them raises :class:`TypeError` with a
+migration pointer.  Every validation rule lives in exactly one place,
 ``RefreshConfig.__post_init__``.
 """
 from __future__ import annotations
 
-import warnings
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Optional
 
 MODES = ("looped", "composed", "fused", "fused_delta")
@@ -95,29 +94,25 @@ def resolve_refresh_config(refresh: Optional[RefreshConfig], *,
                            delta_full_threshold=_UNSET,
                            queue_delay_correction=_UNSET,
                            stacklevel: int = 3) -> RefreshConfig:
-    """Merge a ``RefreshConfig`` with legacy per-field kwargs.
+    """Resolve the refresh configuration, rejecting retired legacy kwargs.
 
-    Shared by both entry points' deprecation shims: every legacy kwarg that
-    was *explicitly* passed (anything not ``_UNSET``) overrides the
-    corresponding ``RefreshConfig`` field and emits a single
-    :class:`DeprecationWarning` naming the replacement.  Passing a field
-    both ways is an error — silently picking one would hide a real
-    configuration bug.
+    The per-field kwargs (``mode``/``refresh_mode``, ``walker``,
+    ``mesh_shards``, ``delta_full_threshold``, ``queue_delay_correction``)
+    were one-release :class:`DeprecationWarning` shims in PR 6 and are now
+    removed: any explicitly passed one (anything not ``_UNSET``) raises
+    :class:`TypeError` naming the replacement spelling.
     """
     legacy = {k: v for k, v in (
         ("mode", mode), ("walker", walker), ("mesh_shards", mesh_shards),
         ("delta_full_threshold", delta_full_threshold),
         ("queue_delay_correction", queue_delay_correction),
     ) if v is not _UNSET}
-    if not legacy:
-        return refresh if refresh is not None else RefreshConfig()
-    if refresh is not None:
-        dup = sorted(legacy)
-        raise TypeError(f"{owner}: got both refresh=RefreshConfig(...) and "
-                        f"legacy kwarg(s) {dup}; move them into the "
-                        "RefreshConfig")
-    warnings.warn(
-        f"{owner}: the {sorted(legacy)} kwarg(s) are deprecated; pass "
-        "refresh=RefreshConfig(...) instead (repro.core.refresh_config)",
-        DeprecationWarning, stacklevel=stacklevel)
-    return replace(RefreshConfig(), **legacy)
+    if legacy:
+        spelled = ", ".join(f"{k}={v!r}" for k, v in sorted(legacy.items()))
+        raise TypeError(
+            f"{owner}: the legacy per-field refresh kwarg(s) "
+            f"{sorted(legacy)} were removed (deprecated in the previous "
+            f"release); pass refresh=RefreshConfig({spelled}) instead "
+            "(see repro.core.refresh_config and the migration guide in "
+            "docs/ARCHITECTURE.md)")
+    return refresh if refresh is not None else RefreshConfig()

@@ -79,9 +79,12 @@ class HermesScheduler:
         self.refine = refine
         self.prewarm_enabled = prewarm
         self.mc_walkers = mc_walkers
+        self._mc_walkers_base = mc_walkers
+        self._walker_cap: Optional[int] = None
         # The refresh backbone is configured by ONE validated RefreshConfig
-        # (see repro.core.refresh_config for the mode/walker/mesh semantics);
-        # the per-field kwargs remain as deprecation shims for one release.
+        # (see repro.core.refresh_config); the retired per-field kwargs are
+        # kept in the signature only so passing one raises the migration
+        # TypeError instead of an anonymous unexpected-keyword error.
         if mode is None:
             mode = _UNSET      # legacy "derive from ``batched``" spelling
         rc = resolve_refresh_config(
@@ -133,6 +136,9 @@ class HermesScheduler:
         # re-ranked slots are touched per tick); callers get a shallow copy
         self._mesh_ranks: Optional[Dict[str, float]] = None
         self._mesh_ranks_qs = None        # owning QueueState (invalidation)
+        # per-backend service-stretch estimates (straggler watchdog feed):
+        # the demand model's consumers scale wall estimates by these
+        self.backend_slowdown: Dict[str, float] = {}
         for g in self.kb.values():
             C.apply_masks(g)
 
@@ -379,27 +385,7 @@ class HermesScheduler:
             qs.bump_refresh(walked)
             for s in walked:
                 self.apps[qs.ids[int(s)]].refreshes += 1
-        triage = self._with_triage
-        for a in live:
-            s = qs.slot[a.app_id]
-            v = a.view
-            if v is None:
-                v = AppView(app_id=a.app_id, tenant=a.tenant,
-                            arrival=a.arrival, attained=a.attained,
-                            total_samples=None, deadline=qs.get_deadline(s),
-                            oracle_remaining=a.oracle_remaining)
-                a.view = v
-            v.attained = a.attained
-            v.fused_rank = float(tick.ranks[s])
-            if triage:
-                v.demand_sup = float(qs.sup[s])
-                v.demand_opt = float(qs.opt[s])
-                v.demand_mean = float(qs.mean[s])
-        views = [a.view for a in live]
-        if not views:
-            return {}
-        ranks = self.policy.ranks(views, now)
-        return {a.app_id: float(r) for a, r in zip(live, ranks)}
+        return self._ranks_from_store(qs, live, tick.ranks, now)
 
     def _priorities_mesh(self, qs, live: List[AppRuntime],
                          walked: np.ndarray, now: float, tab,
@@ -459,9 +445,46 @@ class HermesScheduler:
                                  qs.rank[occ].tolist()))
                 self._mesh_ranks, self._mesh_ranks_qs = cache, qs
             return dict(cache)
+        return self._ranks_from_store(qs, live, qs.rank, now)
+
+    def _ranks_from_store(self, qs, live: List[AppRuntime],
+                          ranks_row: np.ndarray, now: float
+                          ) -> Dict[str, float]:
+        """Policy consumption straight off store columns: the device ranks
+        (``ranks_row`` — the delta tick's full-arena rank vector, or the
+        mesh's host rank mirror) and the triage scalar mirrors are gathered
+        per-slot in vectorized reads and handed to the policy's
+        ``ranks_columns`` twin.  No AppView objects are minted on this path
+        — formerly the last per-app Python loop on the mesh hot path.
+        ``attained``/``deadline`` come from the float64 host records (the
+        float32 store mirrors round), keeping rank values bit-identical to
+        the retired view-minting loop."""
+        if not live:
+            return {}
+        n = len(live)
+        slots = np.asarray([qs.slot[a.app_id] for a in live], np.int64)
+        ids = [a.app_id for a in live]
+        g = np.asarray(ranks_row[slots], np.float32)
+        if type(self.policy) is GittinsPolicy:
+            return dict(zip(ids, g.tolist()))
+        if getattr(self.policy, "columns_capable", False) \
+                and self._with_triage:
+            attained = np.fromiter((a.attained for a in live),
+                                   np.float64, count=n)
+            deadline = np.fromiter(
+                (np.inf if a.deadline is None else a.deadline
+                 for a in live), np.float64, count=n)
+            ranks = self.policy.ranks_columns(
+                now, g=g,
+                sup=qs.sup[slots].astype(np.float64),
+                opt=qs.opt[slots].astype(np.float64),
+                mean=qs.mean[slots].astype(np.float64),
+                attained=attained, deadline=deadline)
+            return dict(zip(ids, (float(r) for r in ranks)))
+        # fused-capable but not columns-capable policy: mint views (the
+        # pre-vectorization consumption, kept as the general fallback)
         triage = self._with_triage
-        for a in live:
-            s = qs.slot[a.app_id]
+        for a, s in zip(live, slots.tolist()):
             v = a.view
             if v is None:
                 v = AppView(app_id=a.app_id, tenant=a.tenant,
@@ -470,15 +493,12 @@ class HermesScheduler:
                             oracle_remaining=a.oracle_remaining)
                 a.view = v
             v.attained = a.attained
-            v.fused_rank = float(qs.rank[s])
+            v.fused_rank = float(ranks_row[s])
             if triage:
                 v.demand_sup = float(qs.sup[s])
                 v.demand_opt = float(qs.opt[s])
                 v.demand_mean = float(qs.mean[s])
-        views = [a.view for a in live]
-        if not views:
-            return {}
-        ranks = self.policy.ranks(views, now)
+        ranks = self.policy.ranks([a.view for a in live], now)
         return {a.app_id: float(r) for a, r in zip(live, ranks)}
 
     def _stash_plan(self, plan: PrewarmPlan) -> None:
@@ -602,6 +622,79 @@ class HermesScheduler:
             self._mesh_ranks.pop(app.app_id, None)
         if self._qstate is not None:
             self._qstate.retire(app.app_id)
+
+    def on_app_shed(self, app_id: str) -> None:
+        """Admission control dropped this application (terminal shed or
+        deferral): retire its arena slot and demand state exactly once — a
+        second shed / a completion racing a shed is a no-op."""
+        app = self.apps.get(app_id)
+        if app is None or app.done:
+            return
+        self._retire(app)
+
+    def on_requeue(self, app_id: str, now: float) -> None:
+        """A re-queued orphan unit re-entered the waiting queue: nothing
+        about the app's PDGraph position changed (uncredited progress was
+        lost with the backend), but its estimate should re-walk on the next
+        delta tick so the rank reflects the re-submission."""
+        app = self.apps.get(app_id)
+        if app is None or app.done:
+            return
+        app.view = None
+        if self._qstate is not None:
+            self._qstate.mark_dirty(app_id)
+
+    def set_walker_cap(self, cap: Optional[int]) -> None:
+        """Load-adaptive degradation: cap the MC-refinement walker depth
+        (``None`` restores the configured depth).  Cheaper refresh ticks
+        exactly when the queue is largest; capped estimates are noisier, so
+        hosts only engage this past the degradation watermark.  The cap is
+        clamped to a power of two so the fused dispatch adds at most one
+        extra jit trace per distinct cap."""
+        if cap is None:
+            self._walker_cap = None
+            self.mc_walkers = self._mc_walkers_base
+            return
+        cap = max(int(cap), 1)
+        cap = 1 << (cap.bit_length() - 1)            # floor to power of two
+        self._walker_cap = cap
+        self.mc_walkers = min(self._mc_walkers_base, cap)
+
+    def observe_backend_slowdown(self, backend_id: str,
+                                 slowdown: float) -> None:
+        """Straggler-watchdog feed: record a backend's estimated service
+        stretch (1.0 = full speed).  ``service_slowdown`` aggregates these
+        for the demand model's wall-time consumers (admission estimates,
+        prewarm stretch)."""
+        if slowdown <= 1.0:
+            self.backend_slowdown.pop(backend_id, None)
+        else:
+            self.backend_slowdown[backend_id] = float(slowdown)
+
+    def service_slowdown(self, kind: Optional[str] = None) -> float:
+        """Max live stretch estimate across flagged backends (of one kind
+        when given — backend ids are ``{kind}{index}``); 1.0 when clean."""
+        vals = [v for k, v in self.backend_slowdown.items()
+                if kind is None or k.startswith(kind)]
+        return max(vals) if vals else 1.0
+
+    def demand_triage(self, app_id: str) -> Optional[Tuple[float, float]]:
+        """(attained service, optimistic TOTAL demand) of one application —
+        the same instance-level estimate the composite policies' hopeless
+        gate reads: the device triage scalar in fused mode, the HOPELESS_Q
+        sample quantile on the host path.  ``None`` before the app's first
+        view refresh (admission falls back to its name-level prior)."""
+        from repro.core.policies import HOPELESS_Q
+        app = self.apps.get(app_id)
+        if app is None or app.done or app.view is None:
+            return None
+        v = app.view
+        if v.demand_opt is not None:
+            return app.attained, float(v.demand_opt)
+        if v.total_samples is not None:
+            return app.attained, float(np.quantile(v.total_samples,
+                                                   HOPELESS_Q))
+        return None
 
     def set_oracle(self, app_id: str, remaining: float) -> None:
         app = self.apps[app_id]

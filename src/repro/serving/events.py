@@ -203,6 +203,16 @@ class HeapWaitQueue:
     def pop(self):
         return heapq.heappop(self._heap)[1]
 
+    def discard(self, app_ids) -> list:
+        """Drop every queued task whose ``app_id`` is in ``app_ids``
+        (shed/deferred applications); returns the removed tasks."""
+        removed = [t for _, t in self._heap if t.app_id in app_ids]
+        if removed:
+            self._heap = [e for e in self._heap
+                          if e[1].app_id not in app_ids]
+            heapq.heapify(self._heap)
+        return removed
+
     def rebuild(self, key_fn) -> None:
         if self._heap:
             fresh = [(key_fn(t), t) for _, t in self._heap]
@@ -282,6 +292,28 @@ class ArrayWaitQueue:
                 [ai, np.asarray([e[3] for e in self._fresh], np.int64)])
             tasks = tasks + [e[4] for e in self._fresh]
         return k0, k1, k2, ai, tasks
+
+    def discard(self, app_ids) -> list:
+        """Drop every queued task whose ``app_id`` is in ``app_ids``
+        (shed/deferred applications); returns the removed tasks.  Keys are
+        kept verbatim, so survivors pop in exactly the order they would
+        have without the removal."""
+        if not len(self):
+            return []
+        k0, k1, k2, ai, tasks = self._gather()
+        keep = np.asarray([t.app_id not in app_ids for t in tasks], bool)
+        removed = [t for t, k in zip(tasks, keep) if not k]
+        if removed:
+            order = np.lexsort((k2[keep], k1[keep], k0[keep]))
+            self._k0 = k0[keep][order]
+            self._k1 = k1[keep][order]
+            self._k2 = k2[keep][order]
+            self._ai = ai[keep][order]
+            kept = [t for t, k in zip(tasks, keep) if k]
+            self._tasks = [kept[i] for i in order]
+            self._pos = 0
+            self._fresh = []
+        return removed
 
     def rebuild(self, rank_of: Optional[np.ndarray]) -> None:
         """Full refresh: re-key every queued entry and resort.  With

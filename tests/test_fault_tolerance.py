@@ -1,0 +1,220 @@
+"""Fault primitives + the simulator's fault-injected backend pool.
+
+Covers the PR-7 wiring contract:
+
+* requeue backoff capping and the injector's exactly-once plan drain;
+* heartbeat orphan detection (reap returns each in-flight id once);
+* straggler flag/clear hysteresis and the slowdown estimate;
+* backend pools: deterministic placement, capacity under crashes;
+* end-to-end: a crash mid-run orphans in-flight units, the heartbeat
+  reaper re-queues them after backoff, and EVERY application still
+  completes with no lost or double-counted units (at-least-once with
+  idempotent epochs);
+* slow/recover faults stretch service without losing work, and the
+  watchdog's flag feeds the scheduler's demand-model slowdown.
+"""
+import numpy as np
+import pytest
+
+from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
+from repro.apps.workload import make_workload
+from repro.core.scheduler import HermesScheduler
+from repro.runtime.fault_tolerance import (BackendStragglerWatchdog,
+                                           FailureInjector, FaultEvent,
+                                           HeartbeatRegistry, requeue_backoff)
+from repro.serving.backends import (BackendPool, FaultConfig, build_pools,
+                                    correlated_outage_plan)
+from repro.serving.simulator import ClusterSim, SimConfig
+
+
+# --------------------------------------------------------------- primitives
+
+def test_requeue_backoff_doubles_then_caps():
+    assert requeue_backoff(0, 0.25, 4.0) == 0.0
+    assert requeue_backoff(-3, 0.25, 4.0) == 0.0
+    vals = [requeue_backoff(k, 0.25, 4.0) for k in range(1, 8)]
+    assert vals[:5] == [0.25, 0.5, 1.0, 2.0, 4.0]
+    assert vals[5:] == [4.0, 4.0]          # capped, never overflows
+    assert requeue_backoff(200, 0.25, 4.0) == 4.0
+
+
+def test_failure_injector_plan_exactly_once_in_order():
+    plan = [FaultEvent(t=5.0, kind="crash", backend=1),
+            FaultEvent(t=1.0, kind="slow", backend=0, slowdown=2.0),
+            FaultEvent(t=5.0, kind="recover", backend=1)]
+    inj = FailureInjector(plan=plan)
+    assert [e.t for e in inj.pending()] == [1.0, 5.0, 5.0]
+    assert [e.kind for e in inj.due(1.0)] == ["slow"]
+    assert inj.due(1.0) == []              # exactly once
+    assert [e.kind for e in inj.due(10.0)] == ["crash", "recover"]
+    assert inj.due(100.0) == []
+    assert inj.pending() == ()
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(t=0.0, kind="explode")
+    with pytest.raises(ValueError, match="slowdown"):
+        FaultEvent(t=0.0, kind="slow", slowdown=0.5)
+
+
+def test_heartbeat_reap_returns_orphans_once():
+    now = {"t": 0.0}
+    reg = HeartbeatRegistry(timeout_s=2.0, clock=lambda: now["t"])
+    reg.beat("llm0")
+    reg.beat("llm1")
+    reg.assign("llm0", "7")
+    reg.assign("llm0", "3")
+    reg.assign("llm1", "9")
+    now["t"] = 1.0
+    reg.beat("llm1")                       # llm1 stays alive; llm0 goes dark
+    now["t"] = 2.5
+    assert reg.reap_dead() == ["3", "7"]   # sorted, llm0 only
+    assert reg.reap_dead() == []           # record deleted: no double reap
+    reg.complete("llm1", "9")
+    now["t"] = 10.0
+    assert reg.reap_dead() == []           # nothing in flight on llm1
+
+
+def test_straggler_flag_and_clear_hysteresis():
+    wd = BackendStragglerWatchdog(threshold=1.5, flag_after=3, clear_after=2)
+    # isolated spikes never flag (a normal sample resets the hot streak)
+    assert not wd.observe("llm1", 3.0)
+    assert not wd.observe("llm1", 1.0)
+    assert not wd.observe("llm1", 3.0)
+    assert not wd.observe("llm1", 1.0)
+    assert "llm1" not in wd.flagged
+    # three consecutive over-threshold observations flag
+    assert not wd.observe("llm0", 2.0)
+    assert not wd.observe("llm0", 2.0)
+    assert wd.observe("llm0", 2.0)
+    assert wd.flag_events == 1
+    assert wd.slowdown("llm0") == 2.0      # median of the slow window
+    # one normal sample does not clear; two do
+    assert wd.observe("llm0", 1.0)
+    assert not wd.observe("llm0", 1.0)
+    assert wd.slowdown("llm0") == 1.0      # unflagged backends report 1.0
+    assert wd.flag_events == 1             # clear is not a raise transition
+
+
+# ------------------------------------------------------------ backend pools
+
+def test_pool_split_and_deterministic_placement():
+    pool = BackendPool("llm", total_slots=10, n_backends=4)
+    assert [b.slots for b in pool] == [3, 3, 2, 2]   # remainder to low index
+    assert pool.capacity() == 10
+    assert pool.place() is pool[0]         # most-free, lowest index on ties
+    pool[0].running = 3
+    assert pool.place() is pool[1]
+    pool[1].alive = False
+    assert pool.capacity() == 7
+    assert pool.place() is pool[2]
+    with pytest.raises(ValueError, match="cannot be split"):
+        BackendPool("llm", total_slots=2, n_backends=3)
+
+
+def test_build_pools_default_is_monolithic():
+    pools = build_pools({"llm": 8, "docker": 4})
+    assert len(pools["llm"].backends) == 1
+    assert pools["llm"].capacity() == 8
+    pools = build_pools({"llm": 8}, {"llm": 4})
+    assert [b.backend_id for b in pools["llm"]] == \
+        ["llm0", "llm1", "llm2", "llm3"]
+
+
+def test_correlated_outage_plan_staggers_and_recovers():
+    plan = correlated_outage_plan(10.0, "llm", [0, 2], stagger_s=1.0,
+                                  recover_after_s=5.0)
+    crashes = [e for e in plan if e.kind == "crash"]
+    recovers = [e for e in plan if e.kind == "recover"]
+    assert [(e.t, e.backend) for e in crashes] == [(10.0, 0), (11.0, 2)]
+    assert [(e.t, e.backend) for e in recovers] == [(15.0, 0), (16.0, 2)]
+
+
+# ----------------------------------------------------- end-to-end injection
+
+@pytest.fixture(scope="module")
+def kb():
+    return build_knowledge_base(n_trials=120, seed=3)
+
+
+@pytest.fixture(scope="module")
+def insts():
+    return make_workload(24, 60.0, seed=11, t_in=T_IN, t_out=T_OUT)
+
+
+def _run(kb, insts, **kw):
+    base = dict(seed=5, prewarm_mode="lru", n_llm_slots=8, mc_walkers=64)
+    base.update(kw)
+    return ClusterSim(kb, SimConfig(**base)).run(list(insts))
+
+
+def test_faultfree_pool_split_is_bit_identical(kb, insts):
+    """Splitting the LLM class into pool members without any fault plan
+    must not change a single completion time or the completion order."""
+    plain = _run(kb, insts)
+    pooled = _run(kb, insts, faults=FaultConfig(n_backends=(("llm", 4),)))
+    assert pooled.completion_order == plain.completion_order
+    assert pooled.acts == plain.acts
+
+
+def test_crash_orphans_requeue_and_all_apps_complete(kb, insts):
+    fc = FaultConfig(events=(FaultEvent(t=20.0, kind="crash", backend=1),),
+                     n_backends=(("llm", 4),), heartbeat_timeout_s=1.0)
+    res = _run(kb, insts, faults=fc)
+    fs = res.fault_stats
+    assert fs["crashes"] == 1
+    assert fs["backends_dead"] == 1
+    # detection found every orphan and re-queued each exactly once
+    assert fs["requeued"] == fs["orphaned"] > 0
+    # at-least-once: nothing lost, nothing double-counted
+    assert len(res.acts) == len(insts)
+    assert sorted(res.completion_order) == sorted(res.acts)
+    assert len(set(res.completion_order)) == len(res.completion_order)
+    by_id = {i.app_id: i for i in insts}
+    for a, done in res.units_done.items():
+        assert done == len(by_id[a].trajectory)
+    # redone work really costs wall time on the survivors
+    assert res.makespan >= _run(kb, insts).makespan
+
+
+def test_crash_then_recover_completes_everything(kb, insts):
+    fc = FaultConfig(events=tuple(correlated_outage_plan(
+        3.0, "llm", [0, 1], stagger_s=0.5, recover_after_s=6.0)),
+        n_backends=(("llm", 4),), heartbeat_timeout_s=1.0)
+    res = _run(kb, insts, faults=fc)
+    assert res.fault_stats["crashes"] == 2
+    assert res.fault_stats["recovered"] == 2
+    assert res.fault_stats["backends_dead"] == 0
+    assert len(res.acts) == len(insts)
+
+
+def test_slow_fault_stretches_service_and_recovers(kb, insts):
+    ev = (FaultEvent(t=2.0, kind="slow", backend=0, slowdown=3.0),
+          FaultEvent(t=30.0, kind="recover", backend=0))
+    fc = FaultConfig(events=ev, n_backends=(("llm", 2),))
+    res = _run(kb, insts, faults=fc)
+    assert res.fault_stats["slow_events"] == 1
+    assert len(res.acts) == len(insts)
+    # a 3x stretch on half the slots must cost wall-clock somewhere
+    assert res.makespan > _run(kb, insts).makespan
+
+
+def test_straggler_flag_feeds_scheduler_slowdown(kb):
+    """The watchdog's flag must reach HermesScheduler's demand model."""
+    sched = HermesScheduler(kb, policy="gittins", t_in=T_IN, t_out=T_OUT,
+                            mc_walkers=32, seed=0)
+    assert sched.service_slowdown("llm") == 1.0
+    sched.observe_backend_slowdown("llm0", 2.5)
+    assert sched.service_slowdown("llm") == 2.5
+    sched.observe_backend_slowdown("llm0", 1.0)
+    assert sched.service_slowdown("llm") == 1.0
+
+
+def test_slow_backend_raises_straggler_flag(kb, insts):
+    ev = (FaultEvent(t=0.5, kind="slow", backend=0, slowdown=4.0),)
+    fc = FaultConfig(events=ev, n_backends=(("llm", 2),),
+                     straggler_threshold=1.5, straggler_flag_after=2)
+    res = _run(kb, insts, faults=fc)
+    assert res.fault_stats["straggler_flag_events"] >= 1
+    assert len(res.acts) == len(insts)

@@ -13,6 +13,7 @@ import pytest
 
 from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
 from repro.core.arena import build_queue_state
+from repro.core.refresh_config import RefreshConfig
 from repro.core.scheduler import HermesScheduler
 
 
@@ -21,10 +22,10 @@ def kb():
     return build_knowledge_base(n_trials=60, seed=3)
 
 
-def _filled(kb, mode, walker="pallas", n_apps=24, **kw):
+def _filled(kb, mode, walker="pallas", n_apps=24, refresh_kw=None, **kw):
+    rc = RefreshConfig(mode=mode, walker=walker, **(refresh_kw or {}))
     s = HermesScheduler(kb, policy="gittins", t_in=T_IN, t_out=T_OUT,
-                        mc_walkers=32, seed=11, mode=mode, walker=walker,
-                        **kw)
+                        mc_walkers=32, seed=11, refresh=rc, **kw)
     names = sorted(kb)
     for i in range(n_apps):
         aid = f"a{i:03d}"
@@ -58,7 +59,8 @@ def test_fused_threefry_matches_composed_with_overrides(kb):
     out = {}
     for mode, walker in (("composed", "pallas"), ("fused", "threefry")):
         s = HermesScheduler(kb, t_in=T_IN, t_out=T_OUT, mc_walkers=32,
-                            seed=7, mode=mode, walker=walker, refine=True)
+                            seed=7, refine=True,
+                            refresh=RefreshConfig(mode=mode, walker=walker))
         for i in range(8):
             s.on_arrival(f"b{i}", "CG", now=float(i))
             s.on_progress(f"b{i}", 0.1 * i)

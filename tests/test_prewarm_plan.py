@@ -21,6 +21,7 @@ from repro.apps.workload import AppInstance
 from repro.core.pdgraph import (ARRIVAL_NEVER, BackendSpec, PDGraph,
                                 UnitNode, _mc_walk_batch, pack_graphs)
 from repro.core.prewarm import PrewarmPlan
+from repro.core.refresh_config import RefreshConfig
 from repro.core.scheduler import HermesScheduler
 from repro.serving.simulator import ClusterSim, SimConfig
 
@@ -51,7 +52,8 @@ def _branch_kb(p_b=0.5, dur_a=30.0):
 
 def _sched(kb, **kw):
     base = dict(policy="gittins", t_in=T_IN, t_out=T_OUT, mc_walkers=512,
-                seed=3, mode="fused", walker="pallas", prewarm=True)
+                seed=3, prewarm=True,
+                refresh=RefreshConfig(mode="fused", walker="pallas"))
     base.update(kw)
     return HermesScheduler(kb, **base)
 

@@ -16,6 +16,7 @@ import pytest
 import jax
 
 from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
+from repro.core.refresh_config import RefreshConfig
 from repro.core.refresh_mesh import RefreshMesh
 from repro.core.scheduler import HermesScheduler
 
@@ -40,9 +41,10 @@ def kb():
 def _filled(kb, mesh_shards=None, policy="gittins", prewarm=False,
             walker="pallas", n_apps=24):
     s = HermesScheduler(kb, policy=policy, t_in=T_IN, t_out=T_OUT,
-                        mc_walkers=MC, seed=11, mode="fused_delta",
-                        walker=walker, prewarm=prewarm,
-                        mesh_shards=mesh_shards)
+                        mc_walkers=MC, seed=11, prewarm=prewarm,
+                        refresh=RefreshConfig(mode="fused_delta",
+                                              walker=walker,
+                                              mesh_shards=mesh_shards))
     names = sorted(kb)
     for i in range(n_apps):
         aid = f"a{i:03d}"
@@ -175,7 +177,8 @@ def test_mesh_event_path_subset_updates_full_tick_ranks(kb, n_shards):
 
 def test_mesh_requires_delta_mode(kb):
     with pytest.raises(ValueError, match="fused_delta"):
-        HermesScheduler(kb, policy="gittins", mode="fused", mesh_shards=1)
+        HermesScheduler(kb, policy="gittins",
+                        refresh=RefreshConfig(mode="fused", mesh_shards=1))
 
 
 def test_mesh_shard_count_guards(kb):

@@ -4,6 +4,7 @@ import pytest
 
 from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
 from repro.apps.workload import bursty_arrivals, make_workload
+from repro.core.refresh_config import RefreshConfig
 from repro.serving.simulator import ClusterSim, SimConfig
 
 
@@ -112,7 +113,7 @@ def test_fused_refresh_mode_runs_sim(kb, workload):
     (same policy, different-but-equivalent MC draws)."""
     composed = _run(kb, list(workload)[:60], policy="gittins")
     fused = _run(kb, list(workload)[:60], policy="gittins",
-                 refresh_mode="fused")
+                 refresh=RefreshConfig(mode="fused"))
     assert len(fused.acts) == 60
     assert fused.mean_act() <= 1.25 * composed.mean_act()
     assert composed.mean_act() <= 1.25 * fused.mean_act()

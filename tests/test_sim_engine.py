@@ -271,17 +271,18 @@ def test_refresh_config_validation():
     assert (rc.mode, rc.walker) == ("fused_delta", "pallas")
 
 
-def test_legacy_kwargs_round_trip_with_warning():
-    """Every legacy per-field spelling resolves to the identical
-    RefreshConfig the new API builds directly — after exactly one
-    DeprecationWarning naming the offending kwargs."""
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        rc = resolve_refresh_config(None, owner="X", mode="fused",
-                                    walker="threefry",
-                                    delta_full_threshold=0.25)
-    assert rc == RefreshConfig(mode="fused", walker="threefry",
+def test_legacy_kwargs_are_retired():
+    """The per-field refresh kwargs (deprecated in the previous release)
+    now raise a TypeError that names the offending kwargs and spells out
+    the RefreshConfig replacement — on the resolver and on both public
+    construction surfaces."""
+    with pytest.raises(TypeError, match="mode.*removed") as exc:
+        resolve_refresh_config(None, owner="X", mode="fused",
+                               walker="threefry",
                                delta_full_threshold=0.25)
-    with pytest.raises(TypeError, match="both"):
+    assert "RefreshConfig(" in str(exc.value)             # migration pointer
+    assert "walker='threefry'" in str(exc.value)
+    with pytest.raises(TypeError, match="removed"):
         resolve_refresh_config(RefreshConfig(), owner="X", mode="fused")
 
 
@@ -296,26 +297,19 @@ def test_scheduler_accepts_refresh_config_and_keeps_bare_default():
         # bare construction keeps the pre-RefreshConfig defaults
         assert HermesScheduler(kb).mode == "composed"
         assert HermesScheduler(kb, batched=False).mode == "looped"
-    with pytest.warns(DeprecationWarning):
-        s2 = HermesScheduler(kb, mode="fused", walker="threefry")
-    assert (s2.mode, s2.walker) == ("fused", "threefry")
-    with pytest.raises(TypeError, match="both"):
-        HermesScheduler(kb, refresh=RefreshConfig(), mode="fused")
+    with pytest.raises(TypeError, match="HermesScheduler.*removed"):
+        HermesScheduler(kb, mode="fused", walker="threefry")
 
 
-def test_simconfig_accepts_refresh_config_and_shims_legacy():
+def test_simconfig_accepts_refresh_config_and_rejects_legacy():
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         cfg = SimConfig(refresh=RefreshConfig(mode="composed"))
         assert cfg.refresh.mode == "composed"
         assert SimConfig().refresh == RefreshConfig()     # sim default
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        cfg = SimConfig(refresh_mode="fused", walker="threefry",
-                        queue_delay_correction=True)
-    assert cfg.refresh == RefreshConfig(mode="fused", walker="threefry",
-                                        queue_delay_correction=True)
-    with pytest.raises(TypeError, match="both"):
-        SimConfig(refresh=RefreshConfig(), refresh_mode="fused")
+    with pytest.raises(TypeError, match="SimConfig.*removed"):
+        SimConfig(refresh_mode="fused", walker="threefry",
+                  queue_delay_correction=True)
     with pytest.raises(ValueError, match="unknown sim engine"):
         SimConfig(engine="abacus")
 

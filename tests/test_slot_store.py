@@ -25,6 +25,7 @@ from repro.core.prewarm import prewarm_trigger_time
 from repro.core.arena import QueueState
 from repro.core.refresh_pipeline import (refresh_ranks_delta,
                                          refresh_ranks_fused)
+from repro.core.refresh_config import RefreshConfig
 from repro.core.scheduler import HermesScheduler
 
 MC = 32
@@ -40,10 +41,11 @@ def packed(kb):
     return pack_graphs(kb, T_IN, T_OUT)
 
 
-def _filled(kb, mode, walker="threefry", n_apps=24, policy="gittins", **kw):
+def _filled(kb, mode, walker="threefry", n_apps=24, policy="gittins",
+            refresh_kw=None, **kw):
+    rc = RefreshConfig(mode=mode, walker=walker, **(refresh_kw or {}))
     s = HermesScheduler(kb, policy=policy, t_in=T_IN, t_out=T_OUT,
-                        mc_walkers=MC, seed=11, mode=mode, walker=walker,
-                        **kw)
+                        mc_walkers=MC, seed=11, refresh=rc, **kw)
     names = sorted(kb)
     for i in range(n_apps):
         aid = f"a{i:03d}"
@@ -185,7 +187,8 @@ def test_transition_walks_exactly_the_dirty_app(kb):
 def test_dirty_fraction_fallback_walks_everything(kb):
     """Past delta_full_threshold the tick re-walks the whole occupied set
     (subset gather/scatter no longer pays)."""
-    s = _filled(kb, "fused_delta", n_apps=12, delta_full_threshold=0.25)
+    s = _filled(kb, "fused_delta", n_apps=12,
+                refresh_kw={"delta_full_threshold": 0.25})
     s.refresh_tick(10.0, resample=True)
     before = {a.app_id: a.refreshes for a in s.apps.values()}
     for aid in ("a001", "a004", "a007"):    # 3/12 = 25% >= threshold
@@ -358,8 +361,10 @@ def test_queue_stretch_delays_prewarm_trigger():
     for corrected in (False, True):
         s = HermesScheduler(_chain_kb(dur_a=30.0), policy="gittins",
                             t_in=T_IN, t_out=T_OUT, mc_walkers=256, seed=3,
-                            mode="fused", walker="pallas", prewarm=True,
-                            queue_delay_correction=corrected)
+                            refresh=RefreshConfig(
+                                mode="fused", walker="pallas",
+                                queue_delay_correction=corrected),
+                            prewarm=True)
         s.on_arrival("x", "T", now=0.0)
         # task waited as long as it ran -> stretch EWMA pulls toward 2.0
         for _ in range(12):
@@ -380,7 +385,9 @@ def test_store_arrival_rows_feed_the_plan(kb):
     and finite exactly where a plan entry exists."""
     s = HermesScheduler(_chain_kb(), policy="gittins", t_in=T_IN,
                         t_out=T_OUT, mc_walkers=256, seed=3,
-                        mode="fused_delta", walker="pallas", prewarm=True)
+                        refresh=RefreshConfig(mode="fused_delta",
+                                              walker="pallas"),
+                        prewarm=True)
     s.on_arrival("x", "T", now=0.0)
     s.priorities(0.0)
     plan = s.take_prewarm_plan()
@@ -399,7 +406,9 @@ def test_retrigger_delta_zero_is_bitwise_stable():
     to the walk-time triggers (one shared quantile code path)."""
     s = HermesScheduler(_chain_kb(), policy="gittins", t_in=T_IN,
                         t_out=T_OUT, mc_walkers=256, seed=3,
-                        mode="fused_delta", walker="pallas", prewarm=True)
+                        refresh=RefreshConfig(mode="fused_delta",
+                                              walker="pallas"),
+                        prewarm=True)
     s.on_arrival("x", "T", now=0.0)
     s.priorities(0.0)
     qs = s._qstate
@@ -417,7 +426,9 @@ def test_retrigger_tracks_elapsed_service():
     DOCKER_TP = 10.0
     s = HermesScheduler(_chain_kb(dur_a=30.0), policy="gittins", t_in=T_IN,
                         t_out=T_OUT, mc_walkers=256, seed=3,
-                        mode="fused_delta", walker="pallas", prewarm=True)
+                        refresh=RefreshConfig(mode="fused_delta",
+                                              walker="pallas"),
+                        prewarm=True)
     s.on_arrival("x", "T", now=0.0)
     s.priorities(0.0)
     plan0 = s.take_prewarm_plan()
@@ -449,8 +460,10 @@ def test_retrigger_conditions_reach_probability():
              "b": unit("b", "img-b", [5.0] * 20, {"$end": 20})}
     kb2 = {"T": PDGraph("T", "a", units)}
     s = HermesScheduler(kb2, policy="gittins", t_in=T_IN, t_out=T_OUT,
-                        mc_walkers=512, seed=3, mode="fused_delta",
-                        walker="pallas", prewarm=True, K=0.4)
+                        mc_walkers=512, seed=3,
+                        refresh=RefreshConfig(mode="fused_delta",
+                                              walker="pallas"),
+                        prewarm=True, K=0.4)
     s.on_arrival("x", "T", now=0.0)
     s.priorities(0.0)
     qs = s._qstate
