@@ -334,6 +334,125 @@ def make_flash_crowd_workload(duration_s: float, *,
     return out
 
 
+def make_drifted_suite(apps: Optional[Dict[str, AppSpec]] = None, *,
+                       demand_mult: float = 3.0,
+                       drift_apps: Sequence[str] = ("FEV", "ALFWI", "KBQAV"),
+                       p_repeat: float = 0.35,
+                       repeat_cap: int = 3) -> Dict[str, AppSpec]:
+    """The suite after a mid-run demand shift: the listed applications' true
+    behavior changes while their names (and hence their frozen PDGraph
+    priors) stay the same.
+
+    Two drift axes, matching what posterior learning must recover from:
+
+    * **unit demand** — LLM output lengths and non-LLM durations scale by
+      ``demand_mult`` (only on the ``drift_apps`` subset: a *uniform* scale
+      would barely reorder Gittins ranks, a subset scale must);
+    * **branch mix** — each drifted unit self-repeats with probability
+      ``p_repeat`` (up to ``repeat_cap`` extra visits), adding transition
+      mass the frozen prior assigns zero probability.
+
+    Non-drifted applications are passed through untouched (same objects), so
+    their trajectories and profiling draws are unaffected by construction.
+    """
+    from dataclasses import replace
+    suite = apps or SUITE
+    unknown = [n for n in drift_apps if n not in suite]
+    if unknown:
+        raise ValueError(f"drift_apps not in suite: {unknown}")
+
+    def _scaled(sampler, mult):
+        if sampler is None or mult == 1.0:
+            return sampler
+        return lambda rng, ctx: mult * sampler(rng, ctx)
+
+    def _repeating(base_next, unit_name):
+        def f(rng: np.random.Generator, ctx) -> Optional[str]:
+            # extra self-visits beyond the pre-drift single pass
+            if (ctx["visits"].get(unit_name, 0) <= repeat_cap
+                    and rng.uniform() < p_repeat):
+                return unit_name
+            return base_next(rng, ctx)
+        return f
+
+    out: Dict[str, AppSpec] = {}
+    for name, app in suite.items():
+        if name not in drift_apps:
+            out[name] = app
+            continue
+        units = {}
+        for uname, u in app.units.items():
+            units[uname] = replace(
+                u,
+                out_len=_scaled(u.out_len, demand_mult),
+                dur=_scaled(u.dur, demand_mult),
+                next=_repeating(u.next, uname) if p_repeat > 0 else u.next)
+        out[name] = replace(app, units=units)
+    return out
+
+
+def make_drift_workload(duration_s: float, *,
+                        t_in: float, t_out: float,
+                        shift_at: float,
+                        base_load: Optional[float] = None,
+                        rate_per_s: Optional[float] = None,
+                        demand_mult: float = 3.0,
+                        drift_apps: Sequence[str] = ("FEV", "ALFWI", "KBQAV"),
+                        p_repeat: float = 0.35,
+                        repeat_cap: int = 3,
+                        n_service_slots: int = 16,
+                        tenants: Union[int, Sequence[TenantProfile]] = 4,
+                        with_deadlines: bool = False,
+                        seed: int = 0,
+                        apps: Optional[Dict[str, AppSpec]] = None,
+                        warmup_table: Optional[Dict[str, float]] = None
+                        ) -> List[AppInstance]:
+    """A workload whose generating suite *shifts* at ``shift_at``: arrivals
+    before the shift come from the original suite, arrivals after it from
+    :func:`make_drifted_suite` (app *names* unchanged — only the ground
+    truth behind them moves, so a frozen knowledge base silently goes
+    stale).  The arrival *rate* is held constant across the shift — demand
+    drift changes how heavy applications are, not how often users submit
+    them — so offered load rises with the drifted demand, exactly the
+    regime where a stale model's ordering mistakes cost ACT.
+
+    Exactly one of ``base_load`` (ρ against the *pre-shift* suite, rate
+    back-solved as in :func:`make_open_workload`) / ``rate_per_s`` must be
+    given.  Post-shift instances get ``drift%06d`` ids (the pre-shift
+    segment owns ``app%06d``); the combined trace is arrival-sorted.
+    """
+    if not 0.0 < shift_at < duration_s:
+        raise ValueError(f"need 0 < shift_at < duration_s, got "
+                         f"{shift_at} / {duration_s}")
+    if (base_load is None) == (rate_per_s is None):
+        raise ValueError("give exactly one of base_load / rate_per_s")
+    if rate_per_s is None:
+        e_s = mean_service_demand(apps, t_in=t_in, t_out=t_out, seed=seed,
+                                  warmup_table=warmup_table)
+        rate_per_s = base_load * n_service_slots / max(e_s, 1e-9)
+    pre = make_open_workload(
+        shift_at, t_in=t_in, t_out=t_out, rate_per_s=rate_per_s,
+        n_service_slots=n_service_slots, tenants=tenants,
+        with_deadlines=with_deadlines, seed=seed, apps=apps,
+        warmup_table=warmup_table)
+    drifted = make_drifted_suite(apps, demand_mult=demand_mult,
+                                 drift_apps=drift_apps, p_repeat=p_repeat,
+                                 repeat_cap=repeat_cap)
+    post = make_open_workload(
+        duration_s - shift_at, t_in=t_in, t_out=t_out,
+        rate_per_s=rate_per_s, n_service_slots=n_service_slots,
+        tenants=tenants, with_deadlines=with_deadlines, seed=seed + 6007,
+        apps=drifted, warmup_table=warmup_table)
+    for i, inst in enumerate(post):
+        inst.app_id = f"drift{i:06d}"
+        inst.arrival += shift_at
+        if inst.deadline is not None:
+            inst.deadline += shift_at
+    out = pre + post
+    out.sort(key=lambda a: (a.arrival, a.app_id))
+    return out
+
+
 def make_diurnal_workload(duration_s: float, *,
                           t_in: float, t_out: float,
                           peak_load: float = 1.5,

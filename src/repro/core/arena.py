@@ -34,6 +34,12 @@ Result rows:
   histograms, DEVICE resident (delta mode with prewarming): persisted so
   trigger quantiles can be re-conditioned on elapsed service each tick
   without re-walking (``a_att`` is the host mirror of attained-at-walk).
+* ``post`` — (cap, U, U+3) conjugate-posterior sufficient-statistic rows
+  (Dirichlet branch counts + Gamma demand sum/count, see
+  ``repro.core.posterior``), DEVICE resident (online learning only):
+  refreshed by one scatter per tick right before the slots are walked, read
+  by the posterior-sampling walk, remapped across grow/repack epochs like
+  every other device row.
 * ``rank`` — (cap,) host mirror of the last device-computed Gittins rank
   per slot (the mesh path serves unchanged slots from this cache).
 * ``sup`` / ``opt`` / ``mean`` — (cap,) triage scalars, host mirrors for
@@ -108,6 +114,9 @@ class QueueState:
         self.a_span = None           # (cap, U) jnp
         self.a_reach = None          # (cap, U) jnp
         self.a_att: Optional[np.ndarray] = None   # (cap,) attained at walk
+        # conjugate-posterior rows (online PDGraph learning; None = frozen
+        # prior, every pre-posterior code path bit-identical)
+        self.post = None             # (cap, U, U+3) jnp — device resident
 
     def __len__(self) -> int:
         return self.live
@@ -221,7 +230,7 @@ class QueueState:
             self._frees[s].extend(
                 range(old * 2 - self.n_shards + s, old - 1, -self.n_shards))
         for name in ("d_probs", "d_edges", "a_hist", "a_lo", "a_span",
-                     "a_reach"):
+                     "a_reach", "post"):
             a = getattr(self, name)
             if a is None:
                 continue
@@ -266,6 +275,35 @@ class QueueState:
             self.a_span = jnp.full((cap, U), 1e-6, jnp.float32)
             self.a_reach = jnp.zeros((cap, U), jnp.float32)
             self.a_att = np.zeros(cap, np.float32)
+
+    def ensure_posterior_rows(self) -> None:
+        """Allocate the device-resident conjugate-posterior rows (online
+        learning only — never allocated when ``posterior=None``, so the
+        frozen-prior paths carry no extra state)."""
+        if self.post is None:
+            from repro.core.posterior import row_width
+            U = self.n_units
+            self.post = jnp.zeros((self.capacity, U, row_width(U)),
+                                  jnp.float32)
+
+    def update_posterior_rows(self, slots: np.ndarray,
+                              vals: np.ndarray) -> None:
+        """Scatter freshly folded posterior stats into the slots' device
+        rows: ``vals`` is ``(len(slots), U, U+3)`` float32, computed on the
+        host in a canonical fold order, so the stored rows are bit-identical
+        at any shard count."""
+        if len(slots) == 0:
+            return
+        self.ensure_posterior_rows()
+        rows = jnp.asarray(self.device_rows(np.asarray(slots, np.int64)))
+        self.post = self.post.at[rows].set(jnp.asarray(vals, jnp.float32))
+
+    def posterior_rows(self, slots: np.ndarray) -> np.ndarray:
+        """Read back the device posterior rows of a slot subset (tests,
+        cross-engine/shard bit-identity checks)."""
+        self.ensure_posterior_rows()
+        rows = self.device_rows(np.asarray(slots, np.int64))
+        return np.asarray(self.post[jnp.asarray(rows)])
 
     # ------------------------------------------------------------ lifecycle
     def admit(self, app_id: str, graph_idx: int, start: int, key_id: int,
@@ -469,7 +507,8 @@ class QueueState:
 
         # device rows: one gather in the NEW shard-major row order (hole
         # rows read row 0 — garbage-in-bounds, masked like any other hole)
-        if self.d_probs is not None or self.a_hist is not None:
+        if self.d_probs is not None or self.a_hist is not None \
+                or self.post is not None:
             new_cs = new_cap // n
             rows = np.arange(new_cap, dtype=np.int64)
             nslot = (rows % new_cs) * n + rows // new_cs  # slot per new row
@@ -478,7 +517,7 @@ class QueueState:
                                + src[nslot] // n, 0)
             gidx = jnp.asarray(old_row)
             for name in ("d_probs", "d_edges", "a_hist", "a_lo", "a_span",
-                         "a_reach"):
+                         "a_reach", "post"):
                 a = getattr(self, name)
                 if a is not None:
                     setattr(self, name, a[gidx])

@@ -102,6 +102,22 @@ def apply_masks(graph: PDGraph) -> None:
             node.corr_mask[f"{up}|{k}"] = bool(abs(v) > RHO_THRESHOLD)
 
 
+def observed_service(observed: Dict[str, float],
+                     t_in: float, t_out: float) -> float:
+    """Model-space service seconds of one observed unit execution — the
+    ``trajectory_service`` formula applied to a single observation dict
+    (explicit ``dur`` wins; else parallelism x token-linear cost).  Shared by
+    the §3.2 conditional refinement's consumers and the posterior demand
+    feed, so the two observation paths can never disagree on what "observed
+    service" means."""
+    dur = observed.get("dur")
+    if dur is not None:
+        return float(dur)
+    return float(observed.get("par", 1.0)
+                 * (observed.get("in", 0.0) * t_in
+                    + observed.get("out", 0.0) * t_out))
+
+
 def conditional_samples(graph: PDGraph, up: str, down: str,
                         observed: Dict[str, float],
                         t_in: float, t_out: float) -> Optional[np.ndarray]:

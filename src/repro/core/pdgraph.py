@@ -252,7 +252,8 @@ ARRIVAL_NEVER = 1e30   # first-arrival sentinel: unit never reached
 
 def _walk_core(samples, counts, cum_trans, ov_samples, ov_counts,
                start, executed, key, n_walkers: int, max_steps: int,
-               track_arrivals: bool = False):
+               track_arrivals: bool = False,
+               po_cum=None, po_scale=None):
     """Single-application random walk over (U,S) unit tables.
 
     ``ov_samples (U,So)`` / ``ov_counts (U,)`` carry online-refinement sample
@@ -264,9 +265,18 @@ def _walk_core(samples, counts, cum_trans, ov_samples, ov_counts,
     (``ARRIVAL_NEVER`` where never entered) and returns ``(total, arrivals)``.
     The uniform stream is drawn identically either way, so the returned
     totals are bit-identical with tracking on or off — the prewarm planner
-    rides the rank walk for free."""
+    rides the rank walk for free.
+
+    ``po_cum (U, U+1)`` / ``po_scale (U,)`` switch on posterior sampling
+    (``repro.core.posterior``): transitions draw against the
+    posterior-blended CDF instead of ``cum_trans`` and every sampled service
+    draw is rescaled by the unit's posterior-to-prior demand-mean ratio.
+    Both tables arrive pre-blended (zero-observation units carry the prior
+    CDF bitwise and a scale of exactly 1.0), and the uniform stream does not
+    depend on them — ``None`` leaves the trace untouched."""
     U = cum_trans.shape[1] - 1
     unit_ids = jnp.arange(U, dtype=jnp.int32)
+    trans_cdf = cum_trans if po_cum is None else po_cum
 
     def step(carry, k):
         cur, total, done, first, arr = carry
@@ -280,10 +290,12 @@ def _walk_core(samples, counts, cum_trans, ov_samples, ov_counts,
         svc = jnp.where(ov_counts[cur] > 0,
                         ov_samples[cur, jnp.minimum(sidx, ov_samples.shape[1] - 1)],
                         samples[cur, sidx])
+        if po_scale is not None:
+            svc = svc * po_scale[cur]
         svc = jnp.where(first, jnp.maximum(svc - executed, 0.0), svc)
         total = total + jnp.where(done, 0.0, svc)
         # sample transition
-        nxt = jnp.sum(r2[:, None] > cum_trans[cur], axis=-1).astype(jnp.int32)
+        nxt = jnp.sum(r2[:, None] > trans_cdf[cur], axis=-1).astype(jnp.int32)
         nxt = jnp.minimum(nxt, U)
         new_done = done | (nxt >= U)
         if track_arrivals:
@@ -392,21 +404,40 @@ def _mc_walk_batch(samples, counts, cum_trans,          # (G,U,S),(G,U),(G,U,U+1
                    base_key, key_ids, refresh_ids,      # key, (A,), (A,)
                    ov_samples, ov_counts,               # (A,U,So), (A,U)
                    n_walkers: int, max_steps: int,
-                   track_arrivals: bool = False) -> jnp.ndarray:
+                   track_arrivals: bool = False,
+                   po_cum=None, po_scale=None) -> jnp.ndarray:
     """One dispatch for the whole queue: vmap of `_walk_core` with per-app
     graph gather and per-app fold_in keys (identical bits to the looped
     per-app path, which derives the same fold_in chain).  With
-    ``track_arrivals`` returns ``(totals (A,W), arrivals (A,W,U))``."""
+    ``track_arrivals`` returns ``(totals (A,W), arrivals (A,W,U))``.
+
+    ``po_cum (A, U, U+1)`` / ``po_scale (A, U)`` (posterior-blended walk
+    tables, see ``repro.core.posterior``) switch on per-app posterior
+    sampling; ``None`` (the default) keeps the frozen-prior trace
+    bit-identical — the keyword defaults don't even enter the jit cache
+    key."""
     base_key = _as_typed_key(base_key)
 
-    def one(g, st, ex, kid, rid, ovs, ovc):
+    if po_cum is None:
+        def one(g, st, ex, kid, rid, ovs, ovc):
+            key = jax.random.fold_in(jax.random.fold_in(base_key, kid), rid)
+            return _walk_core(samples[g], counts[g], cum_trans[g], ovs, ovc,
+                              st, ex, key, n_walkers, max_steps,
+                              track_arrivals=track_arrivals)
+
+        return jax.vmap(one)(graph_idx, start, executed,
+                             key_ids, refresh_ids, ov_samples, ov_counts)
+
+    def one_po(g, st, ex, kid, rid, ovs, ovc, pc, ps):
         key = jax.random.fold_in(jax.random.fold_in(base_key, kid), rid)
         return _walk_core(samples[g], counts[g], cum_trans[g], ovs, ovc,
                           st, ex, key, n_walkers, max_steps,
-                          track_arrivals=track_arrivals)
+                          track_arrivals=track_arrivals,
+                          po_cum=pc, po_scale=ps)
 
-    return jax.vmap(one)(graph_idx, start, executed,
-                         key_ids, refresh_ids, ov_samples, ov_counts)
+    return jax.vmap(one_po)(graph_idx, start, executed,
+                            key_ids, refresh_ids, ov_samples, ov_counts,
+                            po_cum, po_scale)
 
 
 def _pow2_ceil(n: int) -> int:

@@ -1,0 +1,195 @@
+"""Online PDGraph learning: conjugate posterior over branch mix + unit demand.
+
+The paper fits PDGraphs offline (§3.2) and freezes them; production demand
+drifts.  This module closes the loop with the *cheapest honest Bayesian
+refinement* of the §3 model that the fused refresh dispatch can consume
+without reshaping its tables:
+
+Branch probabilities — Dirichlet.
+    Each unit's next-unit distribution (including the ``$end`` sink at index
+    ``U``) gets a Dirichlet prior whose pseudo-counts are the FROZEN prior
+    probabilities scaled by ``branch_strength`` (``alpha0 = tau_b * p_prior``).
+    Observed branch outcomes are plain counts, so the posterior mean is
+
+        p_post = (tau_b * p_prior + counts) / (tau_b + n_obs)
+
+    and the walk's transition CDF is just its cumsum.  A unit with zero
+    observations keeps the prior CDF row *bitwise* (explicit ``where`` on the
+    per-unit observation mask — no recomputed cumsum can drift the bits).
+
+Per-unit demand — Gamma on the service *rate*.
+    Service seconds are modeled ``s ~ Exponential(lam)`` with the conjugate
+    ``lam ~ Gamma(alpha0, beta0)`` prior shaped to reproduce the frozen
+    prior's mean demand: ``alpha0 = tau_d``, ``beta0 = tau_d * mean_prior``.
+    After ``n`` observations summing to ``S`` the posterior predictive mean
+    demand is ``(beta0 + S) / (alpha0 + n)``, so the walk keeps drawing from
+    the prior's *empirical sample list* (preserving its shape/multimodality)
+    and rescales every draw by the posterior-to-prior mean ratio
+
+        scale = (tau_d * mean_prior + S) / ((tau_d + n) * mean_prior)
+
+    which is exactly 1.0 at ``n = 0`` (guarded by ``where`` so the
+    zero-observation path multiplies by a literal 1.0f — exact).
+
+Sufficient statistics live as device-resident rows on the slot arena
+(``QueueState.post``, shape ``(cap, U, U + 3)``): ``[..., :U+1]`` branch
+counts, ``[..., U+1]`` service-seconds sum, ``[..., U+2]`` observation count.
+The scheduler folds observations host-side per graph (``PosteriorState``) and
+refreshes each walked slot's row right before its walk, so a row always
+equals its graph's accumulated posterior as of the slot's last walk — new
+admissions inherit everything earlier instances learned.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+END = "$end"
+
+
+@dataclass(frozen=True)
+class PosteriorConfig:
+    """Knobs for the online conjugate refinement.
+
+    branch_strength
+        Dirichlet pseudo-count mass ``tau_b`` put on the frozen prior's
+        branch mix.  Smaller adapts faster, larger trusts the profile longer.
+    demand_strength
+        Gamma pseudo-observation count ``tau_d`` behind the frozen prior's
+        mean demand per unit.
+    """
+    branch_strength: float = 8.0
+    demand_strength: float = 8.0
+
+    def __post_init__(self):
+        if not self.branch_strength > 0.0:
+            raise ValueError("branch_strength must be > 0, "
+                             f"got {self.branch_strength}")
+        if not self.demand_strength > 0.0:
+            raise ValueError("demand_strength must be > 0, "
+                             f"got {self.demand_strength}")
+
+
+# width of one posterior row beyond the (U+1) branch-count lanes
+STAT_COLS = 2  # [sum of observed service seconds, observation count]
+
+
+def row_width(n_units: int) -> int:
+    """Posterior row width for a KB padded to ``n_units`` units."""
+    return n_units + 1 + STAT_COLS
+
+
+def posterior_tables(post_rows: jnp.ndarray,    # (P, U, U+3) float32
+                     prior_cum: jnp.ndarray,    # (P, U, U+1) float32
+                     prior_mean: jnp.ndarray,   # (P, U)      float32
+                     *, branch_strength: float, demand_strength: float
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blend posterior rows with the frozen prior into walk tables.
+
+    Returns ``(po_cum, po_scale)``: the per-row transition CDF the walk uses
+    in place of ``cum_trans[graph]``, and the per-(row, unit) demand scale
+    multiplied into every sampled service draw.  Zero-observation units fall
+    back to the prior bitwise: ``po_cum`` rows are the prior CDF unchanged
+    and ``po_scale`` is a literal 1.0 (multiplication by 1.0 is exact).
+    Pure jnp — traced inside the fused/delta/mesh dispatch.
+    """
+    U1 = prior_cum.shape[-1]
+    bcnt = post_rows[..., :U1]                              # (P, U, U+1)
+    dsum = post_rows[..., U1]                               # (P, U)
+    dcnt = post_rows[..., U1 + 1]                           # (P, U)
+
+    # Dirichlet: alpha = tau_b * p_prior + counts; prior probs recovered from
+    # the CDF by first-difference (exact for the padded absorbing rows too)
+    p_prior = jnp.diff(prior_cum, axis=-1,
+                       prepend=jnp.zeros_like(prior_cum[..., :1]))
+    alpha = np.float32(branch_strength) * p_prior + bcnt
+    tot = jnp.sum(alpha, axis=-1, keepdims=True)
+    cdf = jnp.cumsum(alpha / jnp.maximum(tot, np.float32(1e-30)), axis=-1)
+    has_b = jnp.sum(bcnt, axis=-1) > 0.0                    # (P, U)
+    po_cum = jnp.where(has_b[..., None], cdf, prior_cum)
+
+    # Gamma: posterior-predictive-mean / prior-mean ratio per unit
+    tau = np.float32(demand_strength)
+    num = tau * prior_mean + dsum
+    den = (tau + dcnt) * prior_mean
+    has_d = (dcnt > 0.0) & (prior_mean > 0.0)
+    po_scale = jnp.where(has_d, num / jnp.maximum(den, np.float32(1e-30)),
+                         np.float32(1.0))
+    return po_cum, po_scale
+
+
+# --------------------------------------------------------------------------
+# host-side accumulation (the scheduler's per-graph sufficient statistics)
+# --------------------------------------------------------------------------
+
+# one buffered observation: (app_name, unit, kind, value)
+#   kind "branch": value is the next unit name (END for terminal)
+#   kind "demand": value is the observed service seconds (float)
+Observation = Tuple[str, str, str, object]
+
+
+class PosteriorState:
+    """Per-graph conjugate sufficient statistics, keyed by unit *names*.
+
+    Name-keyed so the statistics survive knowledge-base repacks and queue
+    rebuilds (packed unit indices may move; names never do).  ``fold`` sorts
+    each batch into a canonical order before accumulating, so any permutation
+    of the same observation batch produces bit-identical statistics (float
+    addition is not associative — a fixed fold order makes it immaterial).
+    """
+
+    def __init__(self):
+        self.branch: Dict[str, Dict[str, Dict[str, float]]] = {}
+        self.dsum: Dict[str, Dict[str, float]] = {}
+        self.dcnt: Dict[str, Dict[str, float]] = {}
+
+    def fold(self, batch: Iterable[Observation]) -> List[str]:
+        """Accumulate one observation batch; returns touched graph names."""
+        touched = []
+        for name, unit, kind, value in sorted(
+                batch, key=lambda o: (o[0], o[1], o[2], str(o[3]))):
+            if kind == "branch":
+                row = self.branch.setdefault(name, {}).setdefault(unit, {})
+                row[str(value)] = row.get(str(value), 0.0) + 1.0
+            else:
+                d = self.dsum.setdefault(name, {})
+                d[unit] = np.float32(d.get(unit, np.float32(0.0))
+                                     + np.float32(value))
+                c = self.dcnt.setdefault(name, {})
+                c[unit] = c.get(unit, 0.0) + 1.0
+            if name not in touched:
+                touched.append(name)
+        return touched
+
+    def graph_row(self, name: str, unit_order: List[str],
+                  n_units: int) -> np.ndarray:
+        """Materialize one graph's stats as a ``(U, U+3)`` float32 row block
+        under the CURRENT packed unit order (index ``n_units`` = $end)."""
+        out = np.zeros((n_units, row_width(n_units)), np.float32)
+        idx = {u: i for i, u in enumerate(unit_order)}
+        for unit, row in self.branch.get(name, {}).items():
+            ui = idx.get(unit)
+            if ui is None:
+                continue
+            for nxt, cnt in row.items():
+                j = n_units if nxt == END else idx.get(nxt)
+                if j is not None:
+                    out[ui, j] = np.float32(cnt)
+        for unit, s in self.dsum.get(name, {}).items():
+            ui = idx.get(unit)
+            if ui is not None:
+                out[ui, n_units + 1] = np.float32(s)
+        for unit, c in self.dcnt.get(name, {}).items():
+            ui = idx.get(unit)
+            if ui is not None:
+                out[ui, n_units + 2] = np.float32(c)
+        return out
+
+    def n_observations(self) -> float:
+        tot = sum(c for per in self.dcnt.values() for c in per.values())
+        tot += sum(c for per in self.branch.values()
+                   for row in per.values() for c in row.values())
+        return tot

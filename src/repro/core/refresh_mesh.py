@@ -50,6 +50,7 @@ from repro.core.arena import QueueState
 from repro.core.gittins import N_BUCKETS, gittins_rank_core, \
     to_histogram_rows_jnp
 from repro.core.pdgraph import PackedKB
+from repro.core.posterior import posterior_tables
 from repro.core.refresh_pipeline import (_arrival_hists, _triage_stats,
                                          _triggers_from_hists, _walk_total)
 from repro.kernels.pdgraph_walk.ops import pad_rows
@@ -127,13 +128,16 @@ class RefreshMesh:
             self._evict()
         return ent[1]
 
-    def zeros_rows(self, key: str, width: int, dtype) -> jnp.ndarray:
+    def zeros_rows(self, key: str, width, dtype) -> jnp.ndarray:
         """Cached row-sharded zero placeholders for the disabled-feature
         argument slots (one element — or ``width`` trailing ones — per
-        shard), so feature-off ticks upload nothing for them."""
+        shard; a tuple width adds several trailing dims), so feature-off
+        ticks upload nothing for them."""
         ent = self._rep.get(("zeros", key))
         if ent is None:
-            shape = (self.n_shards,) if width == 0 else (self.n_shards, width)
+            shape = ((self.n_shards,) if width == 0 else
+                     (self.n_shards, *width) if isinstance(width, tuple)
+                     else (self.n_shards, width))
             arr = jax.device_put(jnp.zeros(shape, dtype),
                                  self.row_sharding(len(shape)))
             ent = (None, arr)
@@ -155,7 +159,7 @@ class RefreshMesh:
     def place_state(self, qs: QueueState) -> None:
         """(Re)commit the store's device rows after allocation or growth."""
         for name in ("d_probs", "d_edges", "a_hist", "a_lo", "a_span",
-                     "a_reach"):
+                     "a_reach", "post"):
             a = getattr(qs, name)
             if a is not None:
                 setattr(qs, name, self.place(a))
@@ -212,7 +216,9 @@ _N_COLS = 10
 def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
                n_buckets: int, walker: str, impl: Optional[str],
                with_overrides: bool, compact_after: int, compact_shrink: int,
-               with_prewarm: bool, with_retrigger: bool, with_triage: bool):
+               with_prewarm: bool, with_retrigger: bool, with_triage: bool,
+               with_posterior: bool = False, branch_strength: float = 8.0,
+               demand_strength: float = 8.0):
     """Build (and cache per mesh + static config) the jitted shard_map tick.
 
     ALL per-tick row state travels in ONE packed ``(n, P, _N_COLS + U)``
@@ -229,6 +235,7 @@ def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
                  ovs,                   # (1, P, U, So)
                  d_probs, d_edges,      # (cap_s, nb) — the shard's arena rows
                  a_hist, a_lo, a_span, a_reach,         # (cap_s, ...)
+                 post,                                  # (cap_s, U, U+3)
                  gi_rows, delta_rows, stretch_rows,     # (cap_s,)
                  base_key, uc, wt, prewarm_k):          # replicated
         # NOTE two block conventions: stacked (n, ...) per-tick batches keep
@@ -247,6 +254,20 @@ def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
         ovc = jax.lax.bitcast_convert_type(c[:, _N_COLS:], jnp.int32)[None]
         cap_s = d_probs.shape[0]
         valid = scat < cap_s                  # padding rows carry scat=cap_s
+        po_cum = po_scale = None
+        if with_posterior:
+            # the shard's own arena block holds its slots' posterior rows;
+            # the gather + blend is the delta pipeline's math verbatim, and
+            # the rows hold host-scattered values identical at any shard
+            # count — so sharded == 1-shard bit-for-bit here too.  Padding
+            # rows clamp to a garbage row; their walks are dropped.
+            rows_p = post[jnp.minimum(scat, post.shape[0] - 1)]
+            prior_mean = jnp.sum(samples, axis=-1) / jnp.maximum(
+                counts.astype(jnp.float32), 1.0)
+            po_cum, po_scale = posterior_tables(
+                rows_p, cum_trans[gi], prior_mean[gi],
+                branch_strength=branch_strength,
+                demand_strength=demand_strength)
         total, arr, spill = _walk_total(
             samples, counts, cum_trans, gi, start, executed,
             attained, kid, rid, base_key, np.uint32(seed), ovs[0], ovc[0],
@@ -255,7 +276,8 @@ def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
             compact_after=compact_after, compact_shrink=compact_shrink,
             with_prewarm=with_prewarm,
             compact_schedule=_mesh_schedule(compact_after, compact_shrink,
-                                            c.shape[0] * n_walkers))
+                                            c.shape[0] * n_walkers),
+            po_cum=po_cum, po_scale=po_scale)
         probs, edges = to_histogram_rows_jnp(total, n_buckets)
         dp = d_probs.at[scat].set(probs, mode="drop")
         de = d_edges.at[scat].set(edges, mode="drop")
@@ -298,6 +320,7 @@ def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
                 rows, rows,                        # carrier / ovs
                 rows, rows,                        # d_probs / d_edges
                 rows, rows, rows, rows,            # arrival arena
+                rows,                              # posterior arena
                 rows, rows, rows,                  # gi/delta/stretch rows
                 rep, rep, rep, rep)                # base_key/uc/wt/K
     out_specs = (rows,) * 13
@@ -331,22 +354,31 @@ def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
                        compact_after: int = 16, compact_shrink: int = 4,
                        prewarm_table=None, prewarm_k: float = 0.5,
                        retrigger: bool = True, host_work=None,
-                       with_triage: bool = False) -> MeshTick:
+                       with_triage: bool = False,
+                       posterior=None) -> MeshTick:
     """One mesh tick: walk ``walked`` (shard-partitioned), scatter into the
     sharded arena, re-rank ``ranked`` (default: the walked set), gather the
     small results.  Bit-identical per slot to ``refresh_ranks_delta`` over
     the same sets on one shard.  Does NOT bump refresh ids — but
     ``host_work`` (if given) runs between the async dispatch and the
     result sync, so callers can overlap their per-tick bookkeeping with
-    the device walk instead of serializing after it."""
+    the device walk instead of serializing after it.
+
+    ``posterior`` (a :class:`repro.core.posterior.PosteriorConfig`) blends
+    each walked slot's device posterior row (the shard's own arena block)
+    into its walk tables — the delta path's blend verbatim, so sharded
+    posterior ticks stay bit-identical to 1-shard ones."""
     n = mesh.n_shards
     if qs.capacity % n or qs.n_shards != n:
         raise ValueError(f"store is laid out for {qs.n_shards} shards, "
                          f"mesh has {n}")
     with_pw = prewarm_table is not None
+    with_po = posterior is not None
     qs.ensure_result_rows(n_buckets,
                           prewarm_table.n_classes if with_pw else None,
                           arrivals=with_pw)
+    if with_po:
+        qs.ensure_posterior_rows()
     mesh.place_state(qs)
     cap, cap_s = qs.capacity, qs.shard_capacity
     walked = np.asarray(walked, np.int64)
@@ -405,11 +437,14 @@ def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
         delta_rows = mesh.zeros_rows("f32", 0, jnp.float32)
         stretch_rows = mesh.zeros_rows("f32", 0, jnp.float32)
     dummy = mesh.zeros_rows("dummy2d", 1, jnp.float32)
+    dummy3 = mesh.zeros_rows("dummy3d", (1, 1), jnp.float32)
 
     fn = _mesh_exec(mesh.mesh, int(seed) & 0xFFFFFFFF, n_walkers, max_steps,
                     n_buckets, walker, impl, with_ov, compact_after,
                     compact_shrink, with_pw, retrigger and with_pw,
-                    with_triage)
+                    with_triage, with_po,
+                    posterior.branch_strength if with_po else 8.0,
+                    posterior.demand_strength if with_po else 8.0)
     (dp, de, ranks, spill, sup, opt, mean, ah, al, asp, ar, trigger,
      reach) = fn(
         mesh.replicated(packed.samples), mesh.replicated(packed.counts),
@@ -420,6 +455,7 @@ def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
         qs.a_lo if with_pw else dummy,
         qs.a_span if with_pw else dummy,
         qs.a_reach if with_pw else dummy,
+        qs.post if with_po else dummy3,
         gi_rows, delta_rows, stretch_rows,
         mesh.replicated(base_key), uc, wt,
         np.float32(prewarm_k))

@@ -54,6 +54,7 @@ from repro.core.gittins import (N_BUCKETS, gittins_rank_core,
                                 gittins_rank_hist, to_histogram_rows_jnp)
 from repro.core.pdgraph import ARRIVAL_NEVER, PackedKB, _mc_walk_batch
 from repro.core.policies import HOPELESS_Q, SUP_Q
+from repro.core.posterior import posterior_tables
 from repro.kernels.pdgraph_walk.ops import pdgraph_walk, walker_streams
 
 
@@ -183,11 +184,15 @@ def _walk_total(samples, counts, cum_trans, graph_idx, start, executed,
                 ov_samples, ov_counts, valid, *,
                 n_walkers, max_steps, walker, impl, with_overrides,
                 compact_after, compact_shrink, with_prewarm,
-                compact_schedule=None):
+                compact_schedule=None, po_cum=None, po_scale=None):
     """The shared walk section of every pipeline: (A,) queue rows -> TOTAL
     demand samples ``(total (A, W), arr (A, W, U) | None, spill)``.  Pure
     per-row math keyed by per-app RNG streams, so the same rows produce the
-    same bits whatever dispatch (full, delta, mesh shard) batches them."""
+    same bits whatever dispatch (full, delta, mesh shard) batches them.
+
+    ``po_cum (A, U, U+1)`` / ``po_scale (A, U)`` switch on posterior-blended
+    sampling (:func:`repro.core.posterior.posterior_tables`); ``None`` keeps
+    every walker's frozen-prior bits."""
     arr = None
     if walker == "threefry":
         # the composed path's walker verbatim — ONE implementation carries
@@ -196,7 +201,8 @@ def _walk_total(samples, counts, cum_trans, graph_idx, start, executed,
                              graph_idx, start, executed,
                              base_key, key_ids, refresh_ids,
                              ov_samples, ov_counts, n_walkers, max_steps,
-                             track_arrivals=with_prewarm)
+                             track_arrivals=with_prewarm,
+                             po_cum=po_cum, po_scale=po_scale)
         rem, arr = out if with_prewarm else (out, None)
         spill = jnp.zeros((), jnp.int32)
     elif walker == "pallas":
@@ -209,7 +215,8 @@ def _walk_total(samples, counts, cum_trans, graph_idx, start, executed,
             impl=impl, compact_after=compact_after,
             compact_shrink=compact_shrink,
             compact_schedule=compact_schedule,
-            track_arrivals=with_prewarm)
+            track_arrivals=with_prewarm,
+            po_cum=po_cum, po_scale=po_scale)
         (rem, arr, spill) = out if with_prewarm else (out[0], None, out[1])
     else:
         raise ValueError(f"unknown walker {walker!r}")
@@ -291,7 +298,8 @@ def _fused_pipeline(samples, counts, cum_trans,        # KB: (G,U,S),(G,U),(G,U,
                                    "walker", "impl", "with_overrides",
                                    "compact_after", "compact_shrink",
                                    "with_prewarm", "with_retrigger",
-                                   "with_triage"))
+                                   "with_triage", "with_posterior",
+                                   "branch_strength", "demand_strength"))
 def _delta_pipeline(samples, counts, cum_trans,        # packed KB tables
                     graph_idx, start, executed, attained,   # (D,) dirty rows
                     key_ids, refresh_ids, base_key, seed,
@@ -302,11 +310,14 @@ def _delta_pipeline(samples, counts, cum_trans,        # packed KB tables
                     a_hist, a_lo, a_span, a_reach,          # arrival arena
                     gi_all, delta_all, stretch_all,         # (cap,) rows
                     unit_class, class_warmup, prewarm_k,
+                    post,                                   # (cap, U, U+3)
                     *, n_walkers: int, max_steps: int, n_buckets: int,
                     walker: str, impl: Optional[str], with_overrides: bool,
                     compact_after: int, compact_shrink: int,
                     with_prewarm: bool, with_retrigger: bool,
-                    with_triage: bool):
+                    with_triage: bool, with_posterior: bool = False,
+                    branch_strength: float = 8.0,
+                    demand_strength: float = 8.0):
     """The delta tick: walk ONLY the gathered dirty rows, scatter their
     fresh histogram rows (demand AND arrival) back into the persistent
     device arena, and re-rank every slot in place from the persisted
@@ -321,16 +332,34 @@ def _delta_pipeline(samples, counts, cum_trans,        # packed KB tables
     the walked rows' triggers are computed, at delta=0, exactly as a full
     walk would.
 
+    With ``with_posterior`` each walked row's device posterior row (gathered
+    from the arena's ``post`` mirror at ``slot_idx``) is blended with the
+    frozen prior into per-row walk tables; rows with zero observations walk
+    on the prior bitwise.  ``post`` is a 1-element dummy when off.
+
     Returns ``(d_probs', d_edges', ranks (cap,), spill, sup, opt, mean,
     a_hist', a_lo', a_span', a_reach', trigger, reach)`` — triage sized by
     the dirty set; trigger/reach sized (cap, B) with retriggering, (D, B)
     without."""
+    po_cum = po_scale = None
+    if with_posterior:
+        # padded dirty rows gather a clamped (garbage) posterior row; their
+        # walks are dropped by the out-of-bounds scatter like every other
+        # padding-row product
+        rows = post[jnp.minimum(slot_idx, post.shape[0] - 1)]
+        prior_mean = jnp.sum(samples, axis=-1) / jnp.maximum(
+            counts.astype(jnp.float32), 1.0)
+        po_cum, po_scale = posterior_tables(
+            rows, cum_trans[graph_idx], prior_mean[graph_idx],
+            branch_strength=branch_strength,
+            demand_strength=demand_strength)
     total, arr, spill = _walk_total(
         samples, counts, cum_trans, graph_idx, start, executed, attained,
         key_ids, refresh_ids, base_key, seed, ov_samples, ov_counts, valid,
         n_walkers=n_walkers, max_steps=max_steps, walker=walker, impl=impl,
         with_overrides=with_overrides, compact_after=compact_after,
-        compact_shrink=compact_shrink, with_prewarm=with_prewarm)
+        compact_shrink=compact_shrink, with_prewarm=with_prewarm,
+        po_cum=po_cum, po_scale=po_scale)
     probs, edges = to_histogram_rows_jnp(total, n_buckets)
     d_probs = d_probs.at[slot_idx].set(probs, mode="drop")
     d_edges = d_edges.at[slot_idx].set(edges, mode="drop")
@@ -515,12 +544,17 @@ def refresh_ranks_delta(packed: PackedKB, qs: QueueState, base_key, seed,
                         compact_after: int = 16, compact_shrink: int = 4,
                         prewarm_table=None, prewarm_k: float = 0.5,
                         retrigger: bool = True,
-                        with_triage: bool = False) -> DeltaTick:
+                        with_triage: bool = False,
+                        posterior=None) -> DeltaTick:
     """One delta tick over the slot store: walk ``walked`` (normally the
     drained dirty set), scatter their histogram rows into the device arena,
     re-rank every slot in place.  With an empty ``walked`` the tick is a
     pure rank-in-place dispatch — no MC walk at all.  Fresh triage scalars
     land in the store's host mirrors for exactly the walked slots.
+
+    ``posterior`` (a :class:`repro.core.posterior.PosteriorConfig`) blends
+    each walked row's device posterior row into its walk tables; ``None``
+    (the default) leaves every trace and jit cache key untouched.
 
     With prewarming, ``retrigger=True`` (full ticks) re-conditions EVERY
     slot's trigger rows on the service attained since its last walk —
@@ -564,6 +598,10 @@ def refresh_ranks_delta(packed: PackedKB, qs: QueueState, base_key, seed,
         z = jnp.zeros((1,), jnp.float32)
         gi_all, delta_all, stretch_all = jnp.zeros((1,), jnp.int32), z, z
     dummy = jnp.zeros((1, 1), jnp.float32)
+    with_po = posterior is not None
+    if with_po:
+        qs.ensure_posterior_rows()
+    post = qs.post if with_po else jnp.zeros((1, 1, 1), jnp.float32)
     (qs.d_probs, qs.d_edges, ranks, spill, sup, opt, mean,
      a_hist, a_lo, a_span, a_reach, trigger, reach) = _delta_pipeline(
         packed.samples, packed.counts, packed.cum_trans,
@@ -578,12 +616,14 @@ def refresh_ranks_delta(packed: PackedKB, qs: QueueState, base_key, seed,
         qs.a_span if with_pw else dummy,
         qs.a_reach if with_pw else dummy,
         gi_all, delta_all, stretch_all,
-        uc, wt, jnp.float32(prewarm_k),
+        uc, wt, jnp.float32(prewarm_k), post,
         n_walkers=n_walkers, max_steps=max_steps, n_buckets=n_buckets,
         walker=walker, impl=impl, with_overrides=with_ov,
         compact_after=compact_after, compact_shrink=compact_shrink,
         with_prewarm=with_pw, with_retrigger=retrigger,
-        with_triage=with_triage)
+        with_triage=with_triage, with_posterior=with_po,
+        branch_strength=(posterior.branch_strength if with_po else 8.0),
+        demand_strength=(posterior.demand_strength if with_po else 8.0))
     if with_pw:
         qs.a_hist, qs.a_lo, qs.a_span, qs.a_reach = \
             a_hist, a_lo, a_span, a_reach

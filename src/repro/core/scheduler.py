@@ -26,6 +26,8 @@ from repro.core.pdgraph import (PDGraph, mc_service_samples_batch,
 from repro.core.policies import (AppView, GittinsPolicy, Policy, VTCPolicy,
                                  make_policy)
 from repro.core.arena import build_queue_state
+from repro.core.posterior import (END, Observation, PosteriorConfig,
+                                  PosteriorState, row_width)
 from repro.core.prewarm import (PrewarmPlan, PrewarmSignal,
                                 build_prewarm_table)
 from repro.core.refresh_config import (_UNSET, RefreshConfig,
@@ -69,7 +71,8 @@ class HermesScheduler:
                  warmup_table: Optional[Dict[str, float]] = None,
                  delta_full_threshold=_UNSET,
                  queue_delay_correction=_UNSET,
-                 mesh_shards=_UNSET):
+                 mesh_shards=_UNSET,
+                 posterior: Optional[PosteriorConfig] = None):
         self.kb = knowledge_base
         self.policy: Policy = make_policy(policy) if policy != "gittins" \
             else make_policy(policy, n_buckets=n_buckets)
@@ -139,6 +142,21 @@ class HermesScheduler:
         # per-backend service-stretch estimates (straggler watchdog feed):
         # the demand model's consumers scale wall estimates by these
         self.backend_slowdown: Dict[str, float] = {}
+        # Online posterior learning (repro.core.posterior): observations
+        # buffer host-side and fold into per-graph conjugate statistics at
+        # the next delta tick, which scatters each about-to-walk slot's
+        # device posterior row right before its walk.  None (the default)
+        # allocates nothing and leaves every dispatch bit-identical.
+        if posterior is not None and self.mode != "fused_delta":
+            raise ValueError(
+                "posterior learning rides the delta tick's walked-slot "
+                f"scatter; it requires mode='fused_delta' (got {self.mode!r})")
+        self.posterior = posterior
+        self._post_state: Optional[PosteriorState] = \
+            PosteriorState() if posterior is not None else None
+        self._post_pending: List[Observation] = []
+        self._post_cache: Dict[str, np.ndarray] = {}   # name -> (U, U+3) row
+        self._post_cache_token = None
         for g in self.kb.values():
             C.apply_masks(g)
 
@@ -359,6 +377,8 @@ class HermesScheduler:
             req = {qs.slot[a.app_id] for a in live}
             walked = np.asarray(sorted(qs.dirty_in(req)), np.int64)
             qs.clear_dirty(req)
+        if self.posterior is not None:
+            self._posterior_flush(qs, walked)
         tab = self._prewarm_table() if self.prewarm_batched else None
         if self.refresh_mesh is not None:
             return self._priorities_mesh(qs, live, walked, now, tab, full)
@@ -369,7 +389,7 @@ class HermesScheduler:
             compact_after=self.compact_after,
             compact_shrink=self.compact_shrink,
             prewarm_table=tab, prewarm_k=self.K, retrigger=full,
-            with_triage=self._with_triage)
+            with_triage=self._with_triage, posterior=self.posterior)
         self.fused_spill += tick.spill
         if full:
             qs.take_rank_dirty()     # arena-wide re-rank covered everyone
@@ -416,7 +436,8 @@ class HermesScheduler:
             walker=self.walker, compact_after=self.compact_after,
             compact_shrink=self.compact_shrink,
             prewarm_table=tab, prewarm_k=self.K, retrigger=full,
-            host_work=bookkeeping, with_triage=self._with_triage)
+            host_work=bookkeeping, with_triage=self._with_triage,
+            posterior=self.posterior)
         self.fused_spill += tick.spill
         if tab is not None:
             plan_slots = qs.occupied() if full else walked
@@ -501,6 +522,40 @@ class HermesScheduler:
         ranks = self.policy.ranks([a.view for a in live], now)
         return {a.app_id: float(r) for a, r in zip(live, ranks)}
 
+    def _posterior_flush(self, qs, walked: np.ndarray) -> None:
+        """Fold the pending observation buffer into the per-graph conjugate
+        statistics and scatter ``row := graph stats`` for every about-to-walk
+        slot.  Walked slots are exactly the slots whose estimates re-walk
+        this tick — admitted slots are dirty, hence walked, hence flushed —
+        so a slot's device posterior row always equals its graph's
+        accumulated posterior as of its last walk, and freshly admitted
+        instances inherit everything earlier instances learned (stale
+        garbage from a slot's previous occupant is overwritten before it is
+        ever sampled)."""
+        if self._post_pending:
+            for name in self._post_state.fold(self._post_pending):
+                self._post_cache.pop(name, None)
+            self._post_pending = []
+        if len(walked) == 0:
+            return
+        packed = self._packed_kb()
+        if self._post_cache_token != self._packed[0]:
+            # KB repack: packed unit order may have moved — rematerialize
+            self._post_cache = {}
+            self._post_cache_token = self._packed[0]
+        U = qs.n_units
+        vals = np.empty((len(walked), U, row_width(U)), np.float32)
+        for i, s in enumerate(np.asarray(walked).tolist()):
+            name = self.apps[qs.ids[int(s)]].app_name
+            row = self._post_cache.get(name)
+            if row is None:
+                uidx = packed.unit_index[packed.graph_index[name]]
+                order = sorted(uidx, key=uidx.get)
+                row = self._post_state.graph_row(name, order, U)
+                self._post_cache[name] = row
+            vals[i] = row
+        qs.update_posterior_rows(np.asarray(walked, np.int64), vals)
+
     def _stash_plan(self, plan: PrewarmPlan) -> None:
         """Accumulate plans until the host takes them (several subset
         refreshes — or several shards' rows — may land between two
@@ -570,9 +625,21 @@ class HermesScheduler:
                        observed: Dict[str, float], now: float,
                        next_unit: Optional[str]) -> None:
         """Online refinement: condition every downstream unit's demand on the
-        just-observed execution (bucket-join + filter, §3.2)."""
+        just-observed execution (bucket-join + filter, §3.2).  With posterior
+        learning enabled the completion also self-observes: the unit's
+        model-space service (the ``trajectory_service`` formula over the
+        observed token counts) and the taken branch feed the conjugate
+        statistics, so hosts that already drive ``on_unit_finish`` need no
+        extra observation calls."""
         app = self.apps[app_id]
         g = self.kb[app.app_name]
+        if self.posterior is not None:
+            svc = C.observed_service(observed, self.t_in, self.t_out)
+            self._post_pending.append(
+                (app.app_name, unit, "demand", svc))
+            self._post_pending.append(
+                (app.app_name, unit, "branch",
+                 next_unit if next_unit is not None else END))
         if self.refine:
             # one KB-version check for the whole refinement loop
             qs_packed = self._qstate_if_current()
@@ -659,6 +726,46 @@ class HermesScheduler:
         cap = 1 << (cap.bit_length() - 1)            # floor to power of two
         self._walker_cap = cap
         self.mc_walkers = min(self._mc_walkers_base, cap)
+
+    def observe_unit_completion(self, app_id: str, unit: str,
+                                service_s: float, *,
+                                wall_s: Optional[float] = None,
+                                backend: Optional[str] = None,
+                                slowdown: Optional[float] = None) -> None:
+        """ONE coherent observation feed for hosts that execute units outside
+        ``on_unit_finish`` (the serving engine, external RPC drivers): the
+        observed model-space service seconds feed the posterior demand
+        statistics; ``wall_s`` (observed wall clock, when it differs from
+        service) feeds the §3.4 queueing-delay stretch; ``backend`` +
+        ``slowdown`` forward the straggler watchdog's estimate.  Each leg is
+        a no-op when its feature is off, so calling this unconditionally is
+        always safe."""
+        if backend is not None and slowdown is not None:
+            self.observe_backend_slowdown(backend, slowdown)
+        if wall_s is not None:
+            self.observe_queue_wait(app_id, max(wall_s - service_s, 0.0),
+                                    service_s)
+        if self.posterior is None:
+            return
+        app = self.apps.get(app_id)
+        if app is None:
+            return
+        self._post_pending.append(
+            (app.app_name, unit, "demand", float(service_s)))
+
+    def observe_branch_taken(self, app_id: str, unit: str,
+                             next_unit: Optional[str]) -> None:
+        """Posterior branch feed: the application finished ``unit`` and
+        moved to ``next_unit`` (None = terminal).  No-op without posterior
+        learning."""
+        if self.posterior is None:
+            return
+        app = self.apps.get(app_id)
+        if app is None:
+            return
+        self._post_pending.append(
+            (app.app_name, unit, "branch",
+             next_unit if next_unit is not None else END))
 
     def observe_backend_slowdown(self, backend_id: str,
                                  slowdown: float) -> None:

@@ -69,13 +69,16 @@ def pad_rows(n: int, min_rows: int = 1) -> int:
 
 
 def _phase(flat_tables, ov_tables, state, *, step0, n_steps, lanes_per_app,
-           impl, interpret, arrivals=None):
+           impl, interpret, arrivals=None, po_tables=(None, None)):
     """One walk phase via the kernel or its jnp twin (identical bits).
 
     ``arrivals`` (N, U) switches on first-arrival tracking; both backends
-    carry it (the kernel as a (U, N) lane-major block), bit-identically."""
+    carry it (the kernel as a (U, N) lane-major block), bit-identically.
+    ``po_tables`` (flat posterior CDF/scale) only reach the twin — the
+    dispatcher forces ``impl="ref"`` when posterior sampling is on."""
     fsamples, fcounts, fcum = flat_tables
     fov_s, fov_c = ov_tables
+    fpo_cum, fpo_scale = po_tables
     cur, total, done, gi, app, stream, lane, executed = state
     if impl == "pallas":
         ex = executed if executed is not None \
@@ -97,7 +100,8 @@ def _phase(flat_tables, ov_tables, state, *, step0, n_steps, lanes_per_app,
     return walk_phase_ref(fsamples, fcounts, fcum, fov_s, fov_c,
                           cur, total, done, gi, app, stream, lane, executed,
                           step0=step0, n_steps=n_steps,
-                          lanes_per_app=lanes_per_app, arrivals=arrivals)
+                          lanes_per_app=lanes_per_app, arrivals=arrivals,
+                          fpo_cum=fpo_cum, fpo_scale=fpo_scale)
 
 
 def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
@@ -114,7 +118,9 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
                  impl: Optional[str] = None, interpret: Optional[bool] = None,
                  compact_after: int = 16, compact_shrink: int = 4,
                  compact_schedule: Optional[Tuple[Tuple[int, int], ...]] = None,
-                 track_arrivals: bool = False
+                 track_arrivals: bool = False,
+                 po_cum: Optional[jnp.ndarray] = None,       # (A, U, U+1)
+                 po_scale: Optional[jnp.ndarray] = None      # (A, U)
                  ) -> Tuple[jnp.ndarray, ...]:
     """Remaining-service totals for A apps: ``((A, n_walkers), spill)``.
 
@@ -143,9 +149,18 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
     (U, N) lane-major block), so the TPU path keeps kernel speed with
     prewarm tracking on; the counter-RNG draws don't depend on the extra
     carry, so totals are bit-identical either way.
+
+    ``po_cum (A, U, U+1)`` / ``po_scale (A, U)`` switch on posterior
+    sampling (online PDGraph learning, ``repro.core.posterior``).  The
+    kernel routes posterior walks through the bit-identical jnp twin — the
+    same escape hatch arrival tracking used before the kernel grew its
+    arrival carry — so every backend draws identical bits; an in-kernel
+    per-app CDF block is the open item tracked in docs/KERNELS.md.
     """
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if po_cum is not None:
+        impl = "ref"              # posterior walks ride the bit-identical twin
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     A = graph_idx.shape[0]
@@ -159,6 +174,9 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
     ov_tables = ((ov_samples.reshape(A * U, -1),
                   ov_counts.reshape(A * U).astype(jnp.float32))
                  if with_ov else (None, None))
+    po_tables = ((po_cum.reshape(A * U, U + 1),
+                  po_scale.reshape(A * U).astype(jnp.float32))
+                 if po_cum is not None else (None, None))
 
     rep = lambda a, dt: jnp.repeat(jnp.asarray(a, dt), W)  # noqa: E731
     gi = rep(graph_idx, jnp.int32)
@@ -200,7 +218,7 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
                       executed_c),
                      step0=seg_start, n_steps=step_b - seg_start,
                      lanes_per_app=W, impl=impl, interpret=interpret,
-                     arrivals=arr)
+                     arrivals=arr, po_tables=po_tables)
         if track_arrivals:
             cur, total, done, arr = out
         else:

@@ -78,7 +78,9 @@ def walk_phase_ref(fsamples: jnp.ndarray,     # (G*U, S) float32
                    executed: Optional[jnp.ndarray],
                    *, step0: int, n_steps: int, lanes_per_app: int,
                    unroll: int = 4,
-                   arrivals: Optional[jnp.ndarray] = None):
+                   arrivals: Optional[jnp.ndarray] = None,
+                   fpo_cum: Optional[jnp.ndarray] = None,   # (A*U, U+1)
+                   fpo_scale: Optional[jnp.ndarray] = None):  # (A*U,)
     """One phase of the counter walk over flat walker state (N,).
 
     Tables are flattened row-major over (graph, unit) so one 1-D gather per
@@ -92,6 +94,12 @@ def walk_phase_ref(fsamples: jnp.ndarray,     # (G*U, S) float32
     The counter-RNG draws are indexed by (stream, lane, step) and do not
     depend on the extra carry, so totals are bit-identical either way.
     Returns ``(cur, total, done, arrivals)`` when tracking.
+
+    ``fpo_cum`` / ``fpo_scale`` (flattened per-APP posterior walk tables,
+    ``repro.core.posterior``) switch on posterior sampling: transitions draw
+    against the app's posterior-blended CDF and sampled service is rescaled
+    by the unit's posterior demand ratio.  Like the arrival carry, the RNG
+    draws don't depend on them — ``None`` keeps the frozen-prior bits.
     """
     U = fcum.shape[1] - 1                    # absorbing state == unit stride
     S = fsamples.shape[1]
@@ -100,6 +108,7 @@ def walk_phase_ref(fsamples: jnp.ndarray,     # (G*U, S) float32
     if with_ov:
         So = fov_samples.shape[1]
         fov = fov_samples.reshape(-1)
+    with_po = fpo_cum is not None
     track = arrivals is not None
     unit_ids = jnp.arange(U, dtype=jnp.int32)
 
@@ -108,9 +117,9 @@ def walk_phase_ref(fsamples: jnp.ndarray,     # (G*U, S) float32
         ctr = s.astype(jnp.uint32) * np.uint32(lanes_per_app) + lane
         r, r2 = counter_uniforms(stream, ctr)
         row = gi * U + cur
+        orow = app * U + cur if (with_ov or with_po) else None
         n_eff = fcounts[row]
         if with_ov:
-            orow = app * U + cur
             oc = fov_counts[orow]
             n_eff = jnp.where(oc > 0, oc, n_eff)
         si = jnp.floor(r * n_eff).astype(jnp.int32)
@@ -118,10 +127,13 @@ def walk_phase_ref(fsamples: jnp.ndarray,     # (G*U, S) float32
         if with_ov:
             svc = jnp.where(oc > 0,
                             fov[orow * So + jnp.minimum(si, So - 1)], svc)
+        if with_po:
+            svc = svc * fpo_scale[orow]
         if executed is not None:
             svc = jnp.where(s == 0, jnp.maximum(svc - executed, 0.0), svc)
         total = total + jnp.where(done, 0.0, svc)
-        nxt = jnp.sum(r2[:, None] > fcum[row], axis=-1).astype(jnp.int32)
+        cdf = fpo_cum[orow] if with_po else fcum[row]
+        nxt = jnp.sum(r2[:, None] > cdf, axis=-1).astype(jnp.int32)
         nxt = jnp.minimum(nxt, U)
         new_done = done | (nxt >= U)
         if track:

@@ -30,6 +30,11 @@ class Backend:
     slowdown: float = 1.0          # service stretch while degraded (>= 1)
     running: int = 0               # tasks currently placed here
     crashes: int = 0
+    # completion accounting (observation-path telemetry: the per-member
+    # denominator behind observed wall/service stretch and demand drift)
+    done_tasks: int = 0
+    service_done_s: float = 0.0
+    wall_done_s: float = 0.0
 
     @property
     def backend_id(self) -> str:
@@ -38,6 +43,19 @@ class Backend:
     @property
     def free(self) -> int:
         return self.slots - self.running if self.alive else 0
+
+    def note_completion(self, service_s: float, wall_s: float) -> None:
+        """Record one finished task's service/wall seconds on this member."""
+        self.done_tasks += 1
+        self.service_done_s += float(service_s)
+        self.wall_done_s += float(wall_s)
+
+    def observed_stretch(self) -> float:
+        """Lifetime wall/service ratio over completed tasks (1.0 when no
+        completions yet)."""
+        if self.service_done_s <= 0.0:
+            return 1.0
+        return self.wall_done_s / self.service_done_s
 
 
 class BackendPool:

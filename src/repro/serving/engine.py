@@ -56,8 +56,16 @@ class InferenceEngine:
     def __init__(self, model: Model, params: Any, *, max_slots: int = 4,
                  max_seq: int = 256, kv_blocks: int = 512,
                  block_size: int = 16, lora_capacity: int = 4,
-                 prefix_prompts: Optional[Dict[str, List[int]]] = None):
+                 prefix_prompts: Optional[Dict[str, List[int]]] = None,
+                 on_finish: Optional[Callable[[Request, float],
+                                              None]] = None):
         self.model = model
+        # completion observer: called as ``on_finish(request, service_s)``
+        # with the request's measured decode wall seconds.  Hosts that hold
+        # a HermesScheduler forward this to ``observe_unit_completion`` so
+        # real-engine completions feed the posterior demand statistics the
+        # same way simulator completions do.
+        self.on_finish = on_finish
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.lora = LoraPool(params, capacity=lora_capacity)
@@ -175,6 +183,11 @@ class InferenceEngine:
         self.alloc.release(f"req:{slot.req.req_id}")
         self.done.append(slot.req)
         self.slots[i] = None
+        if self.on_finish is not None:
+            # decode wall time: completion minus admission (submit + queue
+            # wait + prefill are the TTFT leg)
+            svc = now - slot.req.submitted - (slot.req.ttft or 0.0)
+            self.on_finish(slot.req, max(svc, 0.0))
 
     def step(self, rank_fn: Optional[Callable[[Request], float]] = None) -> bool:
         """One engine iteration; returns False when fully idle."""

@@ -43,6 +43,7 @@ from repro.core.admission import (ADMIT, DEFER, SHED_DEFER_EXPIRED,
                                   DegradeState)
 from repro.core.hermeslet import HermesLet
 from repro.core.pdgraph import PDGraph
+from repro.core.posterior import PosteriorConfig
 from repro.core.refresh_config import (RefreshConfig, _UNSET,
                                        resolve_refresh_config)
 from repro.core.scheduler import HermesScheduler
@@ -110,6 +111,11 @@ class SimConfig:
     faults: Optional[FaultConfig] = None
     admission: Optional[AdmissionConfig] = None
     degrade: Optional[DegradeConfig] = None
+    # online posterior learning (repro.core.posterior): unit completions
+    # feed conjugate branch/demand statistics back into the walk tables.
+    # None (the default) keeps every figure trace bit-identical to the
+    # frozen-prior behavior; a PosteriorConfig requires fused_delta mode.
+    posterior: Optional["PosteriorConfig"] = None
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -263,7 +269,8 @@ class ClusterSim:
             prewarm=(cfg.prewarm_mode == "hermes"),
             mc_walkers=cfg.mc_walkers, seed=cfg.seed,
             refresh=cfg.refresh,
-            warmup_table=self.warmup_table)
+            warmup_table=self.warmup_table,
+            posterior=cfg.posterior)
         self.let = HermesLet(kv_capacity=cfg.kv_capacity,
                              lora_capacity=cfg.lora_capacity,
                              docker_capacity=cfg.docker_capacity,
@@ -913,6 +920,8 @@ class ClusterSim:
         del self.running[task.kind][task]
         b = task.backend
         self._release_backend(task)
+        if b is not None:
+            b.note_completion(task.service, task.wall_s)
         if self.watchdog is not None and b is not None and task.service > 0:
             flagged = self.watchdog.observe(b.backend_id,
                                             task.wall_s / task.service)

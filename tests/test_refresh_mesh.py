@@ -16,6 +16,7 @@ import pytest
 import jax
 
 from repro.apps.suite import T_IN, T_OUT, build_knowledge_base
+from repro.core.posterior import PosteriorConfig
 from repro.core.refresh_config import RefreshConfig
 from repro.core.refresh_mesh import RefreshMesh
 from repro.core.scheduler import HermesScheduler
@@ -39,9 +40,10 @@ def kb():
 
 
 def _filled(kb, mesh_shards=None, policy="gittins", prewarm=False,
-            walker="pallas", n_apps=24):
+            walker="pallas", n_apps=24, posterior=None):
     s = HermesScheduler(kb, policy=policy, t_in=T_IN, t_out=T_OUT,
                         mc_walkers=MC, seed=11, prewarm=prewarm,
+                        posterior=posterior,
                         refresh=RefreshConfig(mode="fused_delta",
                                               walker=walker,
                                               mesh_shards=mesh_shards))
@@ -69,6 +71,20 @@ def _churn(s, kb, t):
 def _vals(ranks):
     ids = sorted(ranks)
     return ids, np.asarray([ranks[i] for i in ids])
+
+
+def _obs(s, t):
+    """Posterior-update interleaving: the explicit observation feed plus the
+    self-observing ``on_unit_finish`` path (a unit transition, so the slot
+    also goes dirty and re-walks with the new posterior row next tick)."""
+    u2 = s.apps["a002"].current_unit
+    if u2 is not None:
+        s.observe_unit_completion("a002", u2, 3.5 + 0.25 * t,
+                                  wall_s=5.0 + 0.25 * t)
+        s.observe_branch_taken("a002", u2, None)
+    u6 = s.apps["a006"].current_unit
+    if u6 is not None:
+        s.on_unit_finish("a006", u6, {"dur": 2.0 + t}, t, u6)
 
 
 @pytest.mark.parametrize("n_shards", SHARD_PARAMS)
@@ -213,6 +229,71 @@ def test_mesh_replicated_cache_is_bounded():
                                         and k[0] == "zeros")]
     assert len(idk) <= RefreshMesh._REP_CAP
     assert any(isinstance(k, tuple) and k[0] == "zeros" for k in mesh._rep)
+
+
+@pytest.mark.parametrize("n_shards", SHARD_PARAMS)
+@pytest.mark.parametrize("walker", ["pallas", "threefry"])
+def test_mesh_posterior_bit_identical_to_single_shard(kb, n_shards, walker):
+    """Online posterior learning under the mesh: with identical churn AND
+    identical observation streams, a sharded tick's ranks and the
+    device-resident posterior rows match the single-arena delta path to the
+    BIT — the posterior gather is per-row math like every other mirror."""
+    a = _filled(kb, None, walker=walker, posterior=PosteriorConfig())
+    b = _filled(kb, n_shards, walker=walker, posterior=PosteriorConfig())
+    for t in (10.0, 11.0, 12.0, 13.0):
+        ra = a.refresh_tick(t, resample=True)
+        rb = b.refresh_tick(t, resample=True)
+        ids_a, va = _vals(ra)
+        ids_b, vb = _vals(rb)
+        assert ids_a == ids_b
+        np.testing.assert_array_equal(va, vb,
+                                      err_msg=f"shards={n_shards} t={t}")
+        if t < 13.0:                      # last tick scatters the final batch
+            _churn(a, kb, t)
+            _churn(b, kb, t)
+            _obs(a, t)
+            _obs(b, t)
+    assert a._post_state.n_observations() > 0
+    assert (a._post_state.n_observations()
+            == b._post_state.n_observations())
+    qa, qb = a._qstate, b._qstate
+    for aid, sa in qa.slot.items():
+        ra_ = qa.posterior_rows(np.asarray([sa]))[0]
+        rb_ = qb.posterior_rows(np.asarray([qb.slot[aid]]))[0]
+        np.testing.assert_array_equal(ra_, rb_, err_msg=aid)
+    # the observed-and-transitioned app actually carries a non-zero row
+    # (the comparison above is not vacuously all-zeros)
+    assert qa.posterior_rows(np.asarray([qa.slot["a006"]]))[0].sum() > 0
+
+
+@pytest.mark.parametrize("n_shards", SHARD_PARAMS)
+def test_mesh_repack_remaps_posterior_rows(kb, n_shards):
+    """A shrink repack renumbers slots and remaps device rows across shard
+    blocks; the posterior rows must ride the same remap — every survivor
+    keeps its rank AND its scattered posterior row bitwise, without a
+    re-walk."""
+    s = _filled(kb, n_shards, n_apps=96, posterior=PosteriorConfig())
+    for aid in ("a090", "a091", "a092"):
+        u = s.apps[aid].current_unit
+        s.observe_unit_completion(aid, u, 7.5)
+        s.observe_branch_taken(aid, u, None)
+        s.on_requeue(aid, 9.0)            # dirty: the walk scatters the row
+    r1 = s.refresh_tick(10.0, resample=True)
+    qs = s._qstate
+    cap0, epoch0 = qs.capacity, qs.repack_epoch
+    for i in range(88):
+        s.on_app_complete(f"a{i:03d}")
+    survivors = [a.app_id for a in s.apps.values() if not a.done]
+    post_pre = {aid: qs.posterior_rows(
+        np.asarray([qs.slot[aid]]))[0].copy() for aid in survivors}
+    assert any(row.sum() > 0 for row in post_pre.values())
+    s._mesh_ranks = None
+    r2 = s.refresh_tick(11.0, resample=True)
+    assert qs.repack_epoch == epoch0 + 1 and qs.capacity < cap0
+    for aid in survivors:
+        assert r2[aid] == r1[aid], aid
+        row = qs.posterior_rows(np.asarray([qs.slot[aid]]))[0]
+        np.testing.assert_array_equal(row, post_pre[aid], err_msg=aid)
 
 
 @pytest.mark.parametrize("n_shards", SHARD_PARAMS)

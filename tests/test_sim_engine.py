@@ -254,6 +254,37 @@ def test_engines_bit_equivalent_across_midrun_repack():
     _assert_equivalent(a, b)
 
 
+def test_engines_bit_equivalent_with_posterior_on_drift_trace():
+    """Seeded drift trace with online posterior learning ON: both engines
+    drain identical micro-batches, so they fold identical observation
+    streams — completion order, stats, accumulated posterior counts, and
+    the device-resident posterior rows of every live slot all match."""
+    from repro.apps.workload import make_drift_workload
+    from repro.core.posterior import PosteriorConfig
+    insts = make_drift_workload(90.0, t_in=T_IN, t_out=T_OUT, shift_at=30.0,
+                                rate_per_s=0.4, seed=7)
+    assert any(i.app_id.startswith("drift") for i in insts)
+    sims = []
+    for eng in ("heap", "calendar"):
+        sim = ClusterSim(_kb(), SimConfig(engine=eng, mc_walkers=16, seed=2,
+                                          n_llm_slots=4,
+                                          posterior=PosteriorConfig()))
+        sims.append((sim, sim.run(list(insts))))
+    (sa, a), (sb, b) = sims
+    _assert_equivalent(a, b)
+    # same observation stream folded on both sides
+    n_obs = sa.sched._post_state.n_observations()
+    assert n_obs > 0
+    assert n_obs == sb.sched._post_state.n_observations()
+    # device-resident posterior rows agree slot-for-slot for live apps
+    qa, qb = sa.sched._qstate, sb.sched._qstate
+    assert set(qa.slot) == set(qb.slot)
+    for aid in qa.slot:
+        ra = qa.posterior_rows(np.asarray([qa.slot[aid]]))[0]
+        rb = qb.posterior_rows(np.asarray([qb.slot[aid]]))[0]
+        np.testing.assert_array_equal(ra, rb, err_msg=aid)
+
+
 # ------------------------------------------------- RefreshConfig round-trips
 
 def test_refresh_config_validation():
