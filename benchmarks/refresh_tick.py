@@ -14,11 +14,19 @@ re-rank) under:
                 walk → bucketize → rank in ONE dispatch, bit-identical
                 demand samples to composed (``RefreshConfig(mode="fused",
                 walker="threefry")``): isolates the fusion gain
-  fused_pallas  the shipping fused path: the counter-RNG ``pdgraph_walk``
+  fused_pallas  the PR-4 fused path: the counter-RNG ``pdgraph_walk``
                 kernel package with phase compaction (``walker="pallas"``,
-                the RefreshConfig default;
-                Pallas kernel on TPU, its bit-identical jnp twin on CPU):
-                fusion + RNG + compaction gains together
+                pinned ``rank_in_kernel=False`` — the legacy
+                walk -> histogram -> rank composition, kept as the A/B
+                reference; Pallas kernel on TPU, its bit-identical jnp twin
+                on CPU): fusion + RNG + compaction gains together
+  fused_rank    the shipping one-pass configuration (ISSUE 9 defaults):
+                ``pdgraph_walk_ranked`` carries each walker block from
+                transition sampling to per-app histogram rows and Gittins
+                ranks in ONE dispatch — VMEM-resident on TPU (no (A, W)
+                totals round-trip), the lossless 16-bit quantized twin with
+                the lane-gated multi-stage compaction schedule on CPU.
+                Bit-identical ranks to fused_pallas
   fused_delta   the dirty-set delta refresh over the persistent slot store
                 (``mode="fused_delta"``, the default): before each tick a realistic
                 fraction (DIRTY_FRAC) of the queue takes a unit-transition
@@ -37,6 +45,17 @@ re-rank) under:
                 directly (before jax loads), so the CPU arm exercises a
                 real 8-way mesh; bit-identical ranks to fused_delta for
                 the same placement
+  fused_delta_skewed    the sharded pipeline fed a worst-case dirty set —
+                every dirty slot lands on ONE shard (residue placement), so
+                one shard walks everything while the rest idle: the
+                measured dirty-imbalance straggler gap vs the uniform
+                fused_delta_sharded arm
+  fused_delta_balanced  the same skewed dirty set with walker-lane
+                balancing ON (``lane_balance=0.25``): past the imbalance
+                threshold the tick redistributes walker lanes round-robin
+                across shards and all-gathers the packed result rows back
+                to their owners — one collective buys back the straggler
+                gap.  Bit-identical ranks to the unbalanced tick
 
 plus the cheaper rank-only tick (demand estimates cached, re-rank only).
 
@@ -90,7 +109,10 @@ ARMS = {
     "composed": dict(refresh=RefreshConfig(mode="composed"), prewarm=False),
     "fused": dict(refresh=RefreshConfig(mode="fused", walker="threefry"),
                   prewarm=False),
-    "fused_pallas": dict(refresh=RefreshConfig(mode="fused"), prewarm=False),
+    "fused_pallas": dict(refresh=RefreshConfig(mode="fused",
+                                               rank_in_kernel=False),
+                         prewarm=False),
+    "fused_rank": dict(refresh=RefreshConfig(mode="fused"), prewarm=False),
     "fused_prewarm": dict(refresh=RefreshConfig(mode="fused"), prewarm=True),
     "fused_delta": dict(refresh=RefreshConfig(), prewarm=False),
     "fused_delta_prewarm": dict(refresh=RefreshConfig(), prewarm=True),
@@ -98,9 +120,16 @@ ARMS = {
                               prewarm=False),
     "fused_delta_sharded": dict(refresh=RefreshConfig(
         mesh_shards=MESH_SHARDS), prewarm=False),
+    "fused_delta_skewed": dict(refresh=RefreshConfig(
+        mesh_shards=MESH_SHARDS), prewarm=False),
+    "fused_delta_balanced": dict(refresh=RefreshConfig(
+        mesh_shards=MESH_SHARDS, lane_balance=0.25), prewarm=False),
 }
 DELTA_ARMS = ("fused_delta", "fused_delta_prewarm", "fused_delta_mesh1",
-              "fused_delta_sharded")
+              "fused_delta_sharded", "fused_delta_skewed",
+              "fused_delta_balanced")
+# the straggler pair feeds every dirty slot to ONE shard (residue 0)
+SKEWED_ARMS = ("fused_delta_skewed", "fused_delta_balanced")
 # per-tick fraction of the queue whose PDGraph position changes between two
 # delta ticks — ~5-10% is what open-arrival sims at 1 s buckets actually see
 DIRTY_FRAC = 0.08
@@ -117,6 +146,7 @@ ARM_MAX_APPS = {
     "fused_prewarm": 4096,
     "fused_delta_prewarm": 16384,
     "fused_pallas": 16384,
+    "fused_rank": 16384,
 }
 
 
@@ -136,15 +166,23 @@ def build_queue(knowledge, n_apps: int, arm: str,
 
 
 def make_dirty_marker(sched: HermesScheduler, knowledge, n_apps: int,
-                      seed: int):
+                      seed: int, skewed: bool = False):
     """Simulate the between-tick churn a live queue sees: a DIRTY_FRAC
     subset of applications takes a unit-(re)start event, which marks their
-    slots dirty through the real scheduler event path."""
+    slots dirty through the real scheduler event path.  ``skewed`` lands
+    every dirty slot on shard 0 (residue placement): the worst-case
+    dirty-imbalance the straggler arms measure."""
     n_dirty = max(int(DIRTY_FRAC * n_apps), 1)
     rng = np.random.default_rng(seed + 1)
 
     def mark():
-        for i in rng.choice(n_apps, size=n_dirty, replace=False):
+        if skewed:
+            pool = n_apps // MESH_SHARDS
+            picks = rng.choice(pool, size=min(n_dirty, pool),
+                               replace=False) * MESH_SHARDS
+        else:
+            picks = rng.choice(n_apps, size=n_dirty, replace=False)
+        for i in picks:
             aid = f"app{i:05d}"
             app = sched.apps[aid]
             unit = app.current_unit or knowledge[app.app_name].entry
@@ -205,11 +243,13 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
         for arm in ARMS:
             if n > ARM_MAX_APPS.get(arm, 1 << 30):
                 continue
-            if arm == "fused_delta_sharded" and MESH_SHARDS < 2:
+            if arm in ("fused_delta_sharded",) + SKEWED_ARMS \
+                    and MESH_SHARDS < 2:
                 continue   # no real mesh (jax imported first / 1 device):
-                # the arm would duplicate fused_delta_mesh1 — skip it
+                # the arms would duplicate fused_delta_mesh1 — skip them
             sched = build_queue(knowledge, n, arm, seed=seed)
-            mark = (make_dirty_marker(sched, knowledge, n, seed)
+            mark = (make_dirty_marker(sched, knowledge, n, seed,
+                                      skewed=arm in SKEWED_ARMS)
                     if arm in DELTA_ARMS else None)
             # delta ticks are tens of ms with compile-adjacent variance:
             # the min-of-N estimator (what the trend gate and the sharded
@@ -228,19 +268,35 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
                 derived += f" vs_full_fused={ticks['fused_pallas'] / t:.2f}x"
             if arm == "fused_pallas":
                 derived += f" spill/tick={sched.fused_spill / iters:.0f}"
+            if arm == "fused_rank" and ("fused_pallas", n) in mins:
+                ratio = mins[("fused_pallas", n)] / t_min
+                derived += f" vs_fused_pallas_min={ratio:.2f}x"
             if arm == "fused_delta_sharded":
                 ratio = mins[("fused_delta", n)] / t_min
                 derived += (f" shards={MESH_SHARDS}"
                             f" vs_1shard_min={ratio:.2f}x"
                             f" spill={sched.fused_spill}")
+            if arm == "fused_delta_skewed" \
+                    and ("fused_delta_sharded", n) in mins:
+                gap = t_min - mins[("fused_delta_sharded", n)]
+                derived += f" straggler_gap_min={1e3 * gap:.2f}ms"
+            if arm == "fused_delta_balanced" \
+                    and ("fused_delta_skewed", n) in mins:
+                skew = mins[("fused_delta_skewed", n)]
+                derived += f" vs_skewed_min={skew / t_min:.2f}x"
             csv.add(f"refresh_tick/full/{arm}/apps={n}", 1e6 * t, derived)
             row = {"name": f"refresh_tick/full/{arm}/apps={n}",
                    "arm": arm, "apps": n, "us_per_call": 1e6 * t,
                    "ms_per_tick": 1e3 * t, "ms_per_tick_min": 1e3 * t_min}
             if arm in DELTA_ARMS:
                 row["dirty_frac"] = DIRTY_FRAC
-            if "mesh_shards" in ARMS[arm]:
-                row["mesh_shards"] = ARMS[arm]["mesh_shards"]
+            rc = ARMS[arm]["refresh"]
+            if rc.mesh_shards is not None:
+                row["mesh_shards"] = rc.mesh_shards
+            if rc.lane_balance is not None:
+                row["lane_balance"] = rc.lane_balance
+            if arm in SKEWED_ARMS:
+                row["skewed_dirty"] = True
             records.append(row)
         per_size[n] = ticks
     # rank-only tick (demand estimates cached between ticks)
@@ -258,7 +314,14 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
     speedups = {
         f"{arm}_vs_composed@{n}": ticks["composed"] / ticks[arm]
         for n, ticks in per_size.items() if "composed" in ticks
-        for arm in ("fused", "fused_pallas") if arm in ticks}
+        for arm in ("fused", "fused_pallas", "fused_rank") if arm in ticks}
+    # the ISSUE-9 acceptance ratio: one-pass fused_rank vs the legacy
+    # composition, min-of-N estimator, per size
+    speedups.update({
+        f"fused_rank_vs_fused_pallas_min@{n}":
+            mins[("fused_pallas", n)] / mins[("fused_rank", n)]
+        for n, ticks in per_size.items()
+        if ("fused_rank", n) in mins and ("fused_pallas", n) in mins})
     speedups.update({
         f"fused_delta_vs_full@{n}": ticks["fused_pallas"] / ticks["fused_delta"]
         for n, ticks in per_size.items()
@@ -274,6 +337,21 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
             mins[("fused_delta_mesh1", n)] / mins[("fused_delta_sharded", n)]
         for n, ticks in per_size.items()
         if "fused_delta_sharded" in ticks and "fused_delta_mesh1" in ticks})
+    # dirty-imbalance straggler accounting (min-of-N): the gap is the cost
+    # of the worst-case skewed dirty set over the uniform sharded tick; the
+    # eliminated fraction is how much of that gap lane balancing buys back
+    # (the ISSUE-9 balanced-mesh acceptance wants >= 0.5)
+    straggler = {}
+    for n, ticks in per_size.items():
+        k_s, k_u, k_b = (("fused_delta_skewed", n),
+                         ("fused_delta_sharded", n),
+                         ("fused_delta_balanced", n))
+        if k_s in mins and k_u in mins:
+            gap = mins[k_s] - mins[k_u]
+            straggler[f"gap_ms_min@{n}"] = 1e3 * gap
+            if k_b in mins and gap > 0:
+                straggler[f"eliminated_frac@{n}"] = \
+                    (mins[k_s] - mins[k_b]) / gap
     payload = {
         "benchmark": "refresh_tick",
         "smoke": smoke,
@@ -286,6 +364,7 @@ def run(csv: Csv, paper_scale: bool = False, seed: int = 7,
         "platform": platform.platform(),
         "rows": records,
         "speedup": speedups,
+        "straggler": straggler,
     }
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)

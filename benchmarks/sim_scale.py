@@ -47,6 +47,7 @@ import json
 import platform
 import sys
 import time
+import warnings
 
 sys.path.insert(0, "src")  # repo-root invocation without an installed package
 
@@ -81,17 +82,21 @@ def _trace(p, seed):
 
 def _config(p, engine, seed):
     # refine=False: online demand conditioning feeds rank/prewarm views a
-    # view_free policy never reads — dead per-transition work for BOTH arms
-    return SimConfig(policy="fcfs_app", preemptive=False, refine=False,
-                     prewarm_mode="lru", engine=engine, seed=seed,
-                     n_llm_slots=p["n_llm_slots"],
-                     n_docker_slots=p["n_docker_slots"],
-                     n_dnn_slots=p["n_dnn_slots"],
-                     kv_capacity=4 * p["n_llm_slots"],
-                     lora_capacity=2 * p["n_llm_slots"],
-                     docker_capacity=p["n_docker_slots"],
-                     dnn_capacity=p["n_dnn_slots"],
-                     mc_walkers=16)
+    # view_free policy never reads — dead per-transition work for BOTH arms.
+    # The heap arm is the benchmark's intended deprecated-engine baseline,
+    # so its construction warning is suppressed here.
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return SimConfig(policy="fcfs_app", preemptive=False, refine=False,
+                         prewarm_mode="lru", engine=engine, seed=seed,
+                         n_llm_slots=p["n_llm_slots"],
+                         n_docker_slots=p["n_docker_slots"],
+                         n_dnn_slots=p["n_dnn_slots"],
+                         kv_capacity=4 * p["n_llm_slots"],
+                         lora_capacity=2 * p["n_llm_slots"],
+                         docker_capacity=p["n_docker_slots"],
+                         dnn_capacity=p["n_dnn_slots"],
+                         mc_walkers=16)
 
 
 def _run_arm(knowledge, insts, p, engine, seed, max_events=None):

@@ -22,7 +22,12 @@ docs/BENCHMARKS.md):
 * ``--field``/``--direction`` generalize the gate beyond latency: the
   overload benchmark gates ``--field goodput_per_s --direction max``
   (larger is better — regression = shrinkage, the envelope folds as a
-  per-row MIN, and ``--min-ms 0`` keeps sub-1.0 goodput rows in play).
+  per-row MIN, and ``--min-ms 0`` keeps sub-1.0 goodput rows in play);
+* ``--require ARM`` (repeatable) closes the new-arm blind spot of
+  name-matching: the fresh record must contain at least one row whose
+  ``arm`` field equals each required name, with the gated field present —
+  an arm that silently stops being measured (skipped, renamed, crashed)
+  fails the gate even though no shared row regressed.
 
 Usage:
   python scripts/bench_trend.py BENCH_refresh_tick.json \
@@ -77,6 +82,10 @@ def main(argv=None) -> int:
                          "growth, baseline folds as an upper envelope); "
                          "'max': larger is better (goodput; regression = "
                          "shrinkage, baseline folds as a lower envelope)")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="ARM",
+                    help="fail unless the fresh record has a row with this "
+                         "'arm' field carrying the gated field (repeatable)")
     ap.add_argument("--force", action="store_true",
                     help="fail even across differing platform strings")
     ap.add_argument("--update", action="store_true",
@@ -142,6 +151,15 @@ def main(argv=None) -> int:
 
     fresh_payload, fresh = load_rows(args.fresh, args.field)
     base_payload, base = load_rows(args.baseline, args.field)
+
+    if args.require:
+        have = {r.get("arm") for r in fresh_payload["rows"]
+                if row_value(r, args.field) is not None}
+        missing = [a for a in args.require if a not in have]
+        if missing:
+            print(f"bench_trend: FAIL — required arm(s) missing from "
+                  f"{args.fresh}: {missing} (measured: {sorted(have)})")
+            return 1
 
     cross = fresh_payload.get("platform") != base_payload.get("platform")
     shared = sorted(set(fresh) & set(base))

@@ -103,9 +103,20 @@ def to_histogram_rows_jnp(total: jnp.ndarray, n_buckets: int = N_BUCKETS
     idx = ((total - lo[:, None]) * norm[:, None]).astype(jnp.int32)
     idx = jnp.clip(idx, 0, n_buckets - 1)
     onehot = (idx[:, :, None] == jnp.arange(n_buckets)[None, None, :])
-    probs = onehot.sum(axis=1).astype(jnp.float32) / max(W, 1)
-    frac = jnp.arange(1, n_buckets + 1, dtype=jnp.float32) / n_buckets
-    edges = lo[:, None] + (hi - lo)[:, None] * frac[None, :]
+    # explicit reciprocal-multiply, NOT division by a constant: compiled
+    # contexts (the Pallas kernel epilogue included) rewrite div-by-constant
+    # to mul-by-reciprocal, so only the mul form has the same bits everywhere
+    probs = onehot.sum(axis=1).astype(jnp.float32) * np.float32(
+        1.0 / max(W, 1))
+    frac = jnp.arange(1, n_buckets + 1, dtype=jnp.float32) * np.float32(
+        1.0 / n_buckets)
+    # the max consumes the product so the following add cannot FMA-contract
+    # it — contraction choices differ per compiled program and edge bits
+    # must not depend on which program traced this twin.  Value-level
+    # identity: span > 0 after the guard and frac > 0, so the product is
+    # already non-negative (and the compiler cannot prove it).
+    span_frac = jnp.maximum((hi - lo)[:, None] * frac[None, :], 0.0)
+    edges = lo[:, None] + span_frac
     # pin the last edge to hi exactly (float32 lo + (hi-lo) can round off by
     # an ulp; np.linspace pins the endpoint, and `exhausted` compares to it)
     edges = edges.at[:, -1].set(hi)
@@ -148,6 +159,84 @@ def gittins_rank_core(probs: jnp.ndarray, edges: jnp.ndarray,
     # treat it as a long job: rank grows with attained instead of collapsing
     # into the last bucket (which would hand runaway jobs top priority)
     return jnp.where(exhausted, attained, ranks)
+
+
+def hist_rows_loop(total: jnp.ndarray, n_buckets: int = N_BUCKETS
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``to_histogram_rows_jnp`` in 2-D-only form (kernel-traceable).
+
+    Bit-identical twin of :func:`to_histogram_rows_jnp` that replaces the
+    ``(A, W, n_buckets)`` one-hot intermediate with a static per-bucket
+    loop, so the Pallas fused-rank epilogue can trace it over a
+    ``(block_apps, W)`` VMEM tile (Mosaic has no 3-D one-hot).  Each
+    bucket's count is the same integer sum over the same walker axis, so
+    the float products cannot drift; ``tests/test_fused_rank.py`` pins the
+    twins bitwise."""
+    W = total.shape[1]
+    lo = total.min(axis=1, keepdims=True)                        # (A, 1)
+    hi = total.max(axis=1, keepdims=True)
+    hi = jnp.where(hi <= lo, lo + jnp.maximum(jnp.abs(lo) * 1e-3, 1e-6), hi)
+    norm = n_buckets / (hi - lo)
+    idx = ((total - lo) * norm).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, n_buckets - 1)
+    cnt = jnp.concatenate(
+        [(idx == b).sum(axis=1, keepdims=True) for b in range(n_buckets)],
+        axis=1)
+    # reciprocal-multiply like the oracle (div-by-constant is rewritten
+    # inconsistently across compilation contexts); iota, not arange (arange
+    # would be a captured constant inside a Pallas kernel body) — iota + 1
+    # hits the same exact small-integer float32 values
+    probs = cnt.astype(jnp.float32) * np.float32(1.0 / max(W, 1))
+    frac = (jax.lax.broadcasted_iota(jnp.float32, (1, n_buckets), 1)
+            + 1.0) * np.float32(1.0 / n_buckets)
+    # max-guard mirrors to_histogram_rows_jnp: the max consumes the product
+    # so the add cannot FMA-contract it (value-level identity, see there)
+    span_frac = jnp.maximum((hi - lo) * frac, 0.0)
+    edges = lo + span_frac
+    last = jax.lax.broadcasted_iota(jnp.int32, edges.shape, 1) \
+        == n_buckets - 1
+    edges = jnp.where(last, hi, edges)
+    return probs, edges
+
+
+def rank_rows_loop(probs: jnp.ndarray, edges: jnp.ndarray,
+                   attained_col: jnp.ndarray, n_buckets: int = N_BUCKETS
+                   ) -> jnp.ndarray:
+    """``gittins_rank_core`` in 2-D-only form (kernel-traceable).
+
+    Bit-identical twin of :func:`gittins_rank_core` that unrolls the
+    candidate-Δ axis into a static loop: each candidate's
+    numerator/denominator is the same float32 sum over the same bucket
+    axis as one ``(J, n, n)`` slice of the core, and the final ``min`` is
+    order-independent, so the two can never diverge.  The Pallas
+    fused-rank epilogue traces this over a ``(block_apps, n_buckets)``
+    tile; ``tests/test_fused_rank.py`` pins the twins bitwise.
+
+    ``attained_col`` is ``(J, 1)`` (a column, not the core's ``(J,)`` —
+    every intermediate stays 2-D); returns ``(J, 1)`` ranks."""
+    left = jnp.concatenate(
+        [edges[:, :1] * 0 + (2 * edges[:, :1] - edges[:, 1:2]),
+         edges[:, :-1]], axis=1)
+    mids = 0.5 * (left + edges)                                  # (J, n)
+    max_edge = edges[:, -1:]
+    exhausted = attained_col >= max_edge
+    a = jnp.minimum(attained_col, max_edge * (1 - 1e-6))         # (J, 1)
+    alive = mids > a
+    p_tail = jnp.where(alive, probs, 0.0)
+    tail_mass = jnp.maximum(p_tail.sum(axis=1, keepdims=True), 1e-12)
+    p_cond = p_tail / tail_mass
+    rem = jnp.where(alive, mids - a, 0.0)                        # (J, n)
+    ranks = None
+    for j in range(n_buckets):
+        delta = rem[:, j:j + 1]                                  # (J, 1)
+        e_min = jnp.sum(jnp.minimum(rem, delta) * p_cond,
+                        axis=1, keepdims=True)
+        p_le = jnp.sum(jnp.where(rem <= delta, p_cond, 0.0),
+                       axis=1, keepdims=True)
+        ratio = jnp.where((p_le > 1e-12) & alive[:, j:j + 1],
+                          e_min / jnp.maximum(p_le, 1e-12), _INF)
+        ranks = ratio if ranks is None else jnp.minimum(ranks, ratio)
+    return jnp.where(exhausted, attained_col, ranks)
 
 
 gittins_rank_hist = jax.jit(gittins_rank_core)

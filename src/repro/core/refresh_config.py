@@ -59,12 +59,29 @@ class RefreshConfig:
         §3.4 refinement: condition prewarm trigger times on each app's
         observed wall/service stretch EWMA instead of assuming continuous
         execution.  Off by default (the paper model).
+    rank_in_kernel
+        One-pass VMEM-resident refresh: the walk, the demand-histogram
+        reduction, and the Gittins rank run as ONE dispatch
+        (``pdgraph_walk_ranked``) instead of walk → ``(A, W)`` totals
+        round-trip → histogram → rank.  ``None`` (default) resolves to
+        ``True`` when ``walker="pallas"`` and ``False`` for ``threefry``
+        (the threefry walker has no fused program — asking for both is an
+        error).  Bit-identical to the composed pipeline either way.
+    lane_balance
+        Mesh walker-lane balancing threshold (requires ``mesh_shards``):
+        when ``max(per-shard dirty count) > (1 + lane_balance) * mean``,
+        the tick redistributes walker lanes round-robin across shards and
+        all-gathers the packed result rows back to their owners, trading
+        one collective for the straggler gap.  ``0.0`` balances every
+        tick; ``None`` (default) keeps shard-local walks.
     """
     mode: str = "fused_delta"
     walker: str = "pallas"
     mesh_shards: Optional[int] = None
     delta_full_threshold: float = 0.5
     queue_delay_correction: bool = False
+    rank_in_kernel: Optional[bool] = None
+    lane_balance: Optional[float] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -83,6 +100,20 @@ class RefreshConfig:
             if n < 1 or n & (n - 1):
                 raise ValueError("mesh_shards must be a power of two, "
                                  f"got {n}")
+        if self.rank_in_kernel is None:
+            object.__setattr__(self, "rank_in_kernel",
+                               self.walker == "pallas")
+        elif self.rank_in_kernel and self.walker != "pallas":
+            raise ValueError(
+                "rank_in_kernel=True requires walker='pallas' (the "
+                f"{self.walker!r} walker has no fused one-pass program)")
+        if self.lane_balance is not None:
+            if self.mesh_shards is None:
+                raise ValueError("lane_balance requires mesh_shards "
+                                 "(it balances walker lanes across shards)")
+            if self.lane_balance < 0.0:
+                raise ValueError("lane_balance must be >= 0, "
+                                 f"got {self.lane_balance}")
         if not 0.0 <= self.delta_full_threshold <= 1.0:
             raise ValueError("delta_full_threshold must be in [0, 1], "
                              f"got {self.delta_full_threshold}")

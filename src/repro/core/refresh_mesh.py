@@ -16,11 +16,17 @@ shard, entirely locally,
    histograms at the current attained service, and
 4. (prewarming) re-conditions ITS trigger rows on elapsed service.
 
-No collective ever runs: the only cross-shard "communication" is the host
-gather of the small per-tick results — the stale-row ranks, the walked
-rows' triage scalars, and the trigger rows the merged ``PrewarmPlan`` is
-built from.  Sample matrices, arrival tensors and histogram arenas stay
-sharded on their devices for their whole life.
+No collective runs on the default tick: the only cross-shard
+"communication" is the host gather of the small per-tick results — the
+stale-row ranks, the walked rows' triage scalars, and the trigger rows the
+merged ``PrewarmPlan`` is built from.  Sample matrices, arrival tensors
+and histogram arenas stay sharded on their devices for their whole life.
+The one deliberate exception is the **lane-balanced** tick
+(``lane_balance``): when per-shard dirty counts diverge past the
+threshold, walked rows are assigned round-robin and each shard's packed
+result rows ride ONE ``all_gather`` back to their owner shards — a few
+KB of histogram rows traded against the straggler gap of a skewed dirty
+set.
 
 Because every stage is per-row math and the RNG is position-independent,
 the mesh tick is **bit-identical** to the single-shard delta path for the
@@ -51,8 +57,9 @@ from repro.core.gittins import N_BUCKETS, gittins_rank_core, \
     to_histogram_rows_jnp
 from repro.core.pdgraph import PackedKB
 from repro.core.posterior import posterior_tables
-from repro.core.refresh_pipeline import (_arrival_hists, _triage_stats,
-                                         _triggers_from_hists, _walk_total)
+from repro.core.refresh_pipeline import (_arrival_hists, _ranked_args,
+                                         _triage_stats, _triggers_from_hists,
+                                         _walk_ranked, _walk_total)
 from repro.kernels.pdgraph_walk.ops import pad_rows
 
 
@@ -174,6 +181,7 @@ class MeshTick:
     spill: int
     walked: np.ndarray         # slot ids re-walked this tick
     ranked: np.ndarray         # slot ids re-ranked this tick
+    balanced: bool = False     # walker lanes were redistributed this tick
 
 
 def _mesh_schedule(compact_after: int, compact_shrink: int,
@@ -209,7 +217,8 @@ def _mesh_schedule(compact_after: int, compact_shrink: int,
 # travel as raw float32 bit patterns — transfers and bitcasts are bit-exact)
 _COL_GI, _COL_START, _COL_KID, _COL_RID, _COL_SCAT = range(5)
 _COL_EXEC, _COL_ATT, _COL_STRETCH, _COL_RANK_ROW, _COL_RANK_ATT = range(5, 10)
-_N_COLS = 10
+_COL_OWNER = 10        # owner shard (slot % n) — read by balanced ticks only
+_N_COLS = 11
 
 
 @lru_cache(maxsize=None)
@@ -218,7 +227,8 @@ def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
                with_overrides: bool, compact_after: int, compact_shrink: int,
                with_prewarm: bool, with_retrigger: bool, with_triage: bool,
                with_posterior: bool = False, branch_strength: float = 8.0,
-               demand_strength: float = 8.0):
+               demand_strength: float = 8.0, rank_in_kernel: bool = False,
+               balanced: bool = False):
     """Build (and cache per mesh + static config) the jitted shard_map tick.
 
     ALL per-tick row state travels in ONE packed ``(n, P, _N_COLS + U)``
@@ -226,9 +236,19 @@ def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
     shards every separate argument costs one buffer put per device per
     tick, so an unpacked argument list — not the walk — would dominate
     host-side dispatch time.  Slow-changing constants (KB tables, prewarm
-    tables, base key) arrive pre-replicated through
+    tables, base key, quant tables) arrive pre-replicated through
     :meth:`RefreshMesh.replicated`; the arena arrays are committed to their
-    row sharding and enter with zero per-tick transfer."""
+    row sharding and enter with zero per-tick transfer.
+
+    ``rank_in_kernel`` swaps the walk + bucketize section for ONE
+    :func:`_walk_ranked` dispatch per shard (the VMEM-resident program on
+    the kernel path; the quantized multi-stage twin on CPU) — bit-identical
+    rows.  ``balanced`` is the walker-lane-balancing program: the host
+    assigned walked rows round-robin (so per-shard walk cost is even
+    regardless of residue skew), and each shard's packed result rows ride
+    ONE ``all_gather`` back so every owner scatters exactly its own rows —
+    the single collective the module docstring's "no collective" contract
+    carves out, traded against the dirty-imbalance straggler gap."""
 
     def shard_fn(samples, counts, cum_trans,            # replicated KB
                  carrier,               # (1, P, _N_COLS+U) packed row state
@@ -237,21 +257,29 @@ def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
                  a_hist, a_lo, a_span, a_reach,         # (cap_s, ...)
                  post,                                  # (cap_s, U, U+3)
                  gi_rows, delta_rows, stretch_rows,     # (cap_s,)
-                 base_key, uc, wt, prewarm_k):          # replicated
+                 base_key, uc, wt, prewarm_k,           # replicated
+                 qsv, qic):             # replicated quant tables | dummies
         # NOTE two block conventions: stacked (n, ...) per-tick batches keep
         # a leading length-1 mesh axis ([0] below); arena arrays enter in
         # their native (cap, …) shard-major layout, so their blocks are the
         # shard's own rows directly (no host reshape, no cross-device copy).
+        # Walk rows and rank rows pad INDEPENDENTLY: the carrier is as wide
+        # as the larger set, and the walk section reads only its own
+        # ``Dw``-row prefix (= the override table's row count) — a balanced
+        # tick's whole point is that Dw shrinks to ceil(|walked| / n) even
+        # when one shard owns (and must rank) every dirty row.
         c = carrier[0]
-        as_i32 = lambda col: jax.lax.bitcast_convert_type(   # noqa: E731
-            c[:, col], jnp.int32)
-        gi, start, kid, rid, scat = (as_i32(i) for i in range(5))
-        executed = c[:, _COL_EXEC]
-        attained = c[:, _COL_ATT]
-        stretch = c[:, _COL_STRETCH]
-        rank_rows = as_i32(_COL_RANK_ROW)[None]
+        Dw = ovs.shape[1]                     # walk-row pad (<= carrier)
+        cw = c[:Dw]
+        as_i32 = lambda a, col: jax.lax.bitcast_convert_type(  # noqa: E731
+            a[:, col], jnp.int32)
+        gi, start, kid, rid, scat = (as_i32(cw, i) for i in range(5))
+        executed = cw[:, _COL_EXEC]
+        attained = cw[:, _COL_ATT]
+        stretch = cw[:, _COL_STRETCH]
+        rank_rows = as_i32(c, _COL_RANK_ROW)[None]
         rank_att = c[:, _COL_RANK_ATT][None]
-        ovc = jax.lax.bitcast_convert_type(c[:, _N_COLS:], jnp.int32)[None]
+        ovc = jax.lax.bitcast_convert_type(cw[:, _N_COLS:], jnp.int32)[None]
         cap_s = d_probs.shape[0]
         valid = scat < cap_s                  # padding rows carry scat=cap_s
         po_cum = po_scale = None
@@ -268,19 +296,84 @@ def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
                 rows_p, cum_trans[gi], prior_mean[gi],
                 branch_strength=branch_strength,
                 demand_strength=demand_strength)
-        total, arr, spill = _walk_total(
-            samples, counts, cum_trans, gi, start, executed,
-            attained, kid, rid, base_key, np.uint32(seed), ovs[0], ovc[0],
-            valid, n_walkers=n_walkers, max_steps=max_steps,
-            walker=walker, impl=impl, with_overrides=with_overrides,
-            compact_after=compact_after, compact_shrink=compact_shrink,
-            with_prewarm=with_prewarm,
-            compact_schedule=_mesh_schedule(compact_after, compact_shrink,
-                                            c.shape[0] * n_walkers),
-            po_cum=po_cum, po_scale=po_scale)
-        probs, edges = to_histogram_rows_jnp(total, n_buckets)
-        dp = d_probs.at[scat].set(probs, mode="drop")
-        de = d_edges.at[scat].set(edges, mode="drop")
+        if rank_in_kernel:
+            # one-pass walk → histogram rows (→ arrival stats); the per-row
+            # in-kernel ranks are unused here — the mesh ranks the stale
+            # set from the arena below — but cost a fraction of the walk
+            res = _walk_ranked(
+                samples, counts, cum_trans, gi, start, executed, attained,
+                kid, rid, np.uint32(seed), ovs[0], ovc[0], valid, qsv, qic,
+                n_walkers=n_walkers, max_steps=max_steps,
+                n_buckets=n_buckets, impl=impl,
+                with_overrides=with_overrides, compact_after=compact_after,
+                compact_shrink=compact_shrink, with_prewarm=with_prewarm,
+                with_triage=with_triage, po_cum=po_cum, po_scale=po_scale)
+            probs, edges, spill = res["probs"], res["edges"], res["spill"]
+            total = res["total"]               # None unless with_triage
+        else:
+            total, arr, spill = _walk_total(
+                samples, counts, cum_trans, gi, start, executed,
+                attained, kid, rid, base_key, np.uint32(seed), ovs[0],
+                ovc[0], valid, n_walkers=n_walkers, max_steps=max_steps,
+                walker=walker, impl=impl, with_overrides=with_overrides,
+                compact_after=compact_after, compact_shrink=compact_shrink,
+                with_prewarm=with_prewarm,
+                compact_schedule=_mesh_schedule(compact_after,
+                                                compact_shrink,
+                                                Dw * n_walkers),
+                po_cum=po_cum, po_scale=po_scale)
+            probs, edges = to_histogram_rows_jnp(total, n_buckets)
+        hist = lo = span = n_reach = None
+        if with_prewarm:
+            if rank_in_kernel:
+                hist, lo, span, n_reach = (res["a_hist"], res["a_lo"],
+                                           res["a_span"], res["a_reach"])
+            else:
+                hist, lo, span, n_reach = _arrival_hists(arr, n_buckets)
+        ah, al, asp, ar = a_hist, a_lo, a_span, a_reach
+        if balanced:
+            # walker lanes were host-assigned round-robin, so this shard
+            # walked rows it does not own: pack every result row with its
+            # owner + owner-local index (raw bit-pattern columns), ONE
+            # all-gather, then scatter exactly the rows owned here (every
+            # other row — and padding, whose index is already cap_s — maps
+            # out of bounds and drops)
+            Dp = probs.shape[0]
+            meta = jnp.stack([cw[:, _COL_OWNER], cw[:, _COL_SCAT]], axis=1)
+            parts = [probs, edges, meta]
+            if with_prewarm:
+                parts += [hist.reshape(Dp, -1), lo, span,
+                          n_reach]
+            packed_rows = jnp.concatenate(parts, axis=1)
+            g = jax.lax.all_gather(packed_rows, "shard")
+            g = g.reshape(-1, packed_rows.shape[1])       # (n*Dp, K)
+            nb = n_buckets
+            owner = jax.lax.bitcast_convert_type(g[:, 2 * nb], jnp.int32)
+            gscat = jax.lax.bitcast_convert_type(g[:, 2 * nb + 1],
+                                                 jnp.int32)
+            mine = owner == jax.lax.axis_index("shard")
+            idx = jnp.where(mine, gscat, cap_s)
+            dp = d_probs.at[idx].set(g[:, :nb], mode="drop")
+            de = d_edges.at[idx].set(g[:, nb:2 * nb], mode="drop")
+            if with_prewarm:
+                U = lo.shape[1]
+                off = 2 * nb + 2
+                ah = ah.at[idx].set(
+                    g[:, off:off + U * nb].reshape(-1, U, nb), mode="drop")
+                off += U * nb
+                al = al.at[idx].set(g[:, off:off + U], mode="drop")
+                asp = asp.at[idx].set(g[:, off + U:off + 2 * U],
+                                      mode="drop")
+                ar = ar.at[idx].set(g[:, off + 2 * U:off + 3 * U],
+                                    mode="drop")
+        else:
+            dp = d_probs.at[scat].set(probs, mode="drop")
+            de = d_edges.at[scat].set(edges, mode="drop")
+            if with_prewarm:
+                ah = ah.at[scat].set(hist, mode="drop")
+                al = al.at[scat].set(lo, mode="drop")
+                asp = asp.at[scat].set(span, mode="drop")
+                ar = ar.at[scat].set(n_reach, mode="drop")
         # rank ONLY the stale rows, gathered from the shard's own arena
         # block (row-wise math: bit-identical to ranking them in place)
         rr = jnp.minimum(rank_rows[0], cap_s - 1)
@@ -289,14 +382,8 @@ def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
             sup, opt, mean = _triage_stats(total)
         else:
             sup = opt = mean = jnp.zeros((1,), jnp.float32)
-        ah, al, asp, ar = a_hist, a_lo, a_span, a_reach
         trigger = reach = jnp.zeros((1, 1), jnp.float32)
         if with_prewarm:
-            hist, lo, span, n_reach = _arrival_hists(arr, n_buckets)
-            ah = ah.at[scat].set(hist, mode="drop")
-            al = al.at[scat].set(lo, mode="drop")
-            asp = asp.at[scat].set(span, mode="drop")
-            ar = ar.at[scat].set(n_reach, mode="drop")
             if with_retrigger:
                 # (cap_s, B): arena-shaped, like dp/ah — no leading axis
                 trigger, reach = _triggers_from_hists(
@@ -322,7 +409,8 @@ def _mesh_exec(mesh: Mesh, seed: int, n_walkers: int, max_steps: int,
                 rows, rows, rows, rows,            # arrival arena
                 rows,                              # posterior arena
                 rows, rows, rows,                  # gi/delta/stretch rows
-                rep, rep, rep, rep)                # base_key/uc/wt/K
+                rep, rep, rep, rep,                # base_key/uc/wt/K
+                rep, rep)                          # quant tables
     out_specs = (rows,) * 13
     return jax.jit(shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_rep=False))
@@ -345,6 +433,27 @@ def _partition(slots: np.ndarray, n: int, pad: int
     return mat, by_shard, counts
 
 
+def _partition_rr(slots: np.ndarray, n: int, pad: int
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Round-robin (lane-balanced) partition: shard ``s`` WALKS
+    ``slots[s::n]`` — per-shard counts differ by at most one whatever the
+    residue skew, so no shard straggles.  Same return contract as
+    :func:`_partition`; the walking shard is generally not the owner, so
+    the balanced tick routes result rows back through the in-dispatch
+    all-gather.  RNG streams are keyed by each app's own (key id, refresh
+    id), never by placement — the redistributed walk draws identical
+    bits."""
+    mat = np.full((n, pad), -1, np.int64)
+    counts = np.zeros(n, np.int64)
+    for s in range(n):
+        rows = slots[s::n]
+        mat[s, :len(rows)] = rows
+        counts[s] = len(rows)
+    by_shard = (np.concatenate([slots[s::n] for s in range(n)])
+                if len(slots) else slots)
+    return mat, by_shard, counts
+
+
 def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
                        *, mesh: RefreshMesh, walked: np.ndarray,
                        ranked: Optional[np.ndarray] = None,
@@ -355,7 +464,9 @@ def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
                        prewarm_table=None, prewarm_k: float = 0.5,
                        retrigger: bool = True, host_work=None,
                        with_triage: bool = False,
-                       posterior=None) -> MeshTick:
+                       posterior=None,
+                       rank_in_kernel: Optional[bool] = None,
+                       lane_balance: Optional[float] = None) -> MeshTick:
     """One mesh tick: walk ``walked`` (shard-partitioned), scatter into the
     sharded arena, re-rank ``ranked`` (default: the walked set), gather the
     small results.  Bit-identical per slot to ``refresh_ranks_delta`` over
@@ -367,7 +478,15 @@ def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
     ``posterior`` (a :class:`repro.core.posterior.PosteriorConfig`) blends
     each walked slot's device posterior row (the shard's own arena block)
     into its walk tables — the delta path's blend verbatim, so sharded
-    posterior ticks stay bit-identical to 1-shard ones."""
+    posterior ticks stay bit-identical to 1-shard ones.
+
+    ``rank_in_kernel`` (default: on for ``walker="pallas"``) runs each
+    shard's walk + bucketize as ONE ``pdgraph_walk_ranked`` dispatch.
+    ``lane_balance`` enables walker-lane balancing: when the per-shard
+    dirty counts diverge past ``max > (1 + lane_balance) * mean``, walked
+    rows are assigned round-robin and result rows ride one in-dispatch
+    all-gather back to their owner shards (disabled while ``posterior`` is
+    active — the posterior arena rows are owner-local)."""
     n = mesh.n_shards
     if qs.capacity % n or qs.n_shards != n:
         raise ValueError(f"store is laid out for {qs.n_shards} shards, "
@@ -386,12 +505,28 @@ def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
 
     wcounts = np.bincount(walked % n, minlength=n)
     rcounts = np.bincount(ranked % n, minlength=n)
-    # one padded width for walked AND ranked rows: both ride the same
-    # packed carrier, one buffer put per shard per tick
-    Pp = pad_rows(max(int(wcounts.max()) if len(walked) else 1,
-                      int(rcounts.max()) if len(ranked) else 1))
-    wmat, w_by_shard, _ = _partition(walked, n, Pp)
-    rmat, r_by_shard, _ = _partition(ranked, n, Pp)
+    # walker-lane balancing: past the divergence threshold, walked rows are
+    # assigned round-robin instead of by residue (posterior rows live in
+    # the owner's arena block, so posterior ticks stay shard-local)
+    balanced = (lane_balance is not None and n > 1 and not with_po
+                and len(walked) > 0
+                and wcounts.max() > (1.0 + lane_balance)
+                * max(len(walked) / n, 1.0))
+    wmax = (int(np.ceil(len(walked) / n)) if balanced
+            else int(wcounts.max()) if len(walked) else 1)
+    # walk rows and rank rows pad INDEPENDENTLY inside one carrier (still a
+    # single buffer put per shard per tick): the walk section of the
+    # dispatch reads only the first Pw rows, so a balanced tick walks
+    # pad(|walked| / n) lanes per shard even though the skewed rows' OWNER
+    # shard still ranks all of them from its arena — one shared width would
+    # hand every shard's walk the rank set's padding and erase the whole
+    # lane-balancing gain
+    Pw = pad_rows(max(wmax, 1))
+    Pr = pad_rows(max(int(rcounts.max()) if len(ranked) else 1, 1))
+    Pp = max(Pw, Pr)                     # carrier width
+    wmat, w_by_shard, _ = (_partition_rr if balanced else _partition)(
+        walked, n, Pw)
+    rmat, r_by_shard, _ = _partition(ranked, n, Pr)
 
     wvalid = wmat >= 0
     widx = np.where(wvalid, wmat, 0)
@@ -406,17 +541,23 @@ def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
     U = qs.n_units
     carrier = np.empty((n, Pp, _N_COLS + U), np.float32)
     ci = carrier.view(np.int32)
-    ci[:, :, _COL_GI] = qs.graph_idx[widx]
-    ci[:, :, _COL_START] = qs.start[widx]
-    ci[:, :, _COL_KID] = qs.key_id[widx]
-    ci[:, :, _COL_RID] = qs.refresh_id[widx]
-    ci[:, :, _COL_SCAT] = scat
-    carrier[:, :, _COL_EXEC] = qs.executed[widx]
-    carrier[:, :, _COL_ATT] = qs.attained[widx]
-    carrier[:, :, _COL_STRETCH] = qs.stretch[widx]
-    ci[:, :, _COL_RANK_ROW] = rank_rows
-    carrier[:, :, _COL_RANK_ATT] = rank_att
-    ci[:, :, _N_COLS:] = qs.ov_counts[widx]
+    # walk columns live in the first Pw rows (all the dispatch reads);
+    # rank columns in the first Pr.  Pad regions of the rank columns get
+    # clamp-safe defaults — their ranks are computed and discarded
+    ci[:, :Pw, _COL_GI] = qs.graph_idx[widx]
+    ci[:, :Pw, _COL_START] = qs.start[widx]
+    ci[:, :Pw, _COL_KID] = qs.key_id[widx]
+    ci[:, :Pw, _COL_RID] = qs.refresh_id[widx]
+    ci[:, :Pw, _COL_SCAT] = scat
+    carrier[:, :Pw, _COL_EXEC] = qs.executed[widx]
+    carrier[:, :Pw, _COL_ATT] = qs.attained[widx]
+    carrier[:, :Pw, _COL_STRETCH] = qs.stretch[widx]
+    ci[:, :, _COL_RANK_ROW] = cap_s
+    ci[:, :Pr, _COL_RANK_ROW] = rank_rows
+    carrier[:, :, _COL_RANK_ATT] = 0.0
+    carrier[:, :Pr, _COL_RANK_ATT] = rank_att
+    ci[:, :Pw, _COL_OWNER] = np.where(wvalid, wmat % n, 0)
+    ci[:, :Pw, _N_COLS:] = qs.ov_counts[widx]
 
     with_ov = qs.override_apps > 0
     ovs = qs.ov_samples[widx]
@@ -439,12 +580,15 @@ def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
     dummy = mesh.zeros_rows("dummy2d", 1, jnp.float32)
     dummy3 = mesh.zeros_rows("dummy3d", (1, 1), jnp.float32)
 
+    rank_in_kernel, qsv, qic = _ranked_args(packed, walker, impl,
+                                            rank_in_kernel)
     fn = _mesh_exec(mesh.mesh, int(seed) & 0xFFFFFFFF, n_walkers, max_steps,
                     n_buckets, walker, impl, with_ov, compact_after,
                     compact_shrink, with_pw, retrigger and with_pw,
                     with_triage, with_po,
                     posterior.branch_strength if with_po else 8.0,
-                    posterior.demand_strength if with_po else 8.0)
+                    posterior.demand_strength if with_po else 8.0,
+                    rank_in_kernel, balanced)
     (dp, de, ranks, spill, sup, opt, mean, ah, al, asp, ar, trigger,
      reach) = fn(
         mesh.replicated(packed.samples), mesh.replicated(packed.counts),
@@ -458,7 +602,8 @@ def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
         qs.post if with_po else dummy3,
         gi_rows, delta_rows, stretch_rows,
         mesh.replicated(base_key), uc, wt,
-        np.float32(prewarm_k))
+        np.float32(prewarm_k),
+        mesh.replicated(qsv), mesh.replicated(qic))
     if host_work is not None:
         host_work()                # overlaps the asynchronous dispatch
 
@@ -469,7 +614,8 @@ def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
         qs.a_att[walked] = qs.attained[walked]
 
     # ranks: row-major valid entries align with the shard-major slot order
-    rank_vals = np.asarray(ranks)[rvalid]
+    # (the dispatch ranks the full carrier width; only the Pr prefix is real)
+    rank_vals = np.asarray(ranks)[:, :Pr][rvalid]
     qs.rank[r_by_shard] = rank_vals
     if with_triage and len(walked):
         qs.sup[w_by_shard] = np.asarray(sup)[wvalid]
@@ -488,4 +634,4 @@ def refresh_ranks_mesh(packed: PackedKB, qs: QueueState, base_key, seed,
             qs.reach[w_by_shard] = np.asarray(reach).reshape(-1, B)[
                 wvalid.ravel()]
     return MeshTick(qs.rank[ranked], int(np.asarray(spill).sum()),
-                    walked, ranked)
+                    walked, ranked, balanced)

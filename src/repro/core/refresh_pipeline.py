@@ -41,7 +41,7 @@ to the walk-time trigger.  The multi-device mesh front-end lives in
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional, Tuple
 
 import numpy as np
@@ -55,7 +55,10 @@ from repro.core.gittins import (N_BUCKETS, gittins_rank_core,
 from repro.core.pdgraph import ARRIVAL_NEVER, PackedKB, _mc_walk_batch
 from repro.core.policies import HOPELESS_Q, SUP_Q
 from repro.core.posterior import posterior_tables
-from repro.kernels.pdgraph_walk.ops import pdgraph_walk, walker_streams
+from repro.kernels.pdgraph_walk.ops import (pdgraph_walk,
+                                            pdgraph_walk_ranked,
+                                            walker_streams)
+from repro.kernels.pdgraph_walk.quant import quant_tables
 
 
 def _arrival_hists(arr, n_buckets):
@@ -224,6 +227,32 @@ def _walk_total(samples, counts, cum_trans, graph_idx, start, executed,
     return total, arr, spill
 
 
+def _walk_ranked(samples, counts, cum_trans, graph_idx, start, executed,
+                 attained, key_ids, refresh_ids, seed, ov_samples, ov_counts,
+                 valid, qsv, qic, *, n_walkers, max_steps, n_buckets, impl,
+                 with_overrides, compact_after, compact_shrink, with_prewarm,
+                 with_triage, po_cum=None, po_scale=None):
+    """The ``rank_in_kernel`` walk section: ONE ``pdgraph_walk_ranked``
+    dispatch carries the rows from transition sampling to demand-histogram
+    rows, ranks, and arrival statistics — VMEM-resident on the kernel path,
+    the quantized multi-stage twin on CPU.  ``qsv``/``qic`` are the lossless
+    16-bit step tables (``(1,)`` dummies disable them; shapes are static, so
+    the gate is trace-time).  Returns the ``pdgraph_walk_ranked`` dict —
+    bit-identical to the :func:`_walk_total` composition."""
+    streams = walker_streams(seed, key_ids, refresh_ids)
+    return pdgraph_walk_ranked(
+        samples, counts, cum_trans, graph_idx, start, executed, streams,
+        attained,
+        ov_samples if with_overrides else None,
+        ov_counts if with_overrides else None,
+        valid=valid, n_walkers=n_walkers, max_steps=max_steps,
+        n_buckets=n_buckets, impl=impl,
+        compact_after=compact_after, compact_shrink=compact_shrink,
+        track_arrivals=with_prewarm, with_rank=True, with_total=with_triage,
+        po_cum=po_cum, po_scale=po_scale,
+        quant=(qsv, qic) if qsv.shape[0] > 1 else None)
+
+
 def _quantile_rows(x_sorted, q):
     """Row-wise linear-interpolation quantile with COMPILE-STABLE bits.
 
@@ -256,7 +285,8 @@ def _triage_stats(total):
 @partial(jax.jit, static_argnames=("n_walkers", "max_steps", "n_buckets",
                                    "walker", "impl", "with_overrides",
                                    "compact_after", "compact_shrink",
-                                   "with_prewarm", "with_triage"))
+                                   "with_prewarm", "with_triage",
+                                   "rank_in_kernel"))
 def _fused_pipeline(samples, counts, cum_trans,        # KB: (G,U,S),(G,U),(G,U,U+1)
                     graph_idx, start, executed, attained,   # (A,) queue state
                     key_ids, refresh_ids,                   # (A,) RNG stream ids
@@ -265,16 +295,42 @@ def _fused_pipeline(samples, counts, cum_trans,        # KB: (G,U,S),(G,U),(G,U,
                     valid,                                  # (A,) bool queue rows
                     stretch,                                # (A,) wall/service EWMA
                     unit_class, class_warmup, prewarm_k,    # prewarm tables + K
+                    qsv, qic,                               # quant tables | (1,) dummies
                     *, n_walkers: int, max_steps: int, n_buckets: int,
                     walker: str, impl: Optional[str], with_overrides: bool,
                     compact_after: int, compact_shrink: int,
-                    with_prewarm: bool, with_triage: bool):
+                    with_prewarm: bool, with_triage: bool,
+                    rank_in_kernel: bool = False):
     """walk → bucketize → rank (→ triage quantiles → prewarm triggers), one
     dispatch.  Returns (ranks, probs, edges, spill, trigger, reach, sup,
     opt, mean) — all shaped (A, ...), A padded to a power of two by the
     caller; trigger/reach are ``None`` without ``with_prewarm``, the triage
     scalars ``None`` without ``with_triage``.  The (A, W) sample matrix and
-    the (A, W, U) arrival tensor never reach the host."""
+    the (A, W, U) arrival tensor never reach the host.
+
+    With ``rank_in_kernel`` the walk/bucketize/rank chain collapses into one
+    :func:`pdgraph_walk_ranked` call (the VMEM-resident program on the
+    kernel path) — bit-identical outputs, no ``(A, W)`` intermediate unless
+    triage asks for the raw totals."""
+    if rank_in_kernel:
+        res = _walk_ranked(
+            samples, counts, cum_trans, graph_idx, start, executed,
+            attained, key_ids, refresh_ids, seed, ov_samples, ov_counts,
+            valid, qsv, qic, n_walkers=n_walkers, max_steps=max_steps,
+            n_buckets=n_buckets, impl=impl, with_overrides=with_overrides,
+            compact_after=compact_after, compact_shrink=compact_shrink,
+            with_prewarm=with_prewarm, with_triage=with_triage)
+        sup = opt = mean = None
+        if with_triage:
+            sup, opt, mean = _triage_stats(res["total"])
+        trigger = reach = None
+        if with_prewarm:
+            trigger, reach = _triggers_from_hists(
+                res["a_hist"], res["a_lo"], res["a_span"], res["a_reach"],
+                n_walkers, jnp.zeros(graph_idx.shape[0], jnp.float32),
+                unit_class[graph_idx], class_warmup, prewarm_k, stretch)
+        return (res["ranks"], res["probs"], res["edges"], res["spill"],
+                trigger, reach, sup, opt, mean)
     total, arr, spill = _walk_total(
         samples, counts, cum_trans, graph_idx, start, executed, attained,
         key_ids, refresh_ids, base_key, seed, ov_samples, ov_counts, valid,
@@ -299,7 +355,8 @@ def _fused_pipeline(samples, counts, cum_trans,        # KB: (G,U,S),(G,U),(G,U,
                                    "compact_after", "compact_shrink",
                                    "with_prewarm", "with_retrigger",
                                    "with_triage", "with_posterior",
-                                   "branch_strength", "demand_strength"))
+                                   "branch_strength", "demand_strength",
+                                   "rank_in_kernel"))
 def _delta_pipeline(samples, counts, cum_trans,        # packed KB tables
                     graph_idx, start, executed, attained,   # (D,) dirty rows
                     key_ids, refresh_ids, base_key, seed,
@@ -311,13 +368,15 @@ def _delta_pipeline(samples, counts, cum_trans,        # packed KB tables
                     gi_all, delta_all, stretch_all,         # (cap,) rows
                     unit_class, class_warmup, prewarm_k,
                     post,                                   # (cap, U, U+3)
+                    qsv, qic,                               # quant tables | (1,) dummies
                     *, n_walkers: int, max_steps: int, n_buckets: int,
                     walker: str, impl: Optional[str], with_overrides: bool,
                     compact_after: int, compact_shrink: int,
                     with_prewarm: bool, with_retrigger: bool,
                     with_triage: bool, with_posterior: bool = False,
                     branch_strength: float = 8.0,
-                    demand_strength: float = 8.0):
+                    demand_strength: float = 8.0,
+                    rank_in_kernel: bool = False):
     """The delta tick: walk ONLY the gathered dirty rows, scatter their
     fresh histogram rows (demand AND arrival) back into the persistent
     device arena, and re-rank every slot in place from the persisted
@@ -353,14 +412,30 @@ def _delta_pipeline(samples, counts, cum_trans,        # packed KB tables
             rows, cum_trans[graph_idx], prior_mean[graph_idx],
             branch_strength=branch_strength,
             demand_strength=demand_strength)
-    total, arr, spill = _walk_total(
-        samples, counts, cum_trans, graph_idx, start, executed, attained,
-        key_ids, refresh_ids, base_key, seed, ov_samples, ov_counts, valid,
-        n_walkers=n_walkers, max_steps=max_steps, walker=walker, impl=impl,
-        with_overrides=with_overrides, compact_after=compact_after,
-        compact_shrink=compact_shrink, with_prewarm=with_prewarm,
-        po_cum=po_cum, po_scale=po_scale)
-    probs, edges = to_histogram_rows_jnp(total, n_buckets)
+    if rank_in_kernel:
+        # one-pass walk → histogram rows (→ arrival stats); the per-row
+        # in-kernel ranks are superseded by the arena-wide rank-in-place
+        # below (bit-identical for the walked rows — same histogram rows,
+        # same attained — and un-walked slots need ranking regardless)
+        res = _walk_ranked(
+            samples, counts, cum_trans, graph_idx, start, executed,
+            attained, key_ids, refresh_ids, seed, ov_samples, ov_counts,
+            valid, qsv, qic, n_walkers=n_walkers, max_steps=max_steps,
+            n_buckets=n_buckets, impl=impl, with_overrides=with_overrides,
+            compact_after=compact_after, compact_shrink=compact_shrink,
+            with_prewarm=with_prewarm, with_triage=with_triage,
+            po_cum=po_cum, po_scale=po_scale)
+        probs, edges, spill, total = (res["probs"], res["edges"],
+                                      res["spill"], res["total"])
+    else:
+        total, arr, spill = _walk_total(
+            samples, counts, cum_trans, graph_idx, start, executed, attained,
+            key_ids, refresh_ids, base_key, seed, ov_samples, ov_counts,
+            valid, n_walkers=n_walkers, max_steps=max_steps, walker=walker,
+            impl=impl, with_overrides=with_overrides,
+            compact_after=compact_after, compact_shrink=compact_shrink,
+            with_prewarm=with_prewarm, po_cum=po_cum, po_scale=po_scale)
+        probs, edges = to_histogram_rows_jnp(total, n_buckets)
     d_probs = d_probs.at[slot_idx].set(probs, mode="drop")
     d_edges = d_edges.at[slot_idx].set(edges, mode="drop")
     # rank-in-place: per-row math over the whole arena — bit-identical per
@@ -372,7 +447,11 @@ def _delta_pipeline(samples, counts, cum_trans,        # packed KB tables
         sup, opt, mean = _triage_stats(total)
     trigger = reach = None
     if with_prewarm:
-        hist, lo, span, n_reach = _arrival_hists(arr, n_buckets)
+        if rank_in_kernel:
+            hist, lo, span, n_reach = (res["a_hist"], res["a_lo"],
+                                       res["a_span"], res["a_reach"])
+        else:
+            hist, lo, span, n_reach = _arrival_hists(arr, n_buckets)
         a_hist = a_hist.at[slot_idx].set(hist, mode="drop")
         a_lo = a_lo.at[slot_idx].set(lo, mode="drop")
         a_span = a_span.at[slot_idx].set(span, mode="drop")
@@ -431,6 +510,36 @@ def _prewarm_args(packed, prewarm_table):
             jnp.zeros((1,), jnp.float32))
 
 
+def _ranked_args(packed: PackedKB, walker: str, impl: Optional[str],
+                 rank_in_kernel: Optional[bool]):
+    """Resolve the ``rank_in_kernel`` knob (default: on for the pallas
+    walker, mirroring ``RefreshConfig``) and build its quantized-step
+    operands: the real memoized tables when the CPU twin will run, ``(1,)``
+    dummies otherwise (the pipelines gate trace-time by shape)."""
+    if rank_in_kernel is None:
+        rank_in_kernel = walker == "pallas"
+    elif rank_in_kernel and walker != "pallas":
+        raise ValueError(
+            "rank_in_kernel=True requires walker='pallas' (the "
+            f"{walker!r} walker has no fused one-pass program)")
+    use_quant = rank_in_kernel and (
+        impl == "ref" or (impl is None and jax.default_backend() != "tpu"))
+    if use_quant:
+        qsv, qic = quant_tables(packed.samples, packed.counts,
+                                packed.cum_trans)
+    else:
+        qsv, qic = _quant_dummies()
+    return rank_in_kernel, qsv, qic
+
+
+@lru_cache(maxsize=1)
+def _quant_dummies():
+    """Stable (1,) placeholders for the quant-table argument slots — one
+    allocation per process, so device placements keyed by buffer identity
+    (the mesh's replicated cache, jit donation checks) never churn."""
+    return jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.uint8)
+
+
 def _dispatch_rows(qs: QueueState, slots: np.ndarray, packed: PackedKB,
                    prewarm_table, pad_to: Optional[int] = None):
     """Shared host-side marshalling for the refresh entry points: padded
@@ -466,14 +575,20 @@ def refresh_ranks_fused(packed: PackedKB, qs: QueueState, base_key, seed,
                         impl: Optional[str] = None,
                         compact_after: int = 16, compact_shrink: int = 4,
                         prewarm_table=None, prewarm_k: float = 0.5,
-                        with_triage: bool = False) -> FusedRefresh:
+                        with_triage: bool = False,
+                        rank_in_kernel: Optional[bool] = None
+                        ) -> FusedRefresh:
     """One fused refresh over a slot subset (default: every occupied slot).
 
     Returns a :class:`FusedRefresh` of host arrays — the (A, n_walkers)
     sample matrix stays on device.  Fresh triage scalars and prewarm
     trigger/reach rows are also written into the store's host mirrors, so
     the planner can read arrival rows without holding this return value.
-    Does NOT bump refresh ids; callers bump after consuming."""
+    Does NOT bump refresh ids; callers bump after consuming.
+
+    ``rank_in_kernel`` (default: on for ``walker="pallas"``) runs the
+    one-pass VMEM-resident program (``pdgraph_walk_ranked``) instead of the
+    walk → histogram → rank composition — bit-identical results."""
     if slots is None:
         slots = qs.occupied()
     A = len(slots)
@@ -489,6 +604,8 @@ def refresh_ranks_fused(packed: PackedKB, qs: QueueState, base_key, seed,
     gi, start, executed, attained, kid, rid, stretch, ovs, ovc, with_ov, \
         uc, wt = _dispatch_rows(qs, slots, packed, prewarm_table)
     with_pw = prewarm_table is not None
+    rank_in_kernel, qsv, qic = _ranked_args(packed, walker, impl,
+                                            rank_in_kernel)
     ranks, probs, edges, spill, trigger, reach, sup, opt, mean = \
         _fused_pipeline(
             packed.samples, packed.counts, packed.cum_trans,
@@ -497,11 +614,12 @@ def refresh_ranks_fused(packed: PackedKB, qs: QueueState, base_key, seed,
             base_key, np.uint32(int(seed) & 0xFFFFFFFF),
             jnp.asarray(ovs), jnp.asarray(ovc),
             jnp.asarray(np.arange(len(gi)) < A), jnp.asarray(stretch),
-            uc, wt, jnp.float32(prewarm_k),
+            uc, wt, jnp.float32(prewarm_k), qsv, qic,
             n_walkers=n_walkers, max_steps=max_steps, n_buckets=n_buckets,
             walker=walker, impl=impl, with_overrides=with_ov,
             compact_after=compact_after, compact_shrink=compact_shrink,
-            with_prewarm=with_pw, with_triage=with_triage)
+            with_prewarm=with_pw, with_triage=with_triage,
+            rank_in_kernel=rank_in_kernel)
     out = FusedRefresh(
         np.asarray(ranks)[:A], np.asarray(probs)[:A], np.asarray(edges)[:A],
         int(spill),
@@ -545,7 +663,8 @@ def refresh_ranks_delta(packed: PackedKB, qs: QueueState, base_key, seed,
                         prewarm_table=None, prewarm_k: float = 0.5,
                         retrigger: bool = True,
                         with_triage: bool = False,
-                        posterior=None) -> DeltaTick:
+                        posterior=None,
+                        rank_in_kernel: Optional[bool] = None) -> DeltaTick:
     """One delta tick over the slot store: walk ``walked`` (normally the
     drained dirty set), scatter their histogram rows into the device arena,
     re-rank every slot in place.  With an empty ``walked`` the tick is a
@@ -602,6 +721,8 @@ def refresh_ranks_delta(packed: PackedKB, qs: QueueState, base_key, seed,
     if with_po:
         qs.ensure_posterior_rows()
     post = qs.post if with_po else jnp.zeros((1, 1, 1), jnp.float32)
+    rank_in_kernel, qsv, qic = _ranked_args(packed, walker, impl,
+                                            rank_in_kernel)
     (qs.d_probs, qs.d_edges, ranks, spill, sup, opt, mean,
      a_hist, a_lo, a_span, a_reach, trigger, reach) = _delta_pipeline(
         packed.samples, packed.counts, packed.cum_trans,
@@ -616,14 +737,15 @@ def refresh_ranks_delta(packed: PackedKB, qs: QueueState, base_key, seed,
         qs.a_span if with_pw else dummy,
         qs.a_reach if with_pw else dummy,
         gi_all, delta_all, stretch_all,
-        uc, wt, jnp.float32(prewarm_k), post,
+        uc, wt, jnp.float32(prewarm_k), post, qsv, qic,
         n_walkers=n_walkers, max_steps=max_steps, n_buckets=n_buckets,
         walker=walker, impl=impl, with_overrides=with_ov,
         compact_after=compact_after, compact_shrink=compact_shrink,
         with_prewarm=with_pw, with_retrigger=retrigger,
         with_triage=with_triage, with_posterior=with_po,
         branch_strength=(posterior.branch_strength if with_po else 8.0),
-        demand_strength=(posterior.demand_strength if with_po else 8.0))
+        demand_strength=(posterior.demand_strength if with_po else 8.0),
+        rank_in_kernel=rank_in_kernel)
     if with_pw:
         qs.a_hist, qs.a_lo, qs.a_span, qs.a_reach = \
             a_hist, a_lo, a_span, a_reach

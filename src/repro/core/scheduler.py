@@ -117,6 +117,8 @@ class HermesScheduler:
             self.refresh_mesh = RefreshMesh(rc.mesh_shards)
         self._stretch_alpha = 0.3       # queue-wait EWMA smoothing
         self.walker = rc.walker
+        self.rank_in_kernel = rc.rank_in_kernel
+        self.lane_balance = rc.lane_balance
         self.compact_after = compact_after
         self.compact_shrink = compact_shrink
         if hasattr(self.policy, "vectorized"):
@@ -320,7 +322,8 @@ class HermesScheduler:
             compact_after=self.compact_after,
             compact_shrink=self.compact_shrink,
             prewarm_table=tab, prewarm_k=self.K,
-            with_triage=self._with_triage)
+            with_triage=self._with_triage,
+            rank_in_kernel=self.rank_in_kernel)
         self.fused_spill += out.spill
         if tab is not None:
             self._stash_plan(PrewarmPlan.from_store(qs, slots, now, tab))
@@ -389,7 +392,8 @@ class HermesScheduler:
             compact_after=self.compact_after,
             compact_shrink=self.compact_shrink,
             prewarm_table=tab, prewarm_k=self.K, retrigger=full,
-            with_triage=self._with_triage, posterior=self.posterior)
+            with_triage=self._with_triage, posterior=self.posterior,
+            rank_in_kernel=self.rank_in_kernel)
         self.fused_spill += tick.spill
         if full:
             qs.take_rank_dirty()     # arena-wide re-rank covered everyone
@@ -437,7 +441,9 @@ class HermesScheduler:
             compact_shrink=self.compact_shrink,
             prewarm_table=tab, prewarm_k=self.K, retrigger=full,
             host_work=bookkeeping, with_triage=self._with_triage,
-            posterior=self.posterior)
+            posterior=self.posterior,
+            rank_in_kernel=self.rank_in_kernel,
+            lane_balance=self.lane_balance)
         self.fused_spill += tick.spill
         if tab is not None:
             plan_slots = qs.occupied() if full else walked

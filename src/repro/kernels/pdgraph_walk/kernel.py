@@ -13,12 +13,25 @@ the TPU target:
   bit-identical to the flat-gather jnp twin in ``ref.py``;
 * **in-kernel counter RNG** — the per-step uniforms come from the shared
   ``fmix32`` hash over (stream, step*W + lane), so no threefry key chain is
-  ever materialized and the RNG costs ~5 integer ops per walker-step.
+  ever materialized and the RNG costs ~5 integer ops per walker-step;
+* **blocked per-app tables** — posterior-blended CDF/scale rows and the
+  fused-rank ``attained`` vector are per-APP, so their one-hots would be
+  ``(A*U, BN)`` at full width; instead the lane block is aligned to app
+  boundaries (``BN = W * k``) and those operands are BlockSpec'd down to
+  the ``k`` apps the block walks, keeping the one-hot ``(k*U, BN)``;
+* **fused-rank epilogue** — with ``with_rank`` / ``with_arr_hist`` the
+  SAME program reduces its walker lanes to per-app demand-histogram rows,
+  Gittins ranks, and per-(app, unit) arrival-histogram rows before
+  writing back: only ``(A, n_buckets)``-shaped products leave VMEM, the
+  ``(A, W)`` totals round-trip and the separate bucketize/rank dispatches
+  disappear.  The reductions trace the 2-D loop twins in
+  ``repro.core.gittins`` (bit-identical to ``to_histogram_rows_jnp`` /
+  ``gittins_rank_core``) and mirror ``_arrival_hists`` sum-for-sum.
 
 The interpret-mode path (auto off-TPU) runs the identical program through
 the Pallas interpreter; the correctness sweeps in tests/test_pdgraph_walk.py
-check it bitwise against the twin and distributionally (KS) against the
-threefry oracle `_walk_core`.
+and tests/test_fused_rank.py check it bitwise against the twins and
+distributionally (KS) against the threefry oracle `_walk_core`.
 """
 from __future__ import annotations
 
@@ -30,23 +43,38 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core.gittins import hist_rows_loop, rank_rows_loop
 from repro.kernels import tpu_compiler_params
 from repro.kernels.pdgraph_walk.ref import counter_uniforms
 
 
 def _kernel(*refs, step0: int, n_steps: int, lanes_per_app: int,
-            with_overrides: bool, with_executed: bool, with_arrivals: bool):
-    if with_arrivals:
-        (samples_t_ref, counts_ref, cum_t_ref, ovs_t_ref, ovc_ref,
-         cur_ref, gi_ref, app_ref, stream_ref, lane_ref, ex_ref,
-         total_ref, done_ref, arr_ref,
-         cur_out_ref, total_out_ref, done_out_ref, arr_out_ref) = refs
+            with_overrides: bool, with_executed: bool, with_arrivals: bool,
+            with_posterior: bool = False, block_apps: int = 0,
+            n_buckets: int = 0, with_rank: bool = False,
+            with_arr_hist: bool = False, with_total_out: bool = True,
+            arrival_never: float = 0.0):
+    fused = with_rank or with_arr_hist
+    it = iter(refs)
+    samples_t_ref, counts_ref, cum_t_ref, ovs_t_ref, ovc_ref = \
+        (next(it) for _ in range(5))
+    po_scale_ref = next(it) if with_posterior else None
+    po_cum_t_ref = next(it) if with_posterior else None
+    attained_ref = next(it) if fused else None
+    (cur_ref, gi_ref, app_ref, stream_ref, lane_ref, ex_ref,
+     total_ref, done_ref) = (next(it) for _ in range(8))
+    arr_ref = next(it) if with_arrivals else None
+    if fused:
+        total_out_ref = next(it) if with_total_out else None
+        if with_rank:
+            probs_ref, edges_ref, ranks_ref = (next(it) for _ in range(3))
+        arrstats_ref = next(it) if with_arr_hist else None
+        cur_out_ref = done_out_ref = arr_out_ref = None
     else:
-        (samples_t_ref, counts_ref, cum_t_ref, ovs_t_ref, ovc_ref,
-         cur_ref, gi_ref, app_ref, stream_ref, lane_ref, ex_ref,
-         total_ref, done_ref,
-         cur_out_ref, total_out_ref, done_out_ref) = refs
-        arr_ref = arr_out_ref = None
+        cur_out_ref, total_out_ref, done_out_ref = \
+            (next(it) for _ in range(3))
+        arr_out_ref = next(it) if with_arrivals else None
+
     S = samples_t_ref.shape[0]
     GU = samples_t_ref.shape[1]
     U = cum_t_ref.shape[0] - 1               # absorbing state == unit stride
@@ -70,6 +98,13 @@ def _kernel(*refs, step0: int, n_steps: int, lanes_per_app: int,
         So, AU = ovs_t.shape
         iota_au = jax.lax.broadcasted_iota(jnp.int32, (AU, BN), 0)
         iota_so = jax.lax.broadcasted_iota(jnp.int32, (So, BN), 0)
+    if with_posterior:
+        # app-blocked posterior tables: the block walks apps [app0, app0+k)
+        po_scale_b = po_scale_ref[...]       # (1, k*U)
+        po_cum_b = po_cum_t_ref[...]         # (U+1, k*U)
+        iota_bau = jax.lax.broadcasted_iota(
+            jnp.int32, (block_apps * U, BN), 0)
+        app0 = pl.program_id(0) * block_apps
 
     def step_fn(k, carry):
         cur, total, done, arr = carry        # (1,BN) i32 / f32 / bool (+U,BN)
@@ -93,10 +128,17 @@ def _kernel(*refs, step0: int, n_steps: int, lanes_per_app: int,
             osel = (iota_so == jnp.minimum(si, So - 1)).astype(jnp.float32)
             osvc = jnp.sum(ovals * osel, axis=0, keepdims=True)
             svc = jnp.where(oc > 0, osvc, svc)
+        if with_posterior:
+            prow = (app - app0) * U + cur
+            paoh = (iota_bau == prow).astype(jnp.float32)  # (k*U, BN)
+            # max-guard mirrors walk_phase_ref: the max consumes the
+            # product so downstream ops cannot FMA-contract it
+            svc = jnp.maximum(svc * jnp.dot(po_scale_b, paoh), 0.0)
         if with_executed:
             svc = jnp.where(s == 0, jnp.maximum(svc - ex, 0.0), svc)
         total = total + jnp.where(done, 0.0, svc)
-        cumsel = jnp.dot(cum_t, roh)                      # (U+1, BN)
+        cumsel = jnp.dot(po_cum_b, paoh) if with_posterior \
+            else jnp.dot(cum_t, roh)                      # (U+1, BN)
         nxt = jnp.sum((r2 > cumsel).astype(jnp.int32), axis=0, keepdims=True)
         nxt = jnp.minimum(nxt, U)
         new_done = done | (nxt >= U)
@@ -115,16 +157,70 @@ def _kernel(*refs, step0: int, n_steps: int, lanes_per_app: int,
         else jnp.zeros((1, BN), jnp.float32)
     init = (cur_ref[...], total_ref[...], done_ref[...] != 0, arr0)
     cur, total, done, arr = jax.lax.fori_loop(0, n_steps, step_fn, init)
-    cur_out_ref[...] = cur
-    total_out_ref[...] = total
-    done_out_ref[...] = done.astype(jnp.int32)
-    if with_arrivals:
-        arr_out_ref[...] = arr
+
+    if not fused:
+        cur_out_ref[...] = cur
+        total_out_ref[...] = total
+        done_out_ref[...] = done.astype(jnp.int32)
+        if with_arrivals:
+            arr_out_ref[...] = arr
+        return
+
+    # fused epilogue: the walker lanes never leave VMEM — reduce them to
+    # per-app rows right here.  (1, BN) lanes are app-major (lane = a*W + w),
+    # so the reshape recovers this block's (k, W) rows exactly.
+    W = lanes_per_app
+    BA = block_apps
+    if with_total_out:
+        total_out_ref[...] = total
+    att = attained_ref[...]                               # (1, BA)
+    att_col = att.reshape(BA, 1)
+    if with_rank:
+        rem = total.reshape(BA, W)
+        # same float ops as the pipeline's `attained[:, None] + max(rem, 0)`
+        tot = att_col + jnp.maximum(rem, 0.0)
+        probs, edges = hist_rows_loop(tot, n_buckets)
+        ranks = rank_rows_loop(probs, edges, att_col, n_buckets)
+        probs_ref[...] = probs
+        edges_ref[...] = edges
+        ranks_ref[...] = ranks.reshape(1, BA)
+    if with_arr_hist:
+        # mirrors refresh_pipeline._arrival_hists sum-for-sum, one unit at a
+        # time over (k, W) tiles; rows packed app-major as
+        # (a*U + u, [hist | lo | span | n_reach])
+        never = np.float32(arrival_never)
+        rows_u = []
+        for u in range(U):
+            arr_u = arr[u:u + 1].reshape(BA, W)
+            reached = arr_u < never / 2
+            n_reach = reached.sum(axis=1, keepdims=True).astype(jnp.float32)
+            lo = jnp.where(reached, arr_u, never).min(axis=1, keepdims=True)
+            hi = jnp.where(reached, arr_u, -never).max(axis=1, keepdims=True)
+            span = jnp.maximum(hi - lo, 1e-6)
+            idx = ((arr_u - lo) * (n_buckets / span)).astype(jnp.int32)
+            idx = jnp.clip(idx, 0, n_buckets - 1)
+            hist = jnp.concatenate(
+                [((idx == b) & reached).sum(axis=1, keepdims=True)
+                 for b in range(n_buckets)], axis=1).astype(jnp.float32)
+            rows_u.append(jnp.concatenate([hist, lo, span, n_reach], axis=1))
+        arrstats_ref[...] = jnp.stack(rows_u, axis=1).reshape(
+            BA * U, n_buckets + 3)
+
+
+def _app_block(n_lanes: int, lanes_per_app: int, block_n: int) -> int:
+    """Largest app-aligned lane block ``<= max(block_n, W)`` dividing N:
+    ``BN = W * k`` with ``k | A`` — every block walks whole apps, which the
+    blocked per-app operands (posterior tables, attained, fused-rank rows)
+    require."""
+    W = lanes_per_app
+    A = n_lanes // W
+    k = math.gcd(A, max(1, block_n // W))
+    return W * k
 
 
 def pdgraph_walk_kernel(samples_t, counts_row, cum_t, ovs_t, ovc_row,
                         cur, gi, app, stream, lane, executed, total, done,
-                        arrivals_t=None,
+                        arrivals_t=None, po_scale_row=None, po_cum_t=None,
                         *, step0: int, n_steps: int, lanes_per_app: int,
                         with_overrides: bool, with_executed: bool,
                         block_n: int = 512, interpret: bool = False):
@@ -134,14 +230,21 @@ def pdgraph_walk_kernel(samples_t, counts_row, cum_t, ovs_t, ovc_row,
     pre-transposed (see module docstring).  ``arrivals_t`` (U, N) switches on
     the first-arrival carry: per walker, the cumulative service at its first
     entry into each unit rides the fori_loop as a (U, BN) block and is
-    written back as a fourth output.  Returns ``(cur, total, done)`` or
-    ``(cur, total, done, arrivals_t)``.
+    written back as a fourth output.  ``po_scale_row`` (1, A*U) /
+    ``po_cum_t`` (U+1, A*U) switch on posterior-blended sampling; they are
+    app-blocked, so the lane block aligns to app boundaries and the phase
+    must cover step 0 (pre-compaction) state only.  Returns ``(cur, total,
+    done)`` or ``(cur, total, done, arrivals_t)``.
     """
     N = cur.shape[0]
     with_arrivals = arrivals_t is not None
-    # largest block dividing N (gcd keeps lane-multiple blocks whenever the
-    # walker count allows; never asserts on odd n_walkers/compact configs)
-    BN = math.gcd(N, block_n)
+    with_posterior = po_cum_t is not None
+    if with_posterior:
+        BN = _app_block(N, lanes_per_app, block_n)
+    else:
+        # largest block dividing N (gcd keeps lane-multiple blocks whenever
+        # the walker count allows; never asserts on odd n_walkers configs)
+        BN = math.gcd(N, block_n)
     U = cum_t.shape[0] - 1
     as_row = lambda a, dt: a.astype(dt).reshape(1, N)  # noqa: E731
     state = [as_row(cur, jnp.int32), as_row(gi, jnp.int32),
@@ -153,16 +256,24 @@ def pdgraph_walk_kernel(samples_t, counts_row, cum_t, ovs_t, ovc_row,
     kernel = functools.partial(
         _kernel, step0=step0, n_steps=n_steps, lanes_per_app=lanes_per_app,
         with_overrides=with_overrides, with_executed=with_executed,
-        with_arrivals=with_arrivals)
+        with_arrivals=with_arrivals, with_posterior=with_posterior,
+        block_apps=BN // lanes_per_app if with_posterior else 0)
     table_spec = lambda t: pl.BlockSpec(t.shape, lambda i: (0,) * t.ndim)  # noqa: E731
     lane_spec = pl.BlockSpec((1, BN), lambda i: (0, i))
     arr_spec = pl.BlockSpec((U, BN), lambda i: (0, i))
-    in_specs = [table_spec(t) for t in tables] + [lane_spec] * len(state)
+    in_specs = [table_spec(t) for t in tables]
+    operands = list(tables)
+    if with_posterior:
+        BAU = (BN // lanes_per_app) * U
+        operands += [po_scale_row.reshape(1, -1), po_cum_t]
+        in_specs += [pl.BlockSpec((1, BAU), lambda i: (0, i)),
+                     pl.BlockSpec((U + 1, BAU), lambda i: (0, i))]
+    in_specs += [lane_spec] * len(state)
+    operands += state
     out_specs = [lane_spec] * 3
     out_shape = [jax.ShapeDtypeStruct((1, N), jnp.int32),
                  jax.ShapeDtypeStruct((1, N), jnp.float32),
                  jax.ShapeDtypeStruct((1, N), jnp.int32)]
-    operands = tables + state
     if with_arrivals:
         in_specs.append(arr_spec)
         out_specs.append(arr_spec)
@@ -181,3 +292,101 @@ def pdgraph_walk_kernel(samples_t, counts_row, cum_t, ovs_t, ovc_row,
     cur_o, total_o, done_o = out[:3]
     res = (cur_o.reshape(N), total_o.reshape(N), done_o.reshape(N) != 0)
     return res + (out[3],) if with_arrivals else res
+
+
+def pdgraph_walk_fused_kernel(samples_t, counts_row, cum_t, ovs_t, ovc_row,
+                              attained, cur, gi, app, stream, lane,
+                              executed, total, done, arrivals_t=None,
+                              po_scale_row=None, po_cum_t=None,
+                              *, n_steps: int, lanes_per_app: int,
+                              n_buckets: int, arrival_never: float,
+                              with_overrides: bool,
+                              with_rank: bool = True,
+                              with_total: bool = False,
+                              block_n: int = 512, interpret: bool = False):
+    """The one-pass VMEM-resident refresh program: walk + per-app reduce.
+
+    One ``pallas_call`` carries each app-aligned walker block from
+    transition sampling through the demand/arrival histogram rows and the
+    Gittins rank — the ``(A, W)`` totals and ``(A, W, U)`` arrival tensor
+    never leave VMEM unless ``with_total`` (triage) asks for the raw
+    totals.  Single-phase by construction (phase compaction is exact, so
+    skipping it cannot change a bit — see ops.pdgraph_walk_ranked).
+
+    Returns ``(total (N,) | None, probs (A, nb) | None, edges | None,
+    ranks (A,) | None, arrstats (A*U, nb+3) | None)`` — ``arrstats`` only
+    with ``arrivals_t``, packed ``[hist | lo | span | n_reach]`` per
+    (app, unit) row.
+    """
+    N = cur.shape[0]
+    W = lanes_per_app
+    A = N // W
+    U = cum_t.shape[0] - 1
+    with_arrivals = arrivals_t is not None
+    with_posterior = po_cum_t is not None
+    BN = _app_block(N, W, block_n)
+    BA = BN // W
+    as_row = lambda a, dt: a.astype(dt).reshape(1, N)  # noqa: E731
+    state = [as_row(cur, jnp.int32), as_row(gi, jnp.int32),
+             as_row(app, jnp.int32), as_row(stream, jnp.uint32),
+             as_row(lane, jnp.uint32), as_row(executed, jnp.float32),
+             as_row(total, jnp.float32), as_row(done, jnp.int32)]
+    tables = [samples_t, counts_row.reshape(1, -1), cum_t,
+              ovs_t, ovc_row.reshape(1, -1)]
+    kernel = functools.partial(
+        _kernel, step0=0, n_steps=n_steps, lanes_per_app=W,
+        with_overrides=with_overrides, with_executed=True,
+        with_arrivals=with_arrivals, with_posterior=with_posterior,
+        block_apps=BA, n_buckets=n_buckets, with_rank=with_rank,
+        with_arr_hist=with_arrivals, with_total_out=with_total,
+        arrival_never=arrival_never)
+    table_spec = lambda t: pl.BlockSpec(t.shape, lambda i: (0,) * t.ndim)  # noqa: E731
+    lane_spec = pl.BlockSpec((1, BN), lambda i: (0, i))
+    in_specs = [table_spec(t) for t in tables]
+    operands = list(tables)
+    if with_posterior:
+        BAU = BA * U
+        operands += [po_scale_row.reshape(1, -1), po_cum_t]
+        in_specs += [pl.BlockSpec((1, BAU), lambda i: (0, i)),
+                     pl.BlockSpec((U + 1, BAU), lambda i: (0, i))]
+    operands.append(attained.astype(jnp.float32).reshape(1, A))
+    in_specs.append(pl.BlockSpec((1, BA), lambda i: (0, i)))
+    operands += state
+    in_specs += [lane_spec] * len(state)
+    out_specs, out_shape = [], []
+    if with_total:
+        out_specs.append(lane_spec)
+        out_shape.append(jax.ShapeDtypeStruct((1, N), jnp.float32))
+    if with_rank:
+        row_spec = pl.BlockSpec((BA, n_buckets), lambda i: (i, 0))
+        out_specs += [row_spec, row_spec,
+                      pl.BlockSpec((1, BA), lambda i: (0, i))]
+        out_shape += [jax.ShapeDtypeStruct((A, n_buckets), jnp.float32),
+                      jax.ShapeDtypeStruct((A, n_buckets), jnp.float32),
+                      jax.ShapeDtypeStruct((1, A), jnp.float32)]
+    if with_arrivals:
+        in_specs.append(pl.BlockSpec((U, BN), lambda i: (0, i)))
+        operands.append(arrivals_t.astype(jnp.float32))
+        out_specs.append(pl.BlockSpec((BA * U, n_buckets + 3),
+                                      lambda i: (i, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((A * U, n_buckets + 3), jnp.float32))
+    out = list(pl.pallas_call(
+        kernel,
+        grid=(N // BN,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*operands))
+    total_o = out.pop(0).reshape(N) if with_total else None
+    if with_rank:
+        probs_o, edges_o, ranks_o = out[:3]
+        out = out[3:]
+        ranks_o = ranks_o.reshape(A)
+    else:
+        probs_o = edges_o = ranks_o = None
+    arrstats_o = out.pop(0) if with_arrivals else None
+    return total_o, probs_o, edges_o, ranks_o, arrstats_o

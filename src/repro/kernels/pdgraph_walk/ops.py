@@ -35,15 +35,40 @@ power-of-two rounding (up to ~2x waste) the whole-queue paths use.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.gittins import (gittins_rank_core, to_histogram_rows_jnp)
 from repro.core.pdgraph import ARRIVAL_NEVER, _pow2_ceil
-from repro.kernels.pdgraph_walk.kernel import pdgraph_walk_kernel
+from repro.kernels.pdgraph_walk.kernel import (pdgraph_walk_fused_kernel,
+                                               pdgraph_walk_kernel)
+from repro.kernels.pdgraph_walk.quant import walk_phase_quant
 from repro.kernels.pdgraph_walk.ref import walk_phase_ref, walker_streams  # noqa: F401  (re-export)
+
+# dispatch introspection: which implementation the last pdgraph_walk /
+# pdgraph_walk_ranked trace actually took ("pallas" | "ref").  Tests assert
+# on it (the Pallas-silent-fallback trap: a requested kernel path must
+# either run the kernel or warn) — note jit caching means it reflects the
+# last TRACE, so assert right after a fresh-shape call.
+LAST_DISPATCH: Optional[str] = None
+_FALLBACK_WARNED: set = set()
+
+
+def _note_dispatch(requested: Optional[str], actual: str, reason: str = ""):
+    global LAST_DISPATCH
+    LAST_DISPATCH = actual
+    if requested == "pallas" and actual != "pallas" \
+            and reason not in _FALLBACK_WARNED:
+        _FALLBACK_WARNED.add(reason)
+        warnings.warn(
+            f"pdgraph_walk: requested impl='pallas' fell back to the jnp "
+            f"twin ({reason}); the kernel no longer supports this "
+            "configuration — file it against docs/KERNELS.md",
+            RuntimeWarning, stacklevel=3)
 
 
 def pad_rows(n: int, min_rows: int = 1) -> int:
@@ -69,13 +94,18 @@ def pad_rows(n: int, min_rows: int = 1) -> int:
 
 
 def _phase(flat_tables, ov_tables, state, *, step0, n_steps, lanes_per_app,
-           impl, interpret, arrivals=None, po_tables=(None, None)):
+           impl, interpret, arrivals=None, po_tables=(None, None),
+           quant_tables=None):
     """One walk phase via the kernel or its jnp twin (identical bits).
 
     ``arrivals`` (N, U) switches on first-arrival tracking; both backends
     carry it (the kernel as a (U, N) lane-major block), bit-identically.
-    ``po_tables`` (flat posterior CDF/scale) only reach the twin — the
-    dispatcher forces ``impl="ref"`` when posterior sampling is on."""
+    ``po_tables`` (flat posterior CDF/scale) reach both backends: the twin
+    gathers them, the kernel consumes them as app-blocked one-hot operands
+    (step0 == 0 phases only — the dispatcher disables compaction for
+    posterior kernel walks).  ``quant_tables`` (qsv, icdf) switch the twin
+    to the lossless 16-bit quantized step (``quant.walk_phase_quant``,
+    bit-identical; ineligible with overrides — the caller gates)."""
     fsamples, fcounts, fcum = flat_tables
     fov_s, fov_c = ov_tables
     fpo_cum, fpo_scale = po_tables
@@ -90,6 +120,7 @@ def _phase(flat_tables, ov_tables, state, *, step0, n_steps, lanes_per_app,
             fsamples.T, fcounts, fcum.T, ovs_t, ovc,
             cur, gi, app, stream, lane, ex, total, done,
             arrivals.T if arrivals is not None else None,
+            fpo_scale, fpo_cum.T if fpo_cum is not None else None,
             step0=step0, n_steps=n_steps, lanes_per_app=lanes_per_app,
             with_overrides=fov_s is not None,
             with_executed=executed is not None,
@@ -97,6 +128,15 @@ def _phase(flat_tables, ov_tables, state, *, step0, n_steps, lanes_per_app,
         if arrivals is not None:
             return out[0], out[1], out[2], out[3].T
         return out
+    if quant_tables is not None and fov_s is None:
+        qsv, qic = quant_tables
+        return walk_phase_quant(qsv, qic, cur, total, done, gi, app,
+                                stream, lane, executed,
+                                n_units=fcum.shape[1] - 1,
+                                step0=step0, n_steps=n_steps,
+                                lanes_per_app=lanes_per_app,
+                                arrivals=arrivals,
+                                fpo_cum=fpo_cum, fpo_scale=fpo_scale)
     return walk_phase_ref(fsamples, fcounts, fcum, fov_s, fov_c,
                           cur, total, done, gi, app, stream, lane, executed,
                           step0=step0, n_steps=n_steps,
@@ -120,7 +160,8 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
                  compact_schedule: Optional[Tuple[Tuple[int, int], ...]] = None,
                  track_arrivals: bool = False,
                  po_cum: Optional[jnp.ndarray] = None,       # (A, U, U+1)
-                 po_scale: Optional[jnp.ndarray] = None      # (A, U)
+                 po_scale: Optional[jnp.ndarray] = None,     # (A, U)
+                 quant: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
                  ) -> Tuple[jnp.ndarray, ...]:
     """Remaining-service totals for A apps: ``((A, n_walkers), spill)``.
 
@@ -151,16 +192,25 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
     carry, so totals are bit-identical either way.
 
     ``po_cum (A, U, U+1)`` / ``po_scale (A, U)`` switch on posterior
-    sampling (online PDGraph learning, ``repro.core.posterior``).  The
-    kernel routes posterior walks through the bit-identical jnp twin — the
-    same escape hatch arrival tracking used before the kernel grew its
-    arrival carry — so every backend draws identical bits; an in-kernel
-    per-app CDF block is the open item tracked in docs/KERNELS.md.
+    sampling (online PDGraph learning, ``repro.core.posterior``).  Both
+    backends consume them bit-identically: the twin as flat gathers, the
+    kernel as app-blocked one-hot operands.  Blocked per-app tables
+    require app-aligned lane blocks, which only hold before compaction —
+    posterior kernel walks therefore run single-phase (compaction is
+    exact, so the bits cannot differ; only the spill count, pinned at 0,
+    and the step cost on absorbed lanes do).
+
+    ``quant`` — precomputed ``(qsv, icdf)`` lossless 16-bit step tables
+    (``quant.quant_tables``) for the jnp twin; ignored on the kernel path
+    and ineligible with overrides (the per-phase gate falls back to the
+    reference step).  Bit-identical either way.
     """
+    requested = impl
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if po_cum is not None:
-        impl = "ref"              # posterior walks ride the bit-identical twin
+    _note_dispatch(requested, impl)
+    if po_cum is not None and impl == "pallas":
+        compact_schedule = ()     # app-blocked tables need phase-1 lanes
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     A = graph_idx.shape[0]
@@ -218,7 +268,8 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
                       executed_c),
                      step0=seg_start, n_steps=step_b - seg_start,
                      lanes_per_app=W, impl=impl, interpret=interpret,
-                     arrivals=arr, po_tables=po_tables)
+                     arrivals=arr, po_tables=po_tables,
+                     quant_tables=quant if impl == "ref" else None)
         if track_arrivals:
             cur, total, done, arr = out
         else:
@@ -247,6 +298,168 @@ def pdgraph_walk(samples: jnp.ndarray,        # (G, U, S)
     if track_arrivals:
         return total.reshape(A, W), arr.reshape(A, W, U), spill
     return total.reshape(A, W), spill
+
+
+def walk_schedule(compact_after: int, compact_shrink: int,
+                  n_lanes: int) -> Tuple[Tuple[int, int], ...]:
+    """Lane-count-gated multi-stage compaction schedule (static at trace
+    time) — the mesh's measured-absorption schedule, shared with the
+    fused-rank twin dispatch.
+
+    Walker absorption keeps decaying long after the single PR-4 compaction
+    point — measured on the app suite at benchmark scale: ~9.4% of lanes
+    alive at step 12 (vs 25% capacity), ~2.2% at 28 (vs 6.25%), ~0.7% at 44
+    (vs 1.6%) — so at large batches three stages cut the tail-phase walk
+    cost ~40% while every stage keeps a >2x *average* capacity margin.
+    Small batches don't average: one slow-absorbing row is a triple-digit
+    slice of a small stage capacity, so under 16k lanes the schedule stays
+    the classic conservative single stage.  Compaction is exact, so the
+    schedule changes no bits unless a stage spills (surfaced per call).  A
+    caller who tuned the single-stage knobs away from the (16, 4) default
+    keeps their stage, extended with one 4x-shrink tail stage; a caller who
+    DISABLED compaction (shrink <= 1 or a degenerate step — the legacy
+    gate's off switches) keeps it disabled, never silently re-enabled."""
+    if compact_shrink <= 1 or compact_after <= 0:
+        return ((compact_after, compact_shrink),)      # off stays off
+    if (compact_after, compact_shrink) != (16, 4):
+        return ((compact_after, compact_shrink),
+                (compact_after * 2, compact_shrink * 4))
+    if n_lanes >= 16384:
+        return ((12, 4), (28, 16), (44, 64))
+    return ((compact_after, compact_shrink),)
+
+
+def pdgraph_walk_ranked(samples: jnp.ndarray,     # (G, U, S)
+                        counts: jnp.ndarray,      # (G, U)
+                        cum_trans: jnp.ndarray,   # (G, U, U+1)
+                        graph_idx: jnp.ndarray,   # (A,)
+                        start: jnp.ndarray,       # (A,)
+                        executed: jnp.ndarray,    # (A,)
+                        streams: jnp.ndarray,     # (A,) uint32
+                        attained: jnp.ndarray,    # (A,)
+                        ov_samples: Optional[jnp.ndarray] = None,
+                        ov_counts: Optional[jnp.ndarray] = None,
+                        *, valid: Optional[jnp.ndarray] = None,
+                        n_walkers: int = 512, max_steps: int = 64,
+                        n_buckets: int = 10,
+                        impl: Optional[str] = None,
+                        interpret: Optional[bool] = None,
+                        compact_after: int = 16, compact_shrink: int = 4,
+                        track_arrivals: bool = False,
+                        with_rank: bool = True, with_total: bool = False,
+                        po_cum: Optional[jnp.ndarray] = None,
+                        po_scale: Optional[jnp.ndarray] = None,
+                        quant: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
+    """One-pass walk → demand-histogram rows → Gittins ranks (→ arrival
+    histogram rows): the VMEM-resident refresh.
+
+    Returns a dict with keys ``probs (A, nb)``, ``edges (A, nb)``,
+    ``ranks (A,)`` (``None`` unless ``with_rank``), ``total (A, W)``
+    (``None`` unless ``with_total`` — the triage escape hatch; it
+    reintroduces the (A, W) write-back), ``spill``, and with
+    ``track_arrivals`` the arrival sufficient statistics ``a_hist
+    (A, U, nb)``, ``a_lo / a_span / a_reach (A, U)`` — bit-identical to
+    composing :func:`pdgraph_walk` with ``to_histogram_rows_jnp`` /
+    ``gittins_rank_core`` / ``refresh_pipeline._arrival_hists`` on
+    ``attained[:, None] + max(rem, 0)``.
+
+    Dispatch:
+
+    * ``impl="pallas"`` — ONE ``pallas_call`` (``pdgraph_walk_fused_kernel``)
+      carries each app-aligned walker block from transition sampling to the
+      per-app rows; the ``(A, W)`` totals and ``(A, W, U)`` arrival tensor
+      never leave VMEM (unless ``with_total``).  Single-phase by
+      construction: compaction is exact, so the resident pass returns the
+      same bits a compacted multi-phase walk would (spill pinned 0).
+    * ``impl="ref"`` — the CPU twin: the lossless quantized step tables
+      (``quant``, see ``quant.py``) where eligible (no overrides), the
+      lane-gated multi-stage compaction schedule (``walk_schedule``), then
+      the oracle composition — bit-identical to the kernel, and to the
+      ``rank_in_kernel=False`` pipeline composition.
+    """
+    requested = impl
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    A = graph_idx.shape[0]
+    G, U, S = samples.shape
+    W = n_walkers
+    N = A * W
+    attained = jnp.asarray(attained, jnp.float32)
+
+    if impl == "pallas":
+        _note_dispatch(requested, "pallas")
+        flat = (samples.reshape(G * U, S),
+                counts.reshape(G * U).astype(jnp.float32),
+                cum_trans.reshape(G * U, U + 1))
+        with_ov = ov_samples is not None
+        ovs_t = ov_samples.reshape(A * U, -1).T if with_ov \
+            else jnp.zeros((1, 1), jnp.float32)
+        ovc = ov_counts.reshape(A * U).astype(jnp.float32) if with_ov \
+            else jnp.zeros((1,), jnp.float32)
+        po_s = po_scale.reshape(A * U).astype(jnp.float32) \
+            if po_cum is not None else None
+        po_c_t = po_cum.reshape(A * U, U + 1).T \
+            if po_cum is not None else None
+        rep = lambda a, dt: jnp.repeat(jnp.asarray(a, dt), W)  # noqa: E731
+        done0 = (jnp.zeros((N,), bool) if valid is None
+                 else jnp.repeat(~jnp.asarray(valid, bool), W))
+        arr_t = (jnp.full((U, N), ARRIVAL_NEVER, jnp.float32)
+                 if track_arrivals else None)
+        total_o, probs, edges, ranks, arrstats = pdgraph_walk_fused_kernel(
+            flat[0].T, flat[1], flat[2].T, ovs_t, ovc, attained,
+            rep(start, jnp.int32), rep(graph_idx, jnp.int32),
+            jnp.repeat(jnp.arange(A, dtype=jnp.int32), W),
+            rep(streams, jnp.uint32),
+            jnp.tile(jnp.arange(W, dtype=jnp.uint32), A),
+            rep(executed, jnp.float32),
+            jnp.zeros((N,), jnp.float32), done0, arr_t, po_s, po_c_t,
+            n_steps=max_steps, lanes_per_app=W, n_buckets=n_buckets,
+            arrival_never=ARRIVAL_NEVER, with_overrides=with_ov,
+            with_rank=with_rank, with_total=with_total,
+            interpret=interpret)
+        out = {"probs": probs, "edges": edges, "ranks": ranks,
+               "total": None, "spill": jnp.zeros((), jnp.int32)}
+        if with_total:
+            rem = total_o.reshape(A, W)
+            out["total"] = attained[:, None] + jnp.maximum(rem, 0.0)
+        if track_arrivals:
+            st = arrstats.reshape(A, U, n_buckets + 3)
+            out.update(a_hist=st[..., :n_buckets], a_lo=st[..., n_buckets],
+                       a_span=st[..., n_buckets + 1],
+                       a_reach=st[..., n_buckets + 2])
+        return out
+
+    # CPU twin: quantized multi-stage walk + the oracle reduction — the
+    # rank_in_kernel pipelines call this, so the quantized step and the
+    # aggressive schedule stay gated behind the knob (the legacy
+    # composition keeps its exact cost profile as the A/B reference)
+    if quant is not None and ov_samples is not None:
+        quant = None                       # overrides change n_eff per app
+    out = pdgraph_walk(
+        samples, counts, cum_trans, graph_idx, start, executed, streams,
+        ov_samples, ov_counts, valid=valid, n_walkers=n_walkers,
+        max_steps=max_steps, impl="ref", interpret=interpret,
+        compact_schedule=walk_schedule(compact_after, compact_shrink, N),
+        track_arrivals=track_arrivals, po_cum=po_cum, po_scale=po_scale,
+        quant=quant)
+    if track_arrivals:
+        rem, arr, spill = out
+    else:
+        (rem, spill), arr = out, None
+    total = attained[:, None] + jnp.maximum(rem, 0.0)
+    res = {"total": total if with_total else None, "spill": spill,
+           "probs": None, "edges": None, "ranks": None}
+    if with_rank:
+        probs, edges = to_histogram_rows_jnp(total, n_buckets)
+        res.update(probs=probs, edges=edges,
+                   ranks=gittins_rank_core(probs, edges, attained))
+    if track_arrivals:
+        from repro.core.refresh_pipeline import _arrival_hists
+        a_hist, a_lo, a_span, a_reach = _arrival_hists(arr, n_buckets)
+        res.update(a_hist=a_hist, a_lo=a_lo, a_span=a_span, a_reach=a_reach)
+    return res
 
 
 @partial(jax.jit, static_argnames=("n_walkers", "max_steps", "impl",

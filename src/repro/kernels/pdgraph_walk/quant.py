@@ -1,0 +1,146 @@
+"""Lossless 16-bit quantized walk tables for the jnp twin.
+
+The counter RNG yields exactly 2**16 distinct values per uniform (``r = k *
+2**-16`` with ``k`` the high/low 16 bits of one ``fmix32`` hash), so every
+data-dependent lookup the walk performs from ``r`` / ``r2`` can be
+precomputed EXACTLY over all 65536 lattice points per (graph, unit) row:
+
+* ``qsv[row, k]  = fsamples[row, floor((k * 2**-16) * counts[row])]`` —
+  the demand sample the walk would gather for high-bits ``k`` (float32,
+  ``(G*U, 65536)``; ~10 MB at the benchmark KB);
+* ``icdf[row, k] = sum((k * 2**-16) > cum_trans[row, :])`` — the next-unit
+  index the walk would derive for low-bits ``k`` (uint8, ``(G*U, 65536)``).
+
+Each walk step then costs two flat gathers + elementwise ops instead of
+four gathers plus an ``(N, U+1)`` compare-reduce — measured ~1.4x on the
+walk at the 16k-app / 128-walker operating point — and stays *bit-identical*
+to ``walk_phase_ref`` because every precomputed entry is the exact value the
+reference arithmetic produces for those bits (pinned by
+``tests/test_fused_rank.py``).
+
+Eligibility: per-app sample overrides change ``n_eff`` per app, so override
+walks fall back to the plain twin.  Posterior walks stay eligible in mixed
+form: the service gather still quantizes (the posterior scale multiplies the
+same gathered sample), while transitions compare against the gathered
+per-app posterior CDF row exactly like the reference.
+
+The tables are a pure function of the packed knowledge base, so
+``quant_tables`` memoizes per KB identity (the arena paths reuse one
+``PackedKB`` for the process lifetime).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.pdgraph_walk.ref import (GOLDEN, _U16_SCALE, fmix32)
+
+_N_QUANT = 1 << 16
+
+
+@jax.jit
+def build_quant_tables(samples: jnp.ndarray,      # (G, U, S)
+                       counts: jnp.ndarray,       # (G, U)
+                       cum_trans: jnp.ndarray     # (G, U, U+1)
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute ``(qsv (G*U*65536,) float32, icdf (G*U*65536,) uint8)``."""
+    G, U, S = samples.shape
+    fsv = samples.reshape(G * U, S)
+    fcounts = counts.reshape(G * U).astype(jnp.float32)
+    fcum = cum_trans.reshape(G * U, U + 1)
+    k = jnp.arange(_N_QUANT, dtype=jnp.uint32)
+    r = k.astype(jnp.float32) * _U16_SCALE                    # exact lattice
+    si = jnp.floor(r[None, :] * fcounts[:, None]).astype(jnp.int32)
+    rows = jnp.arange(G * U, dtype=jnp.int32)[:, None]
+    qsv = fsv.reshape(-1)[rows * S + si]                      # (GU, 65536)
+    icdf = jnp.sum(r[None, :, None] > fcum[:, None, :],
+                   axis=-1).astype(jnp.uint8)
+    return qsv.reshape(-1), icdf.reshape(-1)
+
+
+# one entry per packed KB (keyed by the samples buffer identity; the arena
+# paths hold one PackedKB for the process lifetime, so this is effectively
+# a single-slot cache that also survives multi-KB tests)
+_CACHE: dict = {}
+
+
+def quant_tables(samples, counts, cum_trans):
+    """Memoized ``build_quant_tables`` keyed by KB identity (host-side;
+    call OUTSIDE jit and pass the tables in as traced operands)."""
+    key = id(samples)
+    hit = _CACHE.get(key)
+    if hit is None:
+        hit = tuple(jax.block_until_ready(a) for a in
+                    build_quant_tables(samples, counts, cum_trans))
+        # keep the keying arrays alive so ids cannot be recycled
+        _CACHE[key] = (hit, samples)
+    else:
+        hit = hit[0]
+    return hit
+
+
+def walk_phase_quant(qsv: jnp.ndarray,            # (G*U*65536,) float32
+                     icdf: jnp.ndarray,           # (G*U*65536,) uint8
+                     cur: jnp.ndarray, total: jnp.ndarray, done: jnp.ndarray,
+                     gi: jnp.ndarray, app: jnp.ndarray,
+                     stream: jnp.ndarray, lane: jnp.ndarray,
+                     executed: Optional[jnp.ndarray],
+                     *, n_units: int, step0: int, n_steps: int,
+                     lanes_per_app: int, unroll: int = 4,
+                     arrivals: Optional[jnp.ndarray] = None,
+                     fpo_cum: Optional[jnp.ndarray] = None,   # (A*U, U+1)
+                     fpo_scale: Optional[jnp.ndarray] = None):  # (A*U,)
+    """One walk phase over flat state via the quantized tables.
+
+    Bit-identical to :func:`repro.kernels.pdgraph_walk.ref.walk_phase_ref`
+    without overrides: the same ``fmix32`` bits index precomputed exact
+    lookups instead of driving the reference gathers.  Signature mirrors
+    ``walk_phase_ref`` minus the override tables (ineligible — the caller
+    falls back) and plus the static unit stride (the quantized tables don't
+    carry it).  Returns ``(cur, total, done[, arrivals])``.
+    """
+    U = n_units
+    with_po = fpo_cum is not None
+    track = arrivals is not None
+    unit_ids = jnp.arange(U, dtype=jnp.int32)
+
+    def step(carry, s):
+        cur, total, done, arr = carry
+        ctr = s.astype(jnp.uint32) * np.uint32(lanes_per_app) + lane
+        bits = fmix32(stream + ctr * GOLDEN)
+        row = gi * U + cur
+        base = row * _N_QUANT
+        svc = qsv[base + (bits >> 16).astype(jnp.int32)]
+        if with_po:
+            orow = app * U + cur
+            # max-guard mirrors walk_phase_ref: the max consumes the
+            # product so downstream ops cannot FMA-contract it
+            svc = jnp.maximum(svc * fpo_scale[orow], 0.0)
+        if executed is not None:
+            svc = jnp.where(s == 0, jnp.maximum(svc - executed, 0.0), svc)
+        total = total + jnp.where(done, 0.0, svc)
+        if with_po:
+            r2 = (bits & np.uint32(0xFFFF)).astype(jnp.float32) * _U16_SCALE
+            nxt = jnp.sum(r2[:, None] > fpo_cum[orow],
+                          axis=-1).astype(jnp.int32)
+        else:
+            nxt = icdf[base + (bits & np.uint32(0xFFFF)).astype(jnp.int32)
+                       ].astype(jnp.int32)
+        nxt = jnp.minimum(nxt, U)
+        new_done = done | (nxt >= U)
+        if track:
+            enter = (~done) & (nxt < U)
+            onehot = enter[:, None] & (nxt[:, None] == unit_ids[None, :])
+            arr = jnp.where(onehot, jnp.minimum(arr, total[:, None]), arr)
+        cur = jnp.where(new_done, cur, nxt)
+        return (cur, total, new_done, arr), None
+
+    arr0 = arrivals if track else jnp.zeros((cur.shape[0], 0), jnp.float32)
+    steps = jnp.arange(step0, step0 + n_steps, dtype=jnp.int32)
+    (cur, total, done, arr), _ = jax.lax.scan(
+        step, (cur, total, done, arr0), steps,
+        unroll=min(unroll, n_steps))
+    return (cur, total, done, arr) if track else (cur, total, done)

@@ -128,7 +128,12 @@ def walk_phase_ref(fsamples: jnp.ndarray,     # (G*U, S) float32
             svc = jnp.where(oc > 0,
                             fov[orow * So + jnp.minimum(si, So - 1)], svc)
         if with_po:
-            svc = svc * fpo_scale[orow]
+            # the max consumes the product so no downstream add/sub can
+            # FMA-contract it (contraction choices differ per compiled
+            # program and would break kernel/twin bit-identity).  Value-
+            # level identity: service samples and posterior scales are
+            # non-negative, and the compiler cannot prove it.
+            svc = jnp.maximum(svc * fpo_scale[orow], 0.0)
         if executed is not None:
             svc = jnp.where(s == 0, jnp.maximum(svc - executed, 0.0), svc)
         total = total + jnp.where(done, 0.0, svc)

@@ -16,11 +16,15 @@ Two host engines share one drain loop (``SimConfig.engine``):
   (``priorities_arrays``) scattered into a dense host rank column.  This
   is what makes 100k-concurrent-app open-arrival traces runnable.
 * ``heap`` — the seed's ``heapq`` event loop, per-app rank dicts and
-  heap waiting queues, kept verbatim as the bit-equivalence oracle and
-  benchmark baseline (``benchmarks/sim_scale.py``).
+  heap waiting queues.  **Deprecated**: constructing
+  ``SimConfig(engine="heap")`` emits a :class:`DeprecationWarning`; the
+  engine is retained one more release purely as the bit-equivalence
+  oracle for the slow-tier suite and will then be removed.  Use the
+  default ``engine="calendar"`` everywhere else.
 
 Both engines produce identical completion orders and ``SimResult`` stats
-for the same trace (pinned by ``tests/test_sim_engine.py``).
+for the same trace (pinned by the slow-tier equivalence suite in
+``tests/test_sim_engine.py``).
 
 This is the harness behind Figs. 9-15.
 """
@@ -75,8 +79,9 @@ class SimConfig:
     n_buckets: int = 10
     seed: int = 0
     # host event engine: "calendar" = the array-native calendar-queue
-    # engine (the default); "heap" = the seed's heapq loop (bit-equivalent,
-    # kept as the equivalence oracle and benchmark baseline)
+    # engine (the default and only supported engine); "heap" = the seed's
+    # heapq loop — DEPRECATED, kept one more release as the slow-tier
+    # bit-equivalence oracle (selecting it warns)
     engine: str = "calendar"
     # priority-refresh pipeline configuration: ONE validated RefreshConfig
     # (mode / walker / mesh_shards / delta_full_threshold /
@@ -121,6 +126,14 @@ class SimConfig:
         if self.engine not in ENGINES:
             raise ValueError(f"unknown sim engine {self.engine!r}; "
                              f"known: {ENGINES}")
+        if self.engine == "heap":
+            import warnings
+            warnings.warn(
+                "SimConfig(engine='heap') is deprecated and will be removed "
+                "in the next release; the array-native engine='calendar' "
+                "(the default) is the supported engine. The heap loop is "
+                "retained only as the slow-tier bit-equivalence oracle.",
+                DeprecationWarning, stacklevel=3)
         kw = {}
         if self.refresh_mode is not None:
             kw["mode"] = self.refresh_mode

@@ -9,6 +9,11 @@ engine's ``SimResult`` *exactly* (completion order, ACTs, makespan, cache
 stats) on randomized open-arrival traces, including simultaneous-event
 bursts and mid-run arena repacks.
 
+The heap engine is deprecated (``SimConfig(engine="heap")`` warns, and the
+default tier only checks that the warning fires); the full heap/calendar
+equivalence suite runs on the slow tier (``-m slow``) until the heap loop
+is removed.
+
 Also here: the RefreshConfig deprecation-shim round-trips (legacy kwargs
 warn but resolve to the identical config; mixing old and new spellings is a
 TypeError) and the ``repro.core.refresh`` facade / legacy prewarm entry
@@ -77,6 +82,7 @@ def _drive_both(rng, n_rounds=40):
     assert len(c) == 0
 
 
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(st.integers(min_value=0, max_value=10**6))
 def test_calendar_matches_heap_event_order(seed):
@@ -140,6 +146,7 @@ class _T:
         self.submitted, self.task_id, self.ai = submitted, task_id, ai
 
 
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(st.integers(min_value=0, max_value=10**6))
 def test_array_wait_queue_matches_heap(seed):
@@ -202,14 +209,36 @@ def _assert_equivalent(a, b):
     assert a.dsr == b.dsr
 
 
+def _heap_cfg(**cfg_kw):
+    """Build the deprecated-engine config without tripping ``-W error``
+    runs — the deprecation itself is pinned by
+    ``test_heap_engine_deprecated``."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return SimConfig(engine="heap", **cfg_kw)
+
+
 def _run_both(insts, **cfg_kw):
     out = []
     for eng in ("heap", "calendar"):
-        cfg = SimConfig(engine=eng, **cfg_kw)
+        cfg = (_heap_cfg(**cfg_kw) if eng == "heap"
+               else SimConfig(engine=eng, **cfg_kw))
         out.append(run_sim(_kb(), insts, cfg))
     return out
 
 
+def test_heap_engine_deprecated():
+    """engine="heap" is a one-release oracle: constructing it warns and
+    names the supported engine."""
+    with pytest.warns(DeprecationWarning, match="calendar"):
+        cfg = SimConfig(engine="heap")
+    assert cfg.engine == "heap"          # still constructs (oracle tier)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        SimConfig()                      # the default engine never warns
+
+
+@pytest.mark.slow
 @settings(max_examples=4, deadline=None)
 @given(st.integers(min_value=0, max_value=10**4),
        st.sampled_from(["gittins", "fcfs_app", "vtc", "hermes_ddl",
@@ -227,6 +256,7 @@ def test_engines_bit_equivalent_on_open_arrivals(seed, policy):
     _assert_equivalent(a, b)
 
 
+@pytest.mark.slow
 def test_engines_bit_equivalent_on_simultaneous_bursts():
     """Arrivals quantized to whole seconds: large same-timestamp
     micro-batches (batch admission + shared drain helper) stay equivalent."""
@@ -239,14 +269,17 @@ def test_engines_bit_equivalent_on_simultaneous_bursts():
     _assert_equivalent(a, b)
 
 
+@pytest.mark.slow
 def test_engines_bit_equivalent_across_midrun_repack():
     """A trace long enough that the slot arena shrink-repacks mid-run
     (slot renumbering + device-row remap) on the fused_delta path."""
     insts = make_workload(150, 4.0, seed=9, t_in=T_IN, t_out=T_OUT)
     sims = []
     for eng in ("heap", "calendar"):
-        sim = ClusterSim(_kb(), SimConfig(engine=eng, mc_walkers=16, seed=2,
-                                          n_llm_slots=8))
+        cfg_kw = dict(mc_walkers=16, seed=2, n_llm_slots=8)
+        cfg = (_heap_cfg(**cfg_kw) if eng == "heap"
+               else SimConfig(engine=eng, **cfg_kw))
+        sim = ClusterSim(_kb(), cfg)
         sims.append((sim, sim.run(insts)))
     (sa, a), (sb, b) = sims
     assert sa.sched._qstate.repack_epoch >= 1    # the repack actually fired
@@ -254,6 +287,7 @@ def test_engines_bit_equivalent_across_midrun_repack():
     _assert_equivalent(a, b)
 
 
+@pytest.mark.slow
 def test_engines_bit_equivalent_with_posterior_on_drift_trace():
     """Seeded drift trace with online posterior learning ON: both engines
     drain identical micro-batches, so they fold identical observation
@@ -266,9 +300,11 @@ def test_engines_bit_equivalent_with_posterior_on_drift_trace():
     assert any(i.app_id.startswith("drift") for i in insts)
     sims = []
     for eng in ("heap", "calendar"):
-        sim = ClusterSim(_kb(), SimConfig(engine=eng, mc_walkers=16, seed=2,
-                                          n_llm_slots=4,
-                                          posterior=PosteriorConfig()))
+        cfg_kw = dict(mc_walkers=16, seed=2, n_llm_slots=4,
+                      posterior=PosteriorConfig())
+        cfg = (_heap_cfg(**cfg_kw) if eng == "heap"
+               else SimConfig(engine=eng, **cfg_kw))
+        sim = ClusterSim(_kb(), cfg)
         sims.append((sim, sim.run(list(insts))))
     (sa, a), (sb, b) = sims
     _assert_equivalent(a, b)
